@@ -1,0 +1,207 @@
+"""Benchmark driver — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--small|--large] [--only NAME]
+
+Default sizes finish in minutes on this CPU container; --large matches the
+paper-scale synthetic graphs (tens of minutes).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+  table3_*   — view creation time (paper Table III)
+  table4/6_* — per-query speedups (paper Tables IV/VI, Figs 13-16)
+  table5/7_* — whole-workload speedups (paper Tables V/VII)
+  fig19_*    — maintenance scaling, 10^0..10^3 deleted edges (paper Fig. 19)
+  fig17_*    — DBHit/Rows profiling with vs without views (paper Figs 17-18)
+  roofline_* — dry-run roofline table (results/dryrun_all.json, if present)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_workloads(small: bool) -> None:
+    from benchmarks.workload_driver import run_workload
+    from repro.configs.mv4pg import WORKLOADS
+    from repro.data.synthetic import finbench_like, snb_like
+
+    scale = {"small": 0.25, "default": 0.4, "large": 1.0}[
+        small if isinstance(small, str) else ("small" if small else "default")]
+    datasets = {
+        "snb": snb_like(seed=0, n_person=int(2000 * scale),
+                        n_post=int(1500 * scale),
+                        n_comment=int(12000 * scale),
+                        n_place=60, n_tag=300),
+        "finbench": finbench_like(seed=0, n_account=int(4000 * scale),
+                                  n_person=int(1500 * scale),
+                                  n_company=int(500 * scale),
+                                  n_loan=int(800 * scale)),
+    }
+    for name, (g, schema, _) in datasets.items():
+        rep = run_workload(g, schema, WORKLOADS[name],
+                           repeats=2 if small else 3)
+        for vname, secs in rep.view_creation_s.items():
+            _row(f"table3_view_creation_{name}_{vname}", secs * 1e6,
+                 f"seconds={secs:.3f}")
+        tbl = "table4" if name == "snb" else "table6"
+        for q in rep.queries:
+            _row(f"{tbl}_{name}_{q.name}", q.opt_s * 1e6,
+                 f"speedup={q.speedup:.2f};ori_us={q.ori_s*1e6:.1f};"
+                 f"rewrite_us={q.rewrite_s*1e6:.1f};"
+                 f"results={q.n_results_opt}")
+        tbl = "table5" if name == "snb" else "table7"
+        _row(f"{tbl}_{name}_workload", rep.w_opt * 1e6,
+             f"W_ori/W_opt={rep.workload_speedup:.2f};"
+             f"W_ori/(MV+W_opt)={rep.workload_speedup_with_mv:.2f}")
+
+
+def bench_maintenance_scaling(small: bool) -> None:
+    """Fig. 19: maintenance speedup vs number of deleted edges."""
+    from repro.configs.mv4pg import WORKLOADS
+    from repro.core import GraphSession
+    from repro.core import graph as G
+    from repro.data.synthetic import snb_like
+
+    n_comment = {"small": 3000, "default": 4000, "large": 8000}[
+        small if isinstance(small, str) else ("small" if small else "default")]
+    g, schema, _ = snb_like(seed=1, n_person=500, n_post=400,
+                            n_comment=n_comment)
+    sess = GraphSession(g, schema)
+    sess.create_view(WORKLOADS["snb"].views[0])   # ROOT_POST (unbounded)
+    rng = np.random.default_rng(0)
+    lid = schema.edge_labels.id_of("replyOf")
+    alive = np.flatnonzero(np.asarray(sess.g.edge_alive)
+                           & (np.asarray(sess.g.edge_label) == lid))
+    rng.shuffle(alive)
+    powers = [1, 10, 100] if small == "small" or small is True \
+        else [1, 10, 100, 1000]
+    start = 0
+    for n in powers:
+        batch = alive[start:start + n]
+        start += n
+        t0 = time.perf_counter()
+        for eid in batch:
+            sess.delete_edge(int(eid))
+        t_with = time.perf_counter() - t0
+        assert sess.check_consistency("ROOT_POST")
+        # plain deletion cost (no views) on a fresh copy of the graph
+        g2, _, _ = snb_like(seed=1, n_person=500, n_post=400,
+                            n_comment=n_comment)
+        import jax
+        t0 = time.perf_counter()
+        for eid in batch:
+            g2 = G.delete_edge(g2, int(eid))
+        jax.block_until_ready(g2.edge_alive)
+        t_without = time.perf_counter() - t0
+        _row(f"fig19_delete_{n}_edges", t_with / max(n, 1) * 1e6,
+             f"speedup={t_without/max(t_with,1e-12):.3f};"
+             f"with_s={t_with:.3f};without_s={t_without:.3f}")
+
+
+def bench_profile(small: bool) -> None:
+    """Figs 17-18: DBHit/Rows with and without the view for one query."""
+    from repro.configs.mv4pg import WORKLOADS
+    from repro.core import GraphSession
+    from repro.data.synthetic import snb_like
+
+    g, schema, _ = snb_like(seed=0, n_person=500, n_post=400,
+                            n_comment=3000 if small else 5000)
+    sess = GraphSession(g, schema)
+    q = "MATCH (c:Comment)-[:replyOf*..]->(p:Post)-[:hasTag]->(t:Tag) RETURN c, t"
+    r_ori = sess.query(q, use_views=False)
+    sess.create_view(WORKLOADS["snb"].views[0])
+    r_opt = sess.query(q, use_views=True)
+    _row("fig17_dbhit_ori", r_ori.metrics.db_hits,
+         f"rows={r_ori.metrics.rows}")
+    _row("fig17_dbhit_opt", r_opt.metrics.db_hits,
+         f"rows={r_opt.metrics.rows};"
+         f"dbhit_ratio={r_ori.metrics.db_hits/max(r_opt.metrics.db_hits,1):.1f}")
+
+
+def bench_kernels(small: bool) -> None:
+    """Microbenchmarks of the Pallas kernels vs their jnp oracles
+    (interpret mode on CPU: correctness-path timing, not TPU perf)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    S = 256 if small else 384
+    F = jnp.asarray(rng.random((S, S)), jnp.float32)
+    A = jnp.asarray((rng.random((S, S)) < 0.1).astype(np.float32))
+
+    def timeit(fn, n=3):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / n
+
+    t_ref = timeit(lambda: ref.block_spmm_ref(F, A, semiring="bool"))
+    t_k = timeit(lambda: ops.block_spmm(F, A, counting=False))
+    _row("kernel_block_spmm_interp", t_k * 1e6, f"ref_us={t_ref*1e6:.1f}")
+
+    q = jnp.asarray(rng.standard_normal((1, 4, S, 64)), jnp.float32)
+    t_ref = timeit(lambda: ref.mha_ref(q, q, q, causal=True))
+    t_k = timeit(lambda: ops.flash_attention(q, q, q, causal=True))
+    _row("kernel_flash_attention_interp", t_k * 1e6, f"ref_us={t_ref*1e6:.1f}")
+
+
+def bench_roofline(small: bool) -> None:
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun_final.json")
+    if not os.path.exists(path):
+        _row("roofline_table_missing", 0.0, "run repro.launch.dryrun --all")
+        return
+    with open(path) as f:
+        rows = json.load(f)
+    for r in rows:
+        if r.get("status") != "ok":
+            _row(f"roofline_{r['arch']}_{r['shape']}_mp{int(r['multi_pod'])}",
+                 0.0, f"FAIL:{str(r.get('error','?'))[:60]}")
+            continue
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        _row(f"roofline_{r['arch']}_{r['shape']}_mp{int(r['multi_pod'])}",
+             bound * 1e6,
+             f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+             f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+             f"collective_s={r['collective_s']:.3e}")
+
+
+BENCHES = {
+    "workloads": bench_workloads,
+    "maintenance": bench_maintenance_scaling,
+    "profile": bench_profile,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--large", action="store_true",
+                    help="paper-scale synthetic graphs")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    mode = "small" if args.small else ("large" if args.large else "default")
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        fn(mode if name in ("workloads", "maintenance") else args.small)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Continuous-batching serving example.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "gemma-2b", "--requests", "6",
+                "--slots", "3", "--max-new", "8"]
+    main()

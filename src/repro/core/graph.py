@@ -1,0 +1,273 @@
+"""Device-array property-graph store.
+
+The paper's substrate is a graph DBMS (TuGraph / Neo4j).  Our TPU-native
+equivalent is a fixed-capacity *arena* of device arrays with alive masks:
+
+* node arrays:  ``label``, ``key`` (the primary-key property the paper's
+  templates reference as ``$K:$V``), ``alive``
+* edge arrays:  ``src``, ``dst``, ``label``, ``alive`` (COO)
+
+All query-time filtering is mask algebra, so every step is shape-stable and
+``jit``-compatible.  Mutation (create/delete node/edge) is a functional
+``.at[]`` update into free slots; slot bookkeeping lives host-side in
+:class:`GraphBuilder` / the mutation helpers below.  Capacities are rounded to
+multiples of 128 to keep tiles MXU-aligned on the TPU target.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schema import GraphSchema, NO_LABEL
+from repro.utils import round_up
+
+DEAD = -1  # label value for dead slots
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PropertyGraph:
+    """A property graph as a pytree of device arrays (fixed capacity)."""
+
+    node_label: jax.Array   # int32 [N_cap]
+    node_key: jax.Array     # int32 [N_cap]
+    node_alive: jax.Array   # bool  [N_cap]
+    edge_src: jax.Array     # int32 [E_cap]
+    edge_dst: jax.Array     # int32 [E_cap]
+    edge_label: jax.Array   # int32 [E_cap]
+    edge_alive: jax.Array   # bool  [E_cap]
+    edge_weight: jax.Array  # int32 [E_cap]; base edges 1, view edges = path count
+
+    @property
+    def node_cap(self) -> int:
+        return self.node_label.shape[0]
+
+    @property
+    def edge_cap(self) -> int:
+        return self.edge_src.shape[0]
+
+    def num_nodes(self) -> jax.Array:
+        return jnp.sum(self.node_alive.astype(jnp.int32))
+
+    def num_edges(self) -> jax.Array:
+        return jnp.sum(self.edge_alive.astype(jnp.int32))
+
+    # ------------------------------------------------------------------ masks
+
+    def node_mask(self, label_id: int, key: int | None = None) -> jax.Array:
+        """bool [N_cap]: alive nodes matching ``label_id`` (wildcard NO_LABEL)."""
+        m = self.node_alive
+        if label_id != NO_LABEL:
+            m = m & (self.node_label == label_id)
+        if key is not None:
+            m = m & (self.node_key == key)
+        return m
+
+    def edge_mask(self, label_id: int) -> jax.Array:
+        m = self.edge_alive
+        if label_id != NO_LABEL:
+            m = m & (self.edge_label == label_id)
+        return m
+
+    def out_degree(self, label_id: int = NO_LABEL) -> jax.Array:
+        """int32 [N_cap]: out-degree restricted to edges of ``label_id``."""
+        m = self.edge_mask(label_id).astype(jnp.int32)
+        return jnp.zeros(self.node_cap, jnp.int32).at[self.edge_src].add(m)
+
+    def in_degree(self, label_id: int = NO_LABEL) -> jax.Array:
+        m = self.edge_mask(label_id).astype(jnp.int32)
+        return jnp.zeros(self.node_cap, jnp.int32).at[self.edge_dst].add(m)
+
+
+# ---------------------------------------------------------------------------
+# Pure functional mutation (the write path the paper's maintenance hooks into)
+# ---------------------------------------------------------------------------
+
+def delete_node(g: PropertyGraph, node_id) -> PropertyGraph:
+    """Delete a node and every incident edge (paper §IV-B 'Delete a node')."""
+    node_id = jnp.asarray(node_id, jnp.int32)
+    node_alive = g.node_alive.at[node_id].set(False)
+    incident = (g.edge_src == node_id) | (g.edge_dst == node_id)
+    edge_alive = g.edge_alive & ~incident
+    return replace(g, node_alive=node_alive, edge_alive=edge_alive)
+
+
+def delete_edge(g: PropertyGraph, edge_id) -> PropertyGraph:
+    edge_id = jnp.asarray(edge_id, jnp.int32)
+    return replace(g, edge_alive=g.edge_alive.at[edge_id].set(False))
+
+
+def delete_edges(g: PropertyGraph, edge_ids) -> PropertyGraph:
+    edge_ids = jnp.asarray(edge_ids, jnp.int32)
+    return replace(g, edge_alive=g.edge_alive.at[edge_ids].set(False))
+
+
+def create_edge(g: PropertyGraph, slot, src, dst, label_id, weight=1) -> PropertyGraph:
+    """Write an edge into a free slot (host finds the slot; see free_edge_slots)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return replace(
+        g,
+        edge_src=g.edge_src.at[slot].set(jnp.asarray(src, jnp.int32)),
+        edge_dst=g.edge_dst.at[slot].set(jnp.asarray(dst, jnp.int32)),
+        edge_label=g.edge_label.at[slot].set(jnp.asarray(label_id, jnp.int32)),
+        edge_alive=g.edge_alive.at[slot].set(True),
+        edge_weight=g.edge_weight.at[slot].set(jnp.asarray(weight, jnp.int32)),
+    )
+
+
+def create_edges(g: PropertyGraph, slots, src, dst, label_id, weight) -> PropertyGraph:
+    """Vectorized multi-edge write (used by view materialization)."""
+    slots = jnp.asarray(slots, jnp.int32)
+    return replace(
+        g,
+        edge_src=g.edge_src.at[slots].set(jnp.asarray(src, jnp.int32)),
+        edge_dst=g.edge_dst.at[slots].set(jnp.asarray(dst, jnp.int32)),
+        edge_label=g.edge_label.at[slots].set(jnp.int32(label_id)),
+        edge_alive=g.edge_alive.at[slots].set(True),
+        edge_weight=g.edge_weight.at[slots].set(jnp.asarray(weight, jnp.int32)),
+    )
+
+
+def add_edge_weight(g: PropertyGraph, slots, delta) -> PropertyGraph:
+    """Adjust view-edge multiplicities; weight<=0 kills the edge."""
+    slots = jnp.asarray(slots, jnp.int32)
+    w = g.edge_weight.at[slots].add(jnp.asarray(delta, jnp.int32))
+    alive = g.edge_alive & (w > 0)
+    return replace(g, edge_weight=w, edge_alive=alive)
+
+
+def create_node(g: PropertyGraph, slot, label_id, key) -> PropertyGraph:
+    slot = jnp.asarray(slot, jnp.int32)
+    return replace(
+        g,
+        node_label=g.node_label.at[slot].set(jnp.asarray(label_id, jnp.int32)),
+        node_key=g.node_key.at[slot].set(jnp.asarray(key, jnp.int32)),
+        node_alive=g.node_alive.at[slot].set(True),
+    )
+
+
+def free_edge_slots(g: PropertyGraph, n: int) -> np.ndarray:
+    """Host helper: indices of ``n`` free edge slots (raises if arena is full)."""
+    free = np.flatnonzero(~np.asarray(g.edge_alive))
+    if free.shape[0] < n:
+        raise RuntimeError(
+            f"edge arena full: need {n} slots, have {free.shape[0]} "
+            f"(cap={g.edge_cap}); grow the arena"
+        )
+    return free[:n]
+
+
+def free_node_slots(g: PropertyGraph, n: int) -> np.ndarray:
+    free = np.flatnonzero(~np.asarray(g.node_alive))
+    if free.shape[0] < n:
+        raise RuntimeError(f"node arena full: need {n}, have {free.shape[0]}")
+    return free[:n]
+
+
+def grow_edge_arena(g: PropertyGraph, new_cap: int) -> PropertyGraph:
+    """Host-side amortized reallocation (the arena analogue of B-tree splits)."""
+    new_cap = round_up(max(new_cap, g.edge_cap), 128)
+    pad = new_cap - g.edge_cap
+    if pad == 0:
+        return g
+    zi = jnp.zeros(pad, jnp.int32)
+    return replace(
+        g,
+        edge_src=jnp.concatenate([g.edge_src, zi]),
+        edge_dst=jnp.concatenate([g.edge_dst, zi]),
+        edge_label=jnp.concatenate([g.edge_label, jnp.full(pad, DEAD, jnp.int32)]),
+        edge_alive=jnp.concatenate([g.edge_alive, jnp.zeros(pad, bool)]),
+        edge_weight=jnp.concatenate([g.edge_weight, jnp.ones(pad, jnp.int32)]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side builder
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GraphBuilder:
+    """Accumulates nodes/edges host-side (numpy), then finalizes to device."""
+
+    schema: GraphSchema
+
+    def __post_init__(self):
+        self._nlabel: list[int] = []
+        self._nkey: list[int] = []
+        self._esrc: list[int] = []
+        self._edst: list[int] = []
+        self._elabel: list[int] = []
+
+    def add_node(self, label: str, key: int | None = None) -> int:
+        nid = len(self._nlabel)
+        self._nlabel.append(self.schema.node_labels.intern(label))
+        self._nkey.append(nid if key is None else int(key))
+        return nid
+
+    def add_edge(self, src: int, dst: int, label: str) -> int:
+        eid = len(self._esrc)
+        self._esrc.append(int(src))
+        self._edst.append(int(dst))
+        self._elabel.append(self.schema.edge_labels.intern(label))
+        return eid
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self._nlabel)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self._esrc)
+
+    def finalize(
+        self,
+        node_cap: int | None = None,
+        edge_cap: int | None = None,
+        slack: float = 1.5,
+    ) -> PropertyGraph:
+        n = len(self._nlabel)
+        e = len(self._esrc)
+        node_cap = round_up(node_cap or max(int(n * slack), n + 128), 128)
+        edge_cap = round_up(edge_cap or max(int(e * slack), e + 128), 128)
+        if node_cap < n or edge_cap < e:
+            raise ValueError("capacity smaller than contents")
+
+        def pad_i32(vals, cap, fill):
+            a = np.full(cap, fill, np.int32)
+            a[: len(vals)] = np.asarray(vals, np.int32)
+            return jnp.asarray(a)
+
+        def mask(nlive, cap):
+            a = np.zeros(cap, bool)
+            a[:nlive] = True
+            return jnp.asarray(a)
+
+        return PropertyGraph(
+            node_label=pad_i32(self._nlabel, node_cap, DEAD),
+            node_key=pad_i32(self._nkey, node_cap, DEAD),
+            node_alive=mask(n, node_cap),
+            edge_src=pad_i32(self._esrc, edge_cap, 0),
+            edge_dst=pad_i32(self._edst, edge_cap, 0),
+            edge_label=pad_i32(self._elabel, edge_cap, DEAD),
+            edge_alive=mask(e, edge_cap),
+            edge_weight=jnp.asarray(np.ones(edge_cap, np.int32)),
+        )
+
+
+def find_node(g: PropertyGraph, label_id: int, key: int) -> int:
+    """Host helper: node id with (label, key) — the paper's ``$L{$K:$V}`` lookup."""
+    m = np.asarray(g.node_mask(label_id, key))
+    idx = np.flatnonzero(m)
+    if idx.shape[0] == 0:
+        raise KeyError(f"no node with label={label_id} key={key}")
+    return int(idx[0])
+
+
+def edges_of(g: PropertyGraph) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host view of alive edges: (eids, src, dst)."""
+    alive = np.flatnonzero(np.asarray(g.edge_alive))
+    return alive, np.asarray(g.edge_src)[alive], np.asarray(g.edge_dst)[alive]

@@ -1,0 +1,399 @@
+"""Templated view maintenance — the paper's central contribution (§IV-B).
+
+At view-creation time we pre-generate *maintenance templates* exactly per
+Algorithms 1 and 2: for every position a deleted node / created / deleted edge
+can occupy in the view's match path — explicit positions and positions *inside*
+a variable-length edge (enumerated by split distance ``i``) — we emit one
+template.  A template is a (prefix, suffix) pair of path patterns around the
+update site Δ; instantiating a template substitutes Δ's identity (the paper's
+``$L/$K/$V`` / ``$RID`` parameters become runtime arguments of pre-staged,
+jit-compiled delta programs).
+
+Delta semantics (documented in DESIGN.md §2; exact, fixing the paper's
+acknowledged duplicate-instance issue):
+
+* **create edge** (counting views): the template splits are precisely the
+  telescoping identity ``A_new^k − A_old^k = Σ_i A_new^i·E·A_old^{k−1−i}`` —
+  prefix sides evaluate on the *new* graph, suffix sides on the *old* graph,
+  so every new path instance is counted exactly once.
+* **delete edge** (counting views): same telescoping with prefix on *old*,
+  suffix on *new*; weights decrement, zero-weight view edges die.
+* **delete node / any delete on set-semantics (unbounded) views**: the
+  templates delimit the *affected sources* (backward reach from Δ through the
+  template prefixes); the view rows of affected sources are re-derived on the
+  updated graph.  Cost is O(affected region) — the paper's O(N).
+* **create node**: no-op (paper §IV-B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.executor import ExecConfig, Metrics, PathExecutor
+from repro.core.graph import PropertyGraph
+from repro.core.pattern import Direction, NodePat, PathPattern, RelPat, ViewDef
+from repro.core.schema import GraphSchema, NO_LABEL
+from repro.utils import INF_HOPS
+
+
+# ---------------------------------------------------------------------------
+# Template IR
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Split:
+    """Hop-range split of a variable-length edge around the update site."""
+
+    prefix_hops: Tuple[int, int]   # (lo, hi) between segment start and Δ
+    suffix_hops: Tuple[int, int]   # (lo, hi) between Δ and segment end
+
+
+@dataclass(frozen=True)
+class MaintTemplate:
+    """One maintenance statement template.
+
+    ``kind``: 'node' (Algorithm 1) or 'edge' (Algorithm 2).
+    ``position``: index of the explicit node/rel in the match path, or the
+    index of the variable-length rel the split refers to.
+    ``split``: None for explicit positions.
+    ``prefix``: path from the view's start node *to* Δ (run reversed from Δ).
+    ``suffix``: path from Δ to the view's end node.
+    ``node_label``/``rel_label``: compile-time label constraints that the
+    runtime Δ must satisfy for the statement to produce matches.
+    """
+
+    kind: str
+    view_name: str
+    position: int
+    split: Optional[Split]
+    prefix: PathPattern
+    suffix: PathPattern
+    node_label: Optional[str] = None
+    node_key_required: bool = False
+    rel_label: Optional[str] = None
+
+    def pretty(self) -> str:
+        """Render as the paper's Cypher-ish template text (Listings 2-3)."""
+        hole = "(:$L{$K:$V})" if self.kind == "node" else \
+               "(:$SL{$SK:$SV})-[@R]->(:$DL{$DK:$DV})"
+        pre = self.prefix.pretty()
+        suf = self.suffix.pretty()
+        # prefix ends at Δ and suffix starts at Δ; drop the duplicated hole node
+        return f"MATCH {pre[: pre.rfind('(')]}{hole}{suf[suf.find(')') + 1:]}"
+
+
+def _subpath(path: PathPattern, node_lo: int, node_hi: int) -> PathPattern:
+    """Nodes node_lo..node_hi inclusive with the rels between them."""
+    return PathPattern(nodes=path.nodes[node_lo:node_hi + 1],
+                       rels=path.rels[node_lo:node_hi])
+
+
+_HOLE = NodePat(var="__delta__")  # unconstrained placeholder node for Δ
+
+
+def _with_range(rel: RelPat, lo: int, hi: int) -> RelPat:
+    return replace(rel, min_hops=lo, max_hops=hi, var=None)
+
+
+def _append_rel(path: PathPattern, rel: RelPat, node: NodePat) -> PathPattern:
+    return PathPattern(nodes=path.nodes + (node,), rels=path.rels + (rel,))
+
+
+def _prepend_rel(node: NodePat, rel: RelPat, path: PathPattern) -> PathPattern:
+    return PathPattern(nodes=(node,) + path.nodes, rels=(rel,) + path.rels)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: templates for deleting a node
+# ---------------------------------------------------------------------------
+
+def node_delete_templates(vdef: ViewDef) -> List[MaintTemplate]:
+    path = vdef.match
+    out: List[MaintTemplate] = []
+    # lines 4-6: explicit node positions
+    for j, node in enumerate(path.nodes):
+        out.append(MaintTemplate(
+            kind="node", view_name=vdef.name, position=j, split=None,
+            prefix=_subpath(path, 0, j),
+            suffix=_subpath(path, j, len(path.nodes) - 1),
+            node_label=node.label,
+            node_key_required=node.key is not None,
+        ))
+    # lines 7-26: positions inside variable-length edges
+    for t, rel in enumerate(path.rels):
+        if not rel.is_varlen:
+            continue
+        n, m = rel.min_hops, rel.max_hops
+        pre_base = _subpath(path, 0, t)          # ends at rel's left node
+        suf_base = _subpath(path, t + 1, len(path.nodes) - 1)
+        splits: List[Split] = []
+        if m == INF_HOPS:
+            top = max(n - 1, 1)
+            for i in range(1, top + 1):
+                if i < top:
+                    splits.append(Split((i, i), (n - i, INF_HOPS)))
+                else:
+                    splits.append(Split((i, INF_HOPS), (1, INF_HOPS)))
+        else:
+            for i in range(1, m):
+                splits.append(Split((i, i), (max(n - i, 1), m - i)))
+        for s in splits:
+            out.append(MaintTemplate(
+                kind="node", view_name=vdef.name, position=t, split=s,
+                prefix=_append_rel(pre_base, _with_range(rel, *s.prefix_hops), _HOLE),
+                suffix=_prepend_rel(_HOLE, _with_range(rel, *s.suffix_hops), suf_base),
+                node_label=None,  # interior vlen nodes are unconstrained
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: templates for creating or deleting an edge
+# ---------------------------------------------------------------------------
+
+def edge_templates(vdef: ViewDef) -> List[MaintTemplate]:
+    path = vdef.match
+    out: List[MaintTemplate] = []
+    # lines 4-6: explicit fixed-length edges
+    for t, rel in enumerate(path.rels):
+        if rel.is_varlen:
+            continue
+        out.append(MaintTemplate(
+            kind="edge", view_name=vdef.name, position=t, split=None,
+            prefix=_subpath(path, 0, t),
+            suffix=_subpath(path, t + 1, len(path.nodes) - 1),
+            rel_label=rel.label,
+        ))
+    # lines 7-26: inside variable-length edges
+    for t, rel in enumerate(path.rels):
+        if not rel.is_varlen:
+            continue
+        n, m = rel.min_hops, rel.max_hops
+        pre_base = _subpath(path, 0, t)
+        suf_base = _subpath(path, t + 1, len(path.nodes) - 1)
+        splits: List[Split] = []
+        if m == INF_HOPS:
+            top = max(n - 1, 0)
+            for i in range(0, top + 1):
+                if i < top:
+                    splits.append(Split((i, i), (n - 1 - i, INF_HOPS)))
+                else:
+                    splits.append(Split((i, INF_HOPS), (0, INF_HOPS)))
+        else:
+            for i in range(0, m):
+                splits.append(Split((i, i), (max(n - 1 - i, 0), m - 1 - i)))
+        for s in splits:
+            out.append(MaintTemplate(
+                kind="edge", view_name=vdef.name, position=t, split=s,
+                prefix=_append_rel(pre_base, _with_range(rel, *s.prefix_hops), _HOLE),
+                suffix=_prepend_rel(_HOLE, _with_range(rel, *s.suffix_hops), suf_base),
+                rel_label=rel.label,
+            ))
+    return out
+
+
+@dataclass
+class ViewTemplates:
+    """The paper's M_VMT entry for one view (Figure 6)."""
+
+    node_delete: List[MaintTemplate]
+    edge: List[MaintTemplate]          # shared by create/delete (isCreate flag)
+
+    @staticmethod
+    def generate(vdef: ViewDef) -> "ViewTemplates":
+        return ViewTemplates(node_delete=node_delete_templates(vdef),
+                             edge=edge_templates(vdef))
+
+
+# ---------------------------------------------------------------------------
+# Runtime delta evaluation
+# ---------------------------------------------------------------------------
+
+def _delta_exec(g: PropertyGraph, schema: GraphSchema, cfg: ExecConfig
+                ) -> PathExecutor:
+    small = ExecConfig(backend="segment", src_block=8,
+                       max_closure_iters=cfg.max_closure_iters,
+                       collect_metrics=False)
+    return PathExecutor(g, schema, small)
+
+
+def _run_from(ex: PathExecutor, path: PathPattern, start_ids: Sequence[int],
+              counting: bool, metrics: Metrics) -> np.ndarray:
+    """Run ``path`` from explicit start ids; returns [len(ids), N] counts."""
+    res = ex.run_path(path, counting=counting,
+                      sources=np.asarray(start_ids, np.int32))
+    metrics += res.metrics
+    return res.reach
+
+
+def template_prefix_row(ex: PathExecutor, tpl: MaintTemplate, delta_id: int,
+                        counting: bool, metrics: Metrics) -> np.ndarray:
+    """counts/bool over sources s: paths s -> Δ matching the template prefix.
+
+    The prefix runs *reversed* from Δ (single-source) — this is how template
+    instantiation stays O(delta).
+    """
+    rev = tpl.prefix.reversed()
+    return _run_from(ex, rev, [delta_id], counting, metrics)[0]
+
+
+def template_suffix_row(ex: PathExecutor, tpl: MaintTemplate, delta_id: int,
+                        counting: bool, metrics: Metrics) -> np.ndarray:
+    """counts/bool over dests d: paths Δ -> d matching the template suffix."""
+    return _run_from(ex, tpl.suffix, [delta_id], counting, metrics)[0]
+
+
+def _endpoint_ok(g: PropertyGraph, schema: GraphSchema, node: NodePat,
+                 node_id: int) -> bool:
+    lid = schema.node_label_id(node.label)
+    if lid != NO_LABEL and int(g.node_label[node_id]) != lid:
+        return False
+    if node.key is not None and int(g.node_key[node_id]) != node.key:
+        return False
+    return True
+
+
+@dataclass
+class DeltaPairs:
+    """Sparse (src, dst, count) delta produced by template instantiation."""
+
+    src: np.ndarray
+    dst: np.ndarray
+    count: np.ndarray
+
+    @staticmethod
+    def empty() -> "DeltaPairs":
+        z = np.zeros(0, np.int32)
+        return DeltaPairs(z, z, z)
+
+    @staticmethod
+    def from_outer(pre_row: np.ndarray, suf_row: np.ndarray,
+                   counting: bool) -> "DeltaPairs":
+        s_ids = np.flatnonzero(pre_row).astype(np.int32)
+        d_ids = np.flatnonzero(suf_row).astype(np.int32)
+        if s_ids.size == 0 or d_ids.size == 0:
+            return DeltaPairs.empty()
+        ss, dd = np.meshgrid(s_ids, d_ids, indexing="ij")
+        if counting:
+            cc = np.outer(pre_row[s_ids], suf_row[d_ids]).astype(np.int64)
+        else:
+            cc = np.ones(ss.shape, np.int64)
+        return DeltaPairs(ss.ravel(), dd.ravel(), cc.ravel())
+
+    def merged(self) -> "DeltaPairs":
+        if self.src.size == 0:
+            return self
+        key = self.src.astype(np.int64) << 32 | self.dst.astype(np.int64)
+        uk, inv = np.unique(key, return_inverse=True)
+        cnt = np.zeros(uk.shape[0], np.int64)
+        np.add.at(cnt, inv, self.count)
+        return DeltaPairs((uk >> 32).astype(np.int32),
+                          (uk & 0xFFFFFFFF).astype(np.int32), cnt)
+
+    def concat(self, other: "DeltaPairs") -> "DeltaPairs":
+        return DeltaPairs(np.concatenate([self.src, other.src]),
+                          np.concatenate([self.dst, other.dst]),
+                          np.concatenate([self.count, other.count]))
+
+
+def edge_delta_pairs(
+    templates: ViewTemplates,
+    vdef: ViewDef,
+    g_prefix: PropertyGraph,
+    g_suffix: PropertyGraph,
+    schema: GraphSchema,
+    cfg: ExecConfig,
+    edge_src: int,
+    edge_dst: int,
+    edge_label: str,
+    counting: bool,
+    metrics: Metrics,
+    ex_pre: PathExecutor | None = None,
+    ex_suf: PathExecutor | None = None,
+) -> DeltaPairs:
+    """Exact path-count delta for one created/deleted edge.
+
+    ``g_prefix``/``g_suffix`` select the telescoping sides:
+      create: (new, old);  delete: (old, new).
+    For set semantics both sides are the new graph (create) — delete is
+    handled by affected-recompute instead (see views.py).
+    """
+    ex_pre = ex_pre or _delta_exec(g_prefix, schema, cfg)
+    ex_suf = ex_suf or _delta_exec(g_suffix, schema, cfg)
+    acc = DeltaPairs.empty()
+    for tpl in templates.edge:
+        if tpl.rel_label is not None and tpl.rel_label != edge_label:
+            continue
+        rel = vdef.match.rels[tpl.position]
+        # orient Δ's endpoints to the path direction of the matched rel;
+        # undirected rels match the edge in either orientation
+        if rel.direction is Direction.IN:
+            orientations = [(edge_dst, edge_src)]
+        elif rel.direction is Direction.OUT:
+            orientations = [(edge_src, edge_dst)]
+        else:
+            orientations = [(edge_src, edge_dst), (edge_dst, edge_src)]
+        for u, v in orientations:
+            if tpl.split is None:
+                # explicit edge: endpoints must satisfy adjacent node patterns
+                if not _endpoint_ok(g_prefix, schema,
+                                    vdef.match.nodes[tpl.position], u):
+                    continue
+                if not _endpoint_ok(g_suffix, schema,
+                                    vdef.match.nodes[tpl.position + 1], v):
+                    continue
+            pre = _run_from(ex_pre, _subpath_rev(tpl.prefix), [u], counting,
+                            metrics)[0]
+            suf = _run_from(ex_suf, tpl.suffix, [v], counting, metrics)[0]
+            acc = acc.concat(DeltaPairs.from_outer(pre, suf, counting))
+    return acc.merged()
+
+
+def _subpath_rev(path: PathPattern) -> PathPattern:
+    return path.reversed()
+
+
+def affected_sources_node(templates: ViewTemplates, vdef: ViewDef,
+                          g: PropertyGraph, schema: GraphSchema,
+                          cfg: ExecConfig, node_id: int,
+                          metrics: Metrics,
+                          ex: PathExecutor | None = None) -> np.ndarray:
+    """Sources whose view rows may change when ``node_id`` is deleted."""
+    ex = ex or _delta_exec(g, schema, cfg)
+    hit = np.zeros(g.node_cap, bool)
+    for tpl in templates.node_delete:
+        if tpl.node_label is not None:
+            lid = schema.node_label_id(tpl.node_label)
+            if int(g.node_label[node_id]) != lid:
+                continue
+        row = template_prefix_row(ex, tpl, node_id, counting=False,
+                                  metrics=metrics)
+        hit |= row.astype(bool)
+    return np.flatnonzero(hit).astype(np.int32)
+
+
+def affected_sources_edge(templates: ViewTemplates, vdef: ViewDef,
+                          g: PropertyGraph, schema: GraphSchema,
+                          cfg: ExecConfig, edge_src: int, edge_dst: int,
+                          edge_label: str, metrics: Metrics,
+                          ex: PathExecutor | None = None) -> np.ndarray:
+    """Sources whose view rows may change when edge (src,dst,label) changes."""
+    ex = ex or _delta_exec(g, schema, cfg)
+    hit = np.zeros(g.node_cap, bool)
+    for tpl in templates.edge:
+        if tpl.rel_label is not None and tpl.rel_label != edge_label:
+            continue
+        rel = vdef.match.rels[tpl.position]
+        if rel.direction is Direction.IN:
+            starts = [edge_dst]
+        elif rel.direction is Direction.OUT:
+            starts = [edge_src]
+        else:
+            starts = [edge_src, edge_dst]
+        for u in starts:
+            row = template_prefix_row(ex, tpl, u, counting=False,
+                                      metrics=metrics)
+            hit |= row.astype(bool)
+    return np.flatnonzero(hit).astype(np.int32)

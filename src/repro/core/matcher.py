@@ -1,0 +1,75 @@
+"""MatchView (Algorithm 4): match a view's pattern path into a query path.
+
+The paper's matcher is VF2-style over general pattern graphs; since both the
+view pattern and our query patterns are *paths* (the paper's Figure 5 grammar
+only produces paths), matching reduces to aligned subpath comparison — the
+same NodeCanMatch / RelpCanMatch predicates (label equality, direction,
+min/max hops, isReferenced, interior degree-2) applied over a sliding window,
+in both orientations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.pattern import NodePat, PathPattern, RelPat
+
+
+@dataclass(frozen=True)
+class ViewMatch:
+    start: int        # index of the first matched query node
+    length: int       # number of matched rels (== len(view.match.rels))
+    forward: bool     # True if query subpath aligns with the view path order
+
+
+def _node_can_match(qn: NodePat, vn: NodePat, interior: bool) -> bool:
+    """Paper's NodeCanMatch: labels equal; interior nodes unreferenced and
+    degree-2 (degree-2 is structural in a path; a key filter would be an
+    extra constraint the view does not preserve, so interior keys forbid)."""
+    if qn.label != vn.label:
+        return False
+    if interior:
+        if qn.is_referenced or qn.key is not None:
+            return False
+    else:
+        # endpoints survive the splice; their extra constraints are fine, but
+        # the view only covers sources satisfying ITS endpoint constraints:
+        if vn.key is not None and qn.key != vn.key:
+            return False
+    return True
+
+
+def _rel_can_match(qr: RelPat, vr: RelPat) -> bool:
+    """Paper's RelpCanMatch: label, direction, min-hop, max-hop all equal and
+    the query rel must not be referenced elsewhere."""
+    return (qr.label == vr.label
+            and qr.direction == vr.direction
+            and qr.min_hops == vr.min_hops
+            and qr.max_hops == vr.max_hops
+            and not qr.is_referenced)
+
+
+def _try_at(qpath: PathPattern, vpath: PathPattern, start: int) -> bool:
+    k = len(vpath.rels)
+    for j in range(k + 1):
+        interior = 0 < j < k
+        if not _node_can_match(qpath.nodes[start + j], vpath.nodes[j], interior):
+            return False
+    for j in range(k):
+        if not _rel_can_match(qpath.rels[start + j], vpath.rels[j]):
+            return False
+    return True
+
+
+def match_view(qpath: PathPattern, vpath: PathPattern) -> Optional[ViewMatch]:
+    """First match of ``vpath`` (either orientation) inside ``qpath``."""
+    k = len(vpath.rels)
+    if k == 0 or k > len(qpath.rels):
+        return None
+    rpath = vpath.reversed()
+    for start in range(len(qpath.rels) - k + 1):
+        if _try_at(qpath, vpath, start):
+            return ViewMatch(start=start, length=k, forward=True)
+        if _try_at(qpath, rpath, start):
+            return ViewMatch(start=start, length=k, forward=False)
+    return None

@@ -1,0 +1,238 @@
+"""Cypher/GQL-subset parser for MATCH queries and CREATE VIEW statements.
+
+Covers the grammar of the paper's Figure 5 plus the MATCH/RETURN form used in
+its examples:
+
+    MATCH (n:Comment)-[r:replyOf*..]->(m:Post) RETURN n, m
+    MATCH (n:Person {id: 5})-[:knows*1..3]->(m) RETURN count(*)
+    CREATE VIEW ROOT_POST AS (
+        CONSTRUCT (c)-[r:ROOT_POST]->(p)
+        MATCH (c:Comment)-[:replyOf*..]->(p:Post))
+
+Hop ranges: ``*`` = 1..inf, ``*n`` = n..n, ``*n..`` = n..inf, ``*..m`` = 1..m,
+``*n..m``.  One primary-key property filter per node (``{id: v}``) is
+supported, matching the paper's ``$L{$K:$V}`` templates.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Tuple
+
+from repro.core.pattern import (
+    Direction, NodePat, PathPattern, Query, RelPat, ViewDef, mark_references,
+)
+from repro.utils import INF_HOPS
+
+_TOKEN_RE = re.compile(
+    r"""
+    (?P<ws>\s+)
+  | (?P<num>\d+)
+  | (?P<name>[A-Za-z_][A-Za-z0-9_]*)
+  | (?P<arrow_r>->)
+  | (?P<arrow_l><-)
+  | (?P<dots>\.\.)
+  | (?P<punct>[()\[\]{}:,*\-=.])
+    """,
+    re.VERBOSE,
+)
+
+_KEYWORDS = {"MATCH", "RETURN", "CREATE", "VIEW", "AS", "CONSTRUCT", "WHERE",
+             "LIMIT", "COUNT", "AND"}
+
+
+class ParseError(ValueError):
+    pass
+
+
+def _tokenize(text: str) -> List[str]:
+    toks, pos = [], 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if not m:
+            raise ParseError(f"unexpected character {text[pos]!r} at {pos}")
+        pos = m.end()
+        if m.lastgroup == "ws":
+            continue
+        toks.append(m.group())
+    return toks
+
+
+class _Cursor:
+    def __init__(self, toks: List[str]):
+        self.toks = toks
+        self.i = 0
+
+    def peek(self, k: int = 0) -> Optional[str]:
+        j = self.i + k
+        return self.toks[j] if j < len(self.toks) else None
+
+    def next(self) -> str:
+        if self.i >= len(self.toks):
+            raise ParseError("unexpected end of input")
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def expect(self, tok: str) -> str:
+        t = self.next()
+        if t.upper() != tok.upper() if tok.upper() in _KEYWORDS else t != tok:
+            raise ParseError(f"expected {tok!r}, got {t!r} at token {self.i - 1}")
+        return t
+
+    def accept(self, tok: str) -> bool:
+        t = self.peek()
+        if t is None:
+            return False
+        ok = t.upper() == tok.upper() if tok.upper() in _KEYWORDS else t == tok
+        if ok:
+            self.i += 1
+        return ok
+
+    def done(self) -> bool:
+        return self.i >= len(self.toks)
+
+
+def _parse_props(c: _Cursor) -> Optional[int]:
+    """``{ name : int }`` -> the int key value (single-prop subset)."""
+    if not c.accept("{"):
+        return None
+    c.next()  # property name (e.g. 'id'); templates call it $K
+    c.expect(":")
+    val = c.next()
+    if not val.isdigit():
+        raise ParseError(f"only integer key values supported, got {val!r}")
+    c.expect("}")
+    return int(val)
+
+
+def _parse_node(c: _Cursor) -> NodePat:
+    c.expect("(")
+    var = None
+    label = None
+    t = c.peek()
+    if t not in (":", ")", "{") and t is not None:
+        var = c.next()
+    if c.accept(":"):
+        label = c.next()
+    key = _parse_props(c)
+    c.expect(")")
+    return NodePat(var=var, label=label, key=key)
+
+
+def _parse_hops(c: _Cursor) -> Tuple[int, int]:
+    """After ``*``: optional ``n``, optional ``..``, optional ``m``."""
+    lo, hi = 1, INF_HOPS
+    t = c.peek()
+    if t is not None and t.isdigit():
+        lo = int(c.next())
+        hi = lo  # '*n' alone means exactly n
+    if c.accept(".."):
+        hi = INF_HOPS
+        t = c.peek()
+        if t is not None and t.isdigit():
+            hi = int(c.next())
+    if hi != INF_HOPS and hi < lo:
+        raise ParseError(f"hop range {lo}..{hi} is empty")
+    return lo, hi
+
+
+def _parse_rel(c: _Cursor) -> RelPat:
+    """Parses ``-[...]->`` / ``<-[...]-`` / ``-[...]-``."""
+    t = c.next()
+    if t == "<-":
+        left = True
+    elif t == "-":
+        left = False
+    else:
+        raise ParseError(f"expected relationship, got {t!r}")
+    var = None
+    label = None
+    lo, hi = 1, 1
+    if c.accept("["):
+        t = c.peek()
+        if t not in (":", "]", "*") and t is not None:
+            var = c.next()
+        if c.accept(":"):
+            label = c.next()
+        if c.accept("*"):
+            lo, hi = _parse_hops(c)
+        _parse_props(c)  # rel props: parsed and ignored (views are prop-free)
+        c.expect("]")
+    t = c.next()
+    if left:
+        if t != "-":
+            raise ParseError(f"expected '-' after <-[...], got {t!r}")
+        direction = Direction.IN
+    elif t == "->":
+        direction = Direction.OUT
+    elif t == "-":
+        direction = Direction.BOTH
+    else:
+        raise ParseError(f"expected '->' or '-', got {t!r}")
+    return RelPat(var=var, label=label, direction=direction,
+                  min_hops=lo, max_hops=hi)
+
+
+def _parse_path(c: _Cursor) -> PathPattern:
+    nodes = [_parse_node(c)]
+    rels: List[RelPat] = []
+    while c.peek() in ("-", "<-"):
+        rels.append(_parse_rel(c))
+        nodes.append(_parse_node(c))
+    return PathPattern(nodes=tuple(nodes), rels=tuple(rels))
+
+
+def parse_query(text: str) -> Query:
+    """Parse ``MATCH <path> RETURN ...`` into a :class:`Query`."""
+    c = _Cursor(_tokenize(text))
+    c.expect("MATCH")
+    path = _parse_path(c)
+    returns: List[str] = []
+    count_only = False
+    limit = None
+    if c.accept("RETURN"):
+        if c.accept("COUNT"):
+            c.expect("(")
+            c.expect("*")
+            c.expect(")")
+            count_only = True
+        else:
+            returns.append(c.next())
+            while c.accept(","):
+                returns.append(c.next())
+    if c.accept("LIMIT"):
+        limit = int(c.next())
+    if not c.done():
+        raise ParseError(f"trailing tokens: {c.toks[c.i:]}")
+    path = mark_references(path, set(returns))
+    return Query(path=path, returns=tuple(returns), limit=limit,
+                 count_only=count_only)
+
+
+def parse_view(text: str) -> ViewDef:
+    """Parse a CREATE VIEW statement (paper §IV-A, Figure 5)."""
+    c = _Cursor(_tokenize(text))
+    c.expect("CREATE")
+    c.expect("VIEW")
+    name = c.next()
+    c.expect("AS")
+    c.expect("(")
+    c.expect("CONSTRUCT")
+    cpath = _parse_path(c)
+    if len(cpath.rels) != 1:
+        raise ParseError("CONSTRUCT must be (s)-[r:VIEW]->(d)")
+    rel = cpath.rels[0]
+    if rel.label != name:
+        raise ParseError(
+            f"view edge label {rel.label!r} must equal the view name {name!r}")
+    if rel.direction is not Direction.OUT:
+        raise ParseError("CONSTRUCT edge must be directed ->")
+    c.expect("MATCH")
+    mpath = _parse_path(c)
+    c.expect(")")
+    if not c.done():
+        raise ParseError(f"trailing tokens: {c.toks[c.i:]}")
+    src_var, dst_var = cpath.nodes[0].var, cpath.nodes[1].var
+    if src_var is None or dst_var is None:
+        raise ParseError("CONSTRUCT endpoints must be named variables")
+    return ViewDef(name=name, src_var=src_var, dst_var=dst_var, match=mpath)

@@ -1,0 +1,182 @@
+"""Pattern-graph IR for Cypher/GQL path patterns.
+
+Mirrors the paper's Figure 5 grammar: a pattern element is an alternating
+sequence ``NodePat (RelPat NodePat)*``; a relationship may carry a hop range
+``*n..m`` where ``m`` can be unbounded (``INF_HOPS``).  The IR also carries the
+``isReferenced`` flag the paper's ``NodeCanMatch``/``RelpCanMatch`` checks use
+(§V-B): interior elements of a matched path may only be spliced out if no other
+clause references them.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field, replace
+from typing import List, Optional, Tuple
+
+from repro.utils import INF_HOPS
+
+
+class Direction(enum.Enum):
+    OUT = ">"   # (a)-[r]->(b)
+    IN = "<"    # (a)<-[r]-(b)
+    BOTH = "-"  # (a)-[r]-(b)
+
+    def reversed(self) -> "Direction":
+        if self is Direction.OUT:
+            return Direction.IN
+        if self is Direction.IN:
+            return Direction.OUT
+        return Direction.BOTH
+
+
+@dataclass(frozen=True)
+class NodePat:
+    var: Optional[str] = None
+    label: Optional[str] = None
+    key: Optional[int] = None          # {<pk>: key} filter ($K:$V)
+    is_referenced: bool = False        # referenced outside the MATCH path?
+
+    def pretty(self) -> str:
+        s = self.var or ""
+        if self.label:
+            s += f":{self.label}"
+        if self.key is not None:
+            s += f"{{id:{self.key}}}"
+        return f"({s})"
+
+
+@dataclass(frozen=True)
+class RelPat:
+    var: Optional[str] = None
+    label: Optional[str] = None
+    direction: Direction = Direction.OUT
+    min_hops: int = 1
+    max_hops: int = 1                  # INF_HOPS for unbounded
+    is_referenced: bool = False
+
+    @property
+    def is_varlen(self) -> bool:
+        return not (self.min_hops == 1 and self.max_hops == 1)
+
+    @property
+    def unbounded(self) -> bool:
+        return self.max_hops == INF_HOPS
+
+    def hop_range(self) -> Tuple[int, int]:
+        return self.min_hops, self.max_hops
+
+    def pretty(self) -> str:
+        inner = self.var or ""
+        if self.label:
+            inner += f":{self.label}"
+        if self.is_varlen:
+            hi = "" if self.unbounded else str(self.max_hops)
+            inner += f"*{self.min_hops}..{hi}"
+        body = f"[{inner}]"
+        if self.direction is Direction.OUT:
+            return f"-{body}->"
+        if self.direction is Direction.IN:
+            return f"<-{body}-"
+        return f"-{body}-"
+
+
+@dataclass(frozen=True)
+class PathPattern:
+    """Alternating [NodePat, RelPat, NodePat, ...]; len(nodes) == len(rels)+1."""
+
+    nodes: Tuple[NodePat, ...]
+    rels: Tuple[RelPat, ...]
+
+    def __post_init__(self):
+        if len(self.nodes) != len(self.rels) + 1:
+            raise ValueError("path must alternate node/rel/node")
+
+    @property
+    def start(self) -> NodePat:
+        return self.nodes[0]
+
+    @property
+    def end(self) -> NodePat:
+        return self.nodes[-1]
+
+    def var_names(self) -> List[str]:
+        out = [n.var for n in self.nodes if n.var]
+        out += [r.var for r in self.rels if r.var]
+        return out
+
+    def pretty(self) -> str:
+        s = self.nodes[0].pretty()
+        for r, n in zip(self.rels, self.nodes[1:]):
+            s += r.pretty() + n.pretty()
+        return s
+
+    def reversed(self) -> "PathPattern":
+        return PathPattern(
+            nodes=tuple(reversed(self.nodes)),
+            rels=tuple(replace(r, direction=r.direction.reversed())
+                       for r in reversed(self.rels)),
+        )
+
+
+@dataclass(frozen=True)
+class Query:
+    """A parsed MATCH ... RETURN query (single path pattern, per the paper)."""
+
+    path: PathPattern
+    returns: Tuple[str, ...] = ()
+    limit: Optional[int] = None
+    count_only: bool = False           # RETURN count(*)
+    force_bool: bool = False           # preserve set semantics after rewrite
+
+    def pretty(self) -> str:
+        ret = "count(*)" if self.count_only else ", ".join(self.returns)
+        return f"MATCH {self.path.pretty()} RETURN {ret}"
+
+
+@dataclass(frozen=True)
+class ViewDef:
+    """CREATE VIEW <name> AS (CONSTRUCT (s)-[:name]->(d) MATCH <path>)."""
+
+    name: str
+    src_var: str
+    dst_var: str
+    match: PathPattern
+
+    def __post_init__(self):
+        vars_ = {self.match.start.var, self.match.end.var}
+        if self.src_var not in vars_ or self.dst_var not in vars_:
+            raise ValueError(
+                "CONSTRUCT endpoints must be the MATCH path endpoints "
+                f"(got {self.src_var}->{self.dst_var} over {vars_})"
+            )
+
+    @property
+    def forward(self) -> bool:
+        """True if the view edge runs start->end of the match path."""
+        return self.src_var == self.match.start.var
+
+    def pretty(self) -> str:
+        return (
+            f"CREATE VIEW {self.name} AS (CONSTRUCT ({self.src_var})-"
+            f"[r:{self.name}]->({self.dst_var}) MATCH {self.match.pretty()})"
+        )
+
+
+def mark_references(path: PathPattern, referenced: set[str]) -> PathPattern:
+    """Set ``is_referenced`` on pattern elements whose var appears elsewhere."""
+    nodes = tuple(
+        replace(n, is_referenced=(n.var is not None and n.var in referenced))
+        for n in path.nodes
+    )
+    rels = tuple(
+        replace(r, is_referenced=(r.var is not None and r.var in referenced))
+        for r in path.rels
+    )
+    return PathPattern(nodes=nodes, rels=rels)
+
+
+@dataclass
+class ViewEdgePat:
+    """Marker rel used after ChangePG: a rel whose label names a view."""
+
+    view_name: str

@@ -1,0 +1,67 @@
+"""Label registry for property graphs.
+
+The paper's model (Definition 1) labels every node and edge with exactly one
+label.  We intern label strings to dense int ids so that all on-device
+filtering is integer comparison.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+NO_LABEL = -1     # wildcard: matches any label
+NEVER_LABEL = -2  # unknown label: matches nothing (no instances exist yet)
+
+
+@dataclass
+class LabelRegistry:
+    """Bidirectional mapping between label strings and dense int ids."""
+
+    _to_id: Dict[str, int] = field(default_factory=dict)
+    _to_name: List[str] = field(default_factory=list)
+
+    def intern(self, name: str) -> int:
+        if name in self._to_id:
+            return self._to_id[name]
+        idx = len(self._to_name)
+        self._to_id[name] = idx
+        self._to_name.append(name)
+        return idx
+
+    def id_of(self, name: str) -> int:
+        if name not in self._to_id:
+            raise KeyError(f"unknown label {name!r}; known: {self._to_name}")
+        return self._to_id[name]
+
+    def maybe_id(self, name: str | None) -> int:
+        """Like :meth:`id_of` but maps ``None`` to the wildcard ``NO_LABEL``
+        and labels with no instances yet to ``NEVER_LABEL`` (matches nothing,
+        like a GDBMS query over a label that has no index entries)."""
+        if name is None:
+            return NO_LABEL
+        if name not in self._to_id:
+            return NEVER_LABEL
+        return self._to_id[name]
+
+    def name_of(self, idx: int) -> str:
+        return self._to_name[idx]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._to_id
+
+    def __len__(self) -> int:
+        return len(self._to_name)
+
+
+@dataclass
+class GraphSchema:
+    """Schema of a property graph: separate registries for node and edge labels."""
+
+    node_labels: LabelRegistry = field(default_factory=LabelRegistry)
+    edge_labels: LabelRegistry = field(default_factory=LabelRegistry)
+
+    def node_label_id(self, name: str | None) -> int:
+        return self.node_labels.maybe_id(name)
+
+    def edge_label_id(self, name: str | None) -> int:
+        return self.edge_labels.maybe_id(name)

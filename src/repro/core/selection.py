@@ -1,0 +1,157 @@
+"""Automatic view selection from a workload (the paper's §VII future work).
+
+The paper selects views manually; it names automatic workload-driven
+selection as future work.  This module implements it with the paper's own
+cost model:
+
+1. enumerate candidate view definitions = every contiguous subpath (length
+   >= 1 rel) of every read query's pattern, closed under de-duplication
+   (label/direction/hop-range signature);
+2. score each candidate by its *measured* ViewOptEff (Eq. 1): run the
+   candidate's match once to get DBHit_noV and |E_VL|, estimate DBHit_V =
+   |N_SL| + 2|E_VL|, weight by how many workload queries the candidate
+   matches (Algorithm 4's matcher decides);
+3. greedily take the top-k positive-benefit candidates, re-scoring after
+   each pick on the rewritten queries so overlapping candidates don't
+   double-count (the Figure 8-12 ordering problem, solved greedily as the
+   paper proposes: "a Cost-Based Optimizer and a greedy algorithm").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.executor import ExecConfig, PathExecutor
+from repro.core.matcher import match_view
+from repro.core.optimizer import change_pg
+from repro.core.parser import parse_query
+from repro.core.pattern import NodePat, PathPattern, Query, ViewDef
+
+
+def _signature(path: PathPattern) -> tuple:
+    return (
+        tuple((n.label, n.key) for n in path.nodes),
+        tuple((r.label, r.direction, r.min_hops, r.max_hops)
+              for r in path.rels),
+    )
+
+
+def candidate_subpaths(queries: Sequence[Query]) -> List[PathPattern]:
+    """All de-duplicated contiguous subpaths with >= 1 relationship whose
+    interior elements are unreferenced (spliceable by Algorithm 4)."""
+    seen: Dict[tuple, PathPattern] = {}
+    for q in queries:
+        path = q.path
+        n = len(path.rels)
+        for lo in range(n):
+            for hi in range(lo + 1, n + 1):
+                if hi - lo == 1 and not any(
+                        r.is_varlen for r in path.rels[lo:hi]):
+                    # 1-hop fixed views rarely pay for themselves; allow
+                    # them only as part of longer candidates
+                    continue
+                sub = PathPattern(nodes=path.nodes[lo:hi + 1],
+                                  rels=path.rels[lo:hi])
+                if any(nd.is_referenced or nd.key is not None
+                       for nd in sub.nodes[1:-1]):
+                    continue
+                if any(r.is_referenced for r in sub.rels):
+                    continue
+                seen.setdefault(_signature(sub), sub)
+    return list(seen.values())
+
+
+@dataclass
+class Candidate:
+    vdef: ViewDef
+    opt_eff: float          # Eq. 1, summed over matching workload queries
+    n_matches: int
+    db_hit_no_v: int
+    e_vl: int
+
+
+class _Probe:
+    """Stats wrapper so the matcher/optimizer can rank a candidate before it
+    is materialized (duck-types MaterializedView for match_view/change_pg)."""
+
+    def __init__(self, vdef: ViewDef, opt_eff: float):
+        self.vdef = vdef
+        self.name = vdef.name
+        self._eff = opt_eff
+
+    class _S:
+        def __init__(self, e):
+            self._e = e
+
+        def opt_eff(self):
+            return self._e
+
+    @property
+    def stats(self):
+        return self._S(self._eff)
+
+
+def score_candidate(ex: PathExecutor, sub: PathPattern, queries: Sequence[Query],
+                    name: str) -> Optional[Candidate]:
+    """Measure Eq. 1 for one candidate against the current graph."""
+    # strip interior references for the view definition
+    s_var = sub.start.var or "s"
+    d_var = sub.end.var or "d"
+    nodes = list(sub.nodes)
+    if nodes[0].var is None:
+        nodes[0] = NodePat(var=s_var, label=nodes[0].label, key=nodes[0].key)
+    if nodes[-1].var is None:
+        nodes[-1] = NodePat(var=d_var, label=nodes[-1].label,
+                            key=nodes[-1].key)
+    sub = PathPattern(nodes=tuple(nodes), rels=sub.rels)
+    vdef = ViewDef(name=name, src_var=nodes[0].var, dst_var=nodes[-1].var,
+                   match=sub)
+    counting = not any(r.unbounded for r in sub.rels)
+    res = ex.run_path(sub, counting=counting)
+    e_vl = res.num_pairs()
+    start_lid = ex.schema.node_label_id(sub.start.label)
+    import numpy as np
+    n_sl = int(np.asarray(ex.g.node_mask(start_lid)).sum())
+    db_hit_no_v = res.metrics.db_hits
+    per_use_eff = db_hit_no_v - (n_sl + 2 * e_vl)        # Eq. 1
+    n_matches = sum(1 for q in queries
+                    if match_view(q.path, sub) is not None)
+    if n_matches == 0:
+        return None
+    return Candidate(vdef=vdef, opt_eff=per_use_eff * n_matches,
+                     n_matches=n_matches, db_hit_no_v=db_hit_no_v,
+                     e_vl=e_vl)
+
+
+def select_views(g, schema, read_queries: Sequence[str], k: int = 3,
+                 cfg: Optional[ExecConfig] = None) -> List[ViewDef]:
+    """Greedy top-k workload-driven view selection (measured Eq. 1 scores)."""
+    queries = [parse_query(q) for q in read_queries]
+    ex = PathExecutor(g, schema, cfg or ExecConfig(collect_metrics=True))
+    chosen: List[ViewDef] = []
+    remaining = {_signature(s): s for s in candidate_subpaths(queries)}
+    live_queries = list(queries)
+    for i in range(k):
+        scored: List[Candidate] = []
+        for sig, sub in remaining.items():
+            c = score_candidate(ex, sub, live_queries, name=f"AUTO_V{i}")
+            if c is not None and c.opt_eff > 0:
+                scored.append(c)
+        if not scored:
+            break
+        best = max(scored, key=lambda c: c.opt_eff)
+        chosen.append(best.vdef)
+        remaining.pop(_signature(best.vdef.match), None)
+        # greedy re-scoring: rewrite the workload as if the view existed, so
+        # overlapping candidates don't double-count the same savings
+        probe = _Probe(best.vdef, best.opt_eff)
+        new_qs = []
+        for q in live_queries:
+            path = q.path
+            m = match_view(path, best.vdef.match)
+            while m is not None:
+                path = change_pg(path, m, probe)
+                m = match_view(path, best.vdef.match)
+            new_qs.append(Query(path=path, returns=q.returns))
+        live_queries = new_qs
+    return chosen

@@ -1,0 +1,356 @@
+"""View catalog and graph session: creation, storage, incremental maintenance.
+
+View edges are materialized *into the graph arena* as real edges labeled with
+the view name — exactly the paper's realization ("store the query result as a
+new edge labeled ROOT_POST").  Bag semantics (one result row per path
+instance) is preserved compactly via the per-edge ``weight`` = path count;
+unbounded (``*n..``) views use set semantics with weight 1 (counting infinite
+walk families is undefined; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.executor import ExecConfig, Metrics, PathExecutor, ReachResult
+from repro.core.maintenance import (
+    DeltaPairs, ViewTemplates, _delta_exec, affected_sources_edge,
+    affected_sources_node, edge_delta_pairs,
+)
+from repro.core.parser import parse_query, parse_view
+from repro.core.pattern import PathPattern, Query, ViewDef
+from repro.core.schema import GraphSchema
+
+
+@dataclass
+class ViewStats:
+    """The paper's Eq. 1-2 bookkeeping for SortByOptEff."""
+
+    n_sl: int            # |N_$SL|: nodes with the view's start label
+    e_vl: int            # |E_$VL|: number of view edges
+    init_db_hit: int     # DBHit_noV measured once, at creation
+    opt_rate: float      # initialDBHit / (|N_SL| + 2|E_VL|)
+
+    def db_hit_estimate(self) -> float:
+        return (self.n_sl + 2 * self.e_vl) * self.opt_rate          # Eq. 2
+
+    def opt_eff(self) -> float:
+        return self.db_hit_estimate() - (self.n_sl + 2 * self.e_vl)  # Eq. 1
+
+
+@dataclass
+class MaterializedView:
+    vdef: ViewDef
+    label_id: int                 # edge-label id of this view's edges
+    counting: bool                # bag (finite hops) vs set (unbounded)
+    templates: ViewTemplates
+    stats: ViewStats
+    pair_slot: Dict[Tuple[int, int], int] = field(default_factory=dict)
+    creation_seconds: float = 0.0
+
+    @property
+    def name(self) -> str:
+        return self.vdef.name
+
+    def oriented(self, s: int, d: int) -> Tuple[int, int]:
+        """Map a (match-start, match-end) pair to (view-src, view-dst)."""
+        return (s, d) if self.vdef.forward else (d, s)
+
+
+class GraphSession:
+    """Owns the graph + schema + view catalog; the workload entry point.
+
+    Mirrors the paper's Figure 4: queries pass through the view-based
+    optimizer; writes trigger template-driven maintenance.
+    """
+
+    def __init__(self, g: G.PropertyGraph, schema: GraphSchema,
+                 cfg: Optional[ExecConfig] = None, auto_optimize: bool = True):
+        self.g = g
+        self.schema = schema
+        self.cfg = cfg or ExecConfig()
+        self.auto_optimize = auto_optimize
+        self.views: Dict[str, MaterializedView] = {}
+        self.last_maintenance_metrics = Metrics()
+        self.last_rewrite_seconds = 0.0
+
+    # ------------------------------------------------------------- executor
+
+    def _executor(self, g: Optional[G.PropertyGraph] = None) -> PathExecutor:
+        return PathExecutor(g if g is not None else self.g, self.schema, self.cfg)
+
+    # ----------------------------------------------------------- view create
+
+    def create_view(self, stmt: Union[str, ViewDef]) -> MaterializedView:
+        vdef = parse_view(stmt) if isinstance(stmt, str) else stmt
+        if vdef.name in self.views:
+            raise ValueError(f"view {vdef.name!r} already exists")
+        t0 = time.perf_counter()
+        counting = not any(r.unbounded for r in vdef.match.rels)
+        ex = self._executor()
+        res = ex.run_path(vdef.match, counting=counting)
+        s_ids, d_ids, cnt = res.pairs()
+
+        label_id = self.schema.edge_labels.intern(vdef.name)
+        srcs, dsts = (s_ids, d_ids) if vdef.forward else (d_ids, s_ids)
+        n_new = srcs.shape[0]
+        free = np.flatnonzero(~np.asarray(self.g.edge_alive))
+        if free.shape[0] < n_new:
+            self.g = G.grow_edge_arena(
+                self.g, self.g.edge_cap + 2 * (n_new - free.shape[0]) + 128)
+            free = np.flatnonzero(~np.asarray(self.g.edge_alive))
+        slots = free[:n_new]
+        if n_new:
+            self.g = G.create_edges(self.g, slots, srcs, dsts, label_id,
+                                    cnt if counting else np.ones_like(cnt))
+
+        start_lid = self.schema.node_label_id(vdef.match.start.label)
+        n_sl = int(np.asarray(self.g.node_mask(start_lid)).sum())
+        e_vl = int(n_new)
+        init_db_hit = res.metrics.db_hits
+        denom = max(n_sl + 2 * e_vl, 1)
+        stats = ViewStats(n_sl=n_sl, e_vl=e_vl, init_db_hit=init_db_hit,
+                          opt_rate=init_db_hit / denom)
+        view = MaterializedView(
+            vdef=vdef, label_id=label_id, counting=counting,
+            templates=ViewTemplates.generate(vdef), stats=stats,
+            pair_slot={(int(a), int(b)): int(sl)
+                       for a, b, sl in zip(srcs, dsts, slots)},
+            creation_seconds=time.perf_counter() - t0,
+        )
+        self.views[vdef.name] = view
+        return view
+
+    def drop_view(self, name: str) -> None:
+        view = self.views.pop(name)
+        slots = np.fromiter(view.pair_slot.values(), np.int32,
+                            len(view.pair_slot))
+        if slots.size:
+            self.g = G.delete_edges(self.g, slots)
+
+    # ------------------------------------------------------ view-edge deltas
+
+    def _apply_delta(self, view: MaterializedView, delta: DeltaPairs,
+                     sign: int) -> None:
+        """Apply a (src,dst,count) delta (match-path orientation) to a view."""
+        if delta.src.size == 0:
+            return
+        # upper bound on new slots = all delta entries; reserve them upfront so
+        # arena growth cannot invalidate slots handed out earlier in the loop
+        free = np.flatnonzero(~np.asarray(self.g.edge_alive))
+        if free.shape[0] < delta.src.size:
+            self.g = G.grow_edge_arena(
+                self.g, self.g.edge_cap + 2 * int(delta.src.size) + 128)
+            free = np.flatnonzero(~np.asarray(self.g.edge_alive))
+        add_slots: List[int] = []
+        add_src: List[int] = []
+        add_dst: List[int] = []
+        add_w: List[int] = []
+        upd_slots: List[int] = []
+        upd_delta: List[int] = []
+        free_i = 0
+        for s, d, c in zip(delta.src, delta.dst, delta.count):
+            key = view.oriented(int(s), int(d))
+            w = int(c) * sign
+            slot = view.pair_slot.get(key)
+            if slot is not None:
+                upd_slots.append(slot)
+                upd_delta.append(w)
+            elif w > 0:
+                slot = int(free[free_i]); free_i += 1
+                add_slots.append(slot)
+                add_src.append(key[0]); add_dst.append(key[1]); add_w.append(w)
+                view.pair_slot[key] = slot
+            # w<0 on a missing pair would mean the delta engine overshot;
+            # exactness of the telescoped delta guarantees it cannot happen.
+        if add_slots:
+            self.g = G.create_edges(self.g, np.asarray(add_slots),
+                                    np.asarray(add_src), np.asarray(add_dst),
+                                    view.label_id, np.asarray(add_w))
+        if upd_slots:
+            self.g = G.add_edge_weight(self.g, np.asarray(upd_slots),
+                                       np.asarray(upd_delta))
+            # drop dead pairs from the index
+            w = np.asarray(self.g.edge_weight)[np.asarray(upd_slots)]
+            for slot, wv in zip(upd_slots, w):
+                if wv <= 0:
+                    s = int(self.g.edge_src[slot]); d = int(self.g.edge_dst[slot])
+                    view.pair_slot.pop((s, d), None)
+        view.stats.e_vl = len(view.pair_slot)
+
+    def _recompute_sources(self, view: MaterializedView,
+                           sources: np.ndarray, metrics: Metrics,
+                           ex: Optional[object] = None) -> None:
+        """Re-derive view rows for the affected sources on the current graph."""
+        # current stored pairs for these sources (view-src orientation if fwd)
+        desired: Dict[Tuple[int, int], int] = {}
+        if sources.size:
+            ex = ex or _delta_exec(self.g, self.schema, self.cfg)
+            res = ex.run_path(view.vdef.match, counting=view.counting,
+                              sources=sources)
+            metrics += res.metrics
+            s_ids, d_ids, cnt = res.pairs()
+            for s, d, c in zip(s_ids, d_ids, cnt):
+                desired[view.oriented(int(s), int(d))] = int(c)
+        src_set = set(int(s) for s in sources)
+        kill_slots: List[int] = []
+        upd_slots: List[int] = []
+        upd_delta: List[int] = []
+        for key in list(view.pair_slot.keys()):
+            ms = key[0] if view.vdef.forward else key[1]  # match-start node
+            if ms not in src_set:
+                continue
+            slot = view.pair_slot[key]
+            want = desired.pop(key, 0)
+            have = int(self.g.edge_weight[slot]) if bool(self.g.edge_alive[slot]) else 0
+            if want == 0:
+                kill_slots.append(slot)
+                view.pair_slot.pop(key)
+            elif want != have:
+                upd_slots.append(slot)
+                upd_delta.append(want - have)
+        if kill_slots:
+            self.g = G.delete_edges(self.g, np.asarray(kill_slots))
+        if upd_slots:
+            self.g = G.add_edge_weight(self.g, np.asarray(upd_slots),
+                                       np.asarray(upd_delta))
+        if desired:  # brand-new pairs
+            keys = list(desired.keys())
+            delta = DeltaPairs(
+                src=np.asarray([k[0] if view.vdef.forward else k[1] for k in keys],
+                               np.int32),
+                dst=np.asarray([k[1] if view.vdef.forward else k[0] for k in keys],
+                               np.int32),
+                count=np.asarray([desired[k] for k in keys], np.int64))
+            self._apply_delta(view, delta, sign=+1)
+        view.stats.e_vl = len(view.pair_slot)
+
+    # ----------------------------------------------------------- write ops
+
+    def create_edge(self, src: int, dst: int, label: str) -> int:
+        """Create a base edge; incrementally maintain every view."""
+        metrics = Metrics()
+        g_old = self.g
+        label_id = self.schema.edge_labels.intern(label)
+        slot = int(G.free_edge_slots(self.g, 1)[0])
+        self.g = G.create_edge(self.g, slot, src, dst, label_id)
+        ex_new = _delta_exec(self.g, self.schema, self.cfg)
+        ex_old = _delta_exec(g_old, self.schema, self.cfg)
+        for view in self.views.values():
+            if not self._uses_label(view, label):
+                continue
+            if view.counting:
+                delta = edge_delta_pairs(
+                    view.templates, view.vdef, self.g, g_old, self.schema,
+                    self.cfg, src, dst, label, counting=True, metrics=metrics,
+                    ex_pre=ex_new, ex_suf=ex_old)
+                self._apply_delta(view, delta, sign=+1)
+            else:
+                delta = edge_delta_pairs(
+                    view.templates, view.vdef, self.g, self.g, self.schema,
+                    self.cfg, src, dst, label, counting=False, metrics=metrics,
+                    ex_pre=ex_new, ex_suf=ex_new)
+                # set-union: only add pairs not already present
+                self._apply_union(view, delta)
+        self.last_maintenance_metrics = metrics
+        return slot
+
+    def delete_edge(self, edge_id: int) -> None:
+        metrics = Metrics()
+        g_old = self.g
+        if not bool(g_old.edge_alive[edge_id]):
+            return  # deleting a dead slot is a no-op (idempotent deletes)
+        src = int(g_old.edge_src[edge_id]); dst = int(g_old.edge_dst[edge_id])
+        label = self.schema.edge_labels.name_of(int(g_old.edge_label[edge_id]))
+        self.g = G.delete_edge(self.g, edge_id)
+        ex_new = _delta_exec(self.g, self.schema, self.cfg)
+        ex_old = _delta_exec(g_old, self.schema, self.cfg)
+        for view in self.views.values():
+            if not self._uses_label(view, label):
+                continue
+            if view.counting:
+                delta = edge_delta_pairs(
+                    view.templates, view.vdef, g_old, self.g, self.schema,
+                    self.cfg, src, dst, label, counting=True, metrics=metrics,
+                    ex_pre=ex_old, ex_suf=ex_new)
+                self._apply_delta(view, delta, sign=-1)
+            else:
+                affected = affected_sources_edge(
+                    view.templates, view.vdef, g_old, self.schema, self.cfg,
+                    src, dst, label, metrics, ex=ex_old)
+                self._recompute_sources(view, affected, metrics, ex=ex_new)
+        self.last_maintenance_metrics = metrics
+
+    def delete_node(self, node_id: int) -> None:
+        metrics = Metrics()
+        g_old = self.g
+        if not bool(g_old.node_alive[node_id]):
+            return
+        # base mutation also kills incident edges — including view edges
+        self.g = G.delete_node(self.g, node_id)
+        ex_new = _delta_exec(self.g, self.schema, self.cfg)
+        ex_old = _delta_exec(g_old, self.schema, self.cfg)
+        for view in self.views.values():
+            # drop index entries for view edges incident to the node
+            for key in [k for k in view.pair_slot if node_id in k]:
+                view.pair_slot.pop(key)
+            affected = affected_sources_node(
+                view.templates, view.vdef, g_old, self.schema, self.cfg,
+                node_id, metrics, ex=ex_old)
+            affected = affected[affected != node_id]
+            self._recompute_sources(view, affected, metrics, ex=ex_new)
+            view.stats.e_vl = len(view.pair_slot)
+        self.last_maintenance_metrics = metrics
+
+    def _apply_union(self, view: MaterializedView, delta: DeltaPairs) -> None:
+        if delta.src.size == 0:
+            return
+        keep = [i for i, (s, d) in enumerate(zip(delta.src, delta.dst))
+                if view.oriented(int(s), int(d)) not in view.pair_slot]
+        if not keep:
+            return
+        sub = DeltaPairs(delta.src[keep], delta.dst[keep],
+                         np.ones(len(keep), np.int64))
+        self._apply_delta(view, sub, sign=+1)
+
+    def _uses_label(self, view: MaterializedView, label: str) -> bool:
+        return any(r.label == label or r.label is None
+                   for r in view.vdef.match.rels)
+
+    # -------------------------------------------------------------- queries
+
+    def query(self, q: Union[str, Query], use_views: Optional[bool] = None
+              ) -> ReachResult:
+        if isinstance(q, str):
+            q = parse_query(q)
+        use = self.auto_optimize if use_views is None else use_views
+        self.last_rewrite_seconds = 0.0
+        if use and self.views:
+            from repro.core.optimizer import optimize_query
+            t0 = time.perf_counter()
+            q = optimize_query(q, list(self.views.values()))
+            self.last_rewrite_seconds = time.perf_counter() - t0
+        return self._executor().run_query(q)
+
+    # ------------------------------------------------------------ integrity
+
+    def check_consistency(self, name: str) -> bool:
+        """Paper §VI-C verification: stored view == re-derived from scratch."""
+        view = self.views[name]
+        ex = self._executor()
+        res = ex.run_path(view.vdef.match, counting=view.counting)
+        s_ids, d_ids, cnt = res.pairs()
+        fresh: Dict[Tuple[int, int], int] = {}
+        for s, d, c in zip(s_ids, d_ids, cnt):
+            fresh[view.oriented(int(s), int(d))] = int(c)
+        stored: Dict[Tuple[int, int], int] = {}
+        for key, slot in view.pair_slot.items():
+            if bool(self.g.edge_alive[slot]):
+                stored[key] = int(self.g.edge_weight[slot]) if view.counting else 1
+        if view.counting:
+            return fresh == stored
+        return set(fresh.keys()) == set(stored.keys())

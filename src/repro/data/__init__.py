@@ -1,0 +1,2 @@
+"""Data substrate: synthetic token streams, property-graph generators,
+recsys logs — deterministic, shardable, prefetched."""

@@ -1,0 +1,9 @@
+from repro.graphops.segment import (
+    segment_softmax, segment_mean, segment_std, coalesce_pairs,
+)
+from repro.graphops.csr import build_csr, ell_from_coo
+
+__all__ = [
+    "segment_softmax", "segment_mean", "segment_std", "coalesce_pairs",
+    "build_csr", "ell_from_coo",
+]

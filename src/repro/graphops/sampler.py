@@ -1,0 +1,70 @@
+"""Fanout neighbor sampler (GraphSAGE-style) for minibatch_lg training.
+
+Host-side CSR sampling: for each seed node, sample up to ``fanout[0]``
+neighbors, then ``fanout[1]`` neighbors of those, etc.; returns the induced
+padded subgraph with relabeled node ids.  Deterministic per (seed, step).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.graphops.csr import build_csr
+
+
+class NeighborSampler:
+    def __init__(self, src: np.ndarray, dst: np.ndarray, num_nodes: int):
+        self.indptr, self.nbrs, _ = build_csr(dst, src, num_nodes)
+        # CSR over incoming edges: sampling neighbors that MESSAGE INTO seeds
+        self.num_nodes = num_nodes
+
+    def sample(self, seeds: np.ndarray, fanout: Sequence[int], seed: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (node_ids, sub_src, sub_dst, seed_positions).
+
+        node_ids: original ids of subgraph nodes (seeds first);
+        sub_src/sub_dst: edges in subgraph-local ids (src -> dst toward seeds).
+        """
+        rng = np.random.default_rng(seed)
+        frontier = np.asarray(seeds, np.int64)
+        id_map = {int(v): i for i, v in enumerate(frontier)}
+        nodes = list(map(int, frontier))
+        e_src: list[int] = []
+        e_dst: list[int] = []
+        for f in fanout:
+            nxt: list[int] = []
+            for v in frontier:
+                lo, hi = self.indptr[v], self.indptr[v + 1]
+                deg = hi - lo
+                if deg == 0:
+                    continue
+                k = min(f, deg)
+                pick = rng.choice(deg, size=k, replace=False) + lo
+                for u in self.nbrs[pick]:
+                    u = int(u)
+                    if u not in id_map:
+                        id_map[u] = len(nodes)
+                        nodes.append(u)
+                        nxt.append(u)
+                    e_src.append(id_map[u])
+                    e_dst.append(id_map[int(v)])
+            frontier = np.asarray(nxt, np.int64)
+            if frontier.size == 0:
+                break
+        return (np.asarray(nodes, np.int64), np.asarray(e_src, np.int32),
+                np.asarray(e_dst, np.int32),
+                np.arange(len(seeds), dtype=np.int32))
+
+
+def max_subgraph_size(batch_nodes: int, fanout: Sequence[int]
+                      ) -> Tuple[int, int]:
+    """Worst-case (nodes, edges) for padding the sampled subgraph."""
+    nodes = batch_nodes
+    edges = 0
+    layer = batch_nodes
+    for f in fanout:
+        layer = layer * f
+        nodes += layer
+        edges += layer
+    return nodes, edges

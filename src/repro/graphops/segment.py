@@ -1,0 +1,56 @@
+"""Segment-reduction primitives.
+
+JAX has no EmbeddingBag / CSR SpMM — message passing and embedding bags are
+built from ``segment_sum``-style scatter ops over edge indices.  These wrappers
+are the single home for that pattern; GNN models, the MV4PG executor's segment
+backend, and the recsys embedding bag all route through here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_mean(data: jax.Array, segment_ids: jax.Array, num_segments: int,
+                 eps: float = 1e-9) -> jax.Array:
+    s = jax.ops.segment_sum(data, segment_ids, num_segments)
+    cnt = jax.ops.segment_sum(jnp.ones(data.shape[:1], data.dtype),
+                              segment_ids, num_segments)
+    return s / jnp.maximum(cnt, eps)[..., None] if data.ndim > 1 else s / jnp.maximum(cnt, eps)
+
+
+def segment_std(data: jax.Array, segment_ids: jax.Array, num_segments: int,
+                eps: float = 1e-5) -> jax.Array:
+    mean = segment_mean(data, segment_ids, num_segments)
+    mean_sq = segment_mean(data * data, segment_ids, num_segments)
+    var = jnp.maximum(mean_sq - mean * mean, 0.0)
+    return jnp.sqrt(var + eps)
+
+
+def segment_softmax(logits: jax.Array, segment_ids: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """Numerically-stable softmax within segments (GAT-style edge softmax)."""
+    seg_max = jax.ops.segment_max(logits, segment_ids, num_segments)
+    z = logits - seg_max[segment_ids]
+    ez = jnp.exp(z)
+    seg_sum = jax.ops.segment_sum(ez, segment_ids, num_segments)
+    return ez / jnp.maximum(seg_sum[segment_ids], 1e-16)
+
+
+def coalesce_pairs(src: jax.Array, dst: jax.Array, counts: jax.Array,
+                   num_nodes: int):
+    """Merge duplicate (src,dst) pairs by summing counts.
+
+    Returns sorted unique pairs with aggregated counts (host-friendly; used by
+    the view store to keep the multiset of view edges canonical).
+    """
+    key = src.astype(jnp.int64) * num_nodes + dst.astype(jnp.int64)
+    order = jnp.argsort(key)
+    key_s, cnt_s = key[order], counts[order]
+    new_seg = jnp.concatenate([jnp.ones(1, bool), key_s[1:] != key_s[:-1]])
+    seg_id = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
+    n = key_s.shape[0]
+    agg = jax.ops.segment_sum(cnt_s, seg_id, n)
+    first = jnp.zeros(n, key_s.dtype).at[seg_id].set(key_s)
+    num_unique = seg_id[-1] + 1 if n > 0 else 0
+    return first, agg, num_unique

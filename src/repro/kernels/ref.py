@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def block_spmm_ref(F: jax.Array, A: jax.Array, col_mask: jax.Array | None = None,
+                   semiring: str = "count") -> jax.Array:
+    """Frontier-hop semantics target of the block_spmm kernel.
+
+    counting: ``out = (F @ A) * mask``;  boolean: ``out = min(F @ A, 1) * mask``.
+    All in f32 (walk counts are exact up to 2^24).
+    """
+    out = jnp.dot(F.astype(jnp.float32), A.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if semiring == "bool":
+        out = jnp.minimum(out, 1.0)
+    if col_mask is not None:
+        out = out * col_mask.astype(jnp.float32)[None, :]
+    return out
+
+
+def segment_multi_agg_ref(msg: jax.Array, valid: jax.Array, eps: float = 1e-5
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """PNA multi-aggregator over bucketed neighbors.
+
+    msg:   [N, W, D] bucketed neighbor messages (padded)
+    valid: [N, W]    bucket slot validity
+    returns (mean, max, min, std), each [N, D]; empty rows -> zeros.
+    """
+    v = valid[:, :, None].astype(msg.dtype)
+    cnt = jnp.sum(valid.astype(msg.dtype), axis=1)[:, None]
+    safe = jnp.maximum(cnt, 1.0)
+    s = jnp.sum(msg * v, axis=1)
+    mean = s / safe
+    neg = jnp.asarray(-3.4e38, msg.dtype)
+    pos = jnp.asarray(3.4e38, msg.dtype)
+    mx = jnp.max(jnp.where(v > 0, msg, neg), axis=1)
+    mn = jnp.min(jnp.where(v > 0, msg, pos), axis=1)
+    nonempty = cnt > 0
+    mx = jnp.where(nonempty, mx, 0.0)
+    mn = jnp.where(nonempty, mn, 0.0)
+    meansq = jnp.sum(msg * msg * v, axis=1) / safe
+    std = jnp.sqrt(jnp.maximum(meansq - mean * mean, 0.0) + eps)
+    std = jnp.where(nonempty, std, 0.0)
+    return mean, mx, mn, std
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+            scale: float | None = None) -> jax.Array:
+    """Attention oracle.  q: [B,H,Sq,D], k/v: [B,H,Sk,D] -> [B,H,Sq,D]."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[-2], k.shape[-2]
+        # decode-friendly causal mask: query i attends keys <= i + (sk - sq)
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(sk)[None, :]
+        mask = kj <= qi + (sk - sq)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array | None = None) -> jax.Array:
+    """Single-token decode oracle.  q: [B,H,D], k/v: [B,H,S,D].
+
+    ``kv_len`` masks the valid prefix of the cache (per batch)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bhd,bhsd->bhs", q, k).astype(jnp.float32) / (d ** 0.5)
+    if kv_len is not None:
+        s = k.shape[-2]
+        mask = jnp.arange(s)[None, None, :] < kv_len[:, None, None]
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p.astype(v.dtype), v)

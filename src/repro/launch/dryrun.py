@@ -1,0 +1,119 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+
+The two module-level lines above MUST stay first: jax locks the device count
+on first initialization, and only the dry-run wants 512 placeholder devices.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import analyze_compiled
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, calibrate: bool = True) -> dict:
+    from repro.configs import get_arch
+    from repro.launch.steps import build_cell, calibration_cells
+    from repro.roofline.analysis import extrapolate, raw_costs
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(arch_id, shape_name, mesh)
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        costs = None
+        if calibrate and get_arch(arch_id).family == "lm":
+            # loop-exact costs: two small unrolled builds, per-layer delta
+            cals = calibration_cells(arch_id, shape_name, mesh)
+            raws = []
+            for cc in cals:
+                cj = jax.jit(cc.fn, in_shardings=cc.in_shardings,
+                             out_shardings=cc.out_shardings
+                             ).lower(*cc.args).compile()
+                raws.append(raw_costs(cj))
+            L = get_arch(arch_id).full().n_layers
+            costs = extrapolate(raws[0], raws[1], 2, 4, L)
+        report = analyze_compiled(compiled, arch=arch_id, shape=shape_name,
+                                  n_chips=n_chips,
+                                  model_flops=cell.model_flops_per_step,
+                                  costs=costs)
+        mem = None
+        try:
+            mem = compiled.memory_analysis()
+        except Exception:
+            pass
+    row = report.row()
+    row.update({
+        "kind": cell.kind, "multi_pod": multi_pod, "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "note": cell.note,
+        "memory_analysis": repr(mem) if mem is not None else None,
+    })
+    if verbose:
+        print(f"[{arch_id} x {shape_name}] mesh={tuple(mesh.shape.values())} "
+              f"kind={cell.kind} compile={t_compile:.1f}s")
+        if mem is not None:
+            print(f"  memory_analysis: {mem}")
+        print(f"  cost: flops={row['hlo_flops']:.3e} "
+              f"bytes={row['hlo_flops']:.3e} coll={row['coll_breakdown']}")
+        print(f"  roofline: compute={row['compute_s']:.3e}s "
+              f"memory={row['memory_s']:.3e}s "
+              f"collective={row['collective_s']:.3e}s "
+              f"dominant={row['dominant']} "
+              f"frac={row['roofline_fraction']:.3f}")
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    rows = []
+    failures = 0
+    for arch_id, shape_name in cells:
+        for mp in meshes:
+            try:
+                rows.append(run_cell(arch_id, shape_name, multi_pod=mp))
+            except Exception as e:  # a failing cell is a bug in the system
+                failures += 1
+                traceback.print_exc()
+                rows.append({"arch": arch_id, "shape": shape_name,
+                             "multi_pod": mp, "status": "FAIL",
+                             "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print(f"wrote {len(rows)} rows -> {args.out}")
+    print(f"{len(rows) - failures}/{len(rows)} cells OK")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

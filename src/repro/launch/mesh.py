@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  Single pod: 16x16 = 256 chips (TPU v5e pod);
+multi-pod: 2 x 16 x 16 = 512 chips with a leading "pod" axis (DCN between
+pods, ICI within).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The batch-sharding axes: ('pod','data') on multi-pod, ('data',) else."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over real local devices (CPU tests)."""
+    import numpy as np
+    devs = np.asarray(jax.devices()[: n_data * n_model])
+    return jax.sharding.Mesh(devs.reshape(n_data, n_model), ("data", "model"))

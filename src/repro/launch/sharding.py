@@ -1,0 +1,178 @@
+"""Parameter / activation sharding rules (FSDP + tensor parallel).
+
+Generic rule per parameter leaf: assign the "model" mesh axis to the largest
+divisible dim, then the "data" axis to the next (FSDP-style weight sharding);
+stacked-layer leading dims (scan) are never sharded.  Path-based overrides
+implement expert parallelism for MoE weights and vocab-parallel embeddings.
+On the multi-pod mesh, the "pod" axis joins batch sharding only (weights are
+replicated across pods; gradients reduce over DCN once per step).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               stacked: bool) -> P:
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    ndim = len(shape)
+    start = 1 if (stacked and ndim >= 2) else 0
+    assign: list = [None] * ndim
+
+    # ---- overrides ----------------------------------------------------
+    # int8 optimizer moments [..., nb, bs] (+ scales [..., nb, 1]): inherit
+    # the parent parameter's spec (leading dims identical; the split last
+    # dim's axis moves to the nb dim when divisibility allows)
+    if path.endswith("['q']") or path.endswith("['s']"):
+        if ndim < 2:
+            return P()
+        parent_path = path[: path.rfind("[")]
+        nb = shape[-2]
+        if path.endswith("['q']"):
+            parent_shape = shape[:-2] + (shape[-2] * shape[-1],)
+        else:
+            parent_shape = shape[:-2] + (nb,)  # scale: block count only
+        pspec = _leaf_spec(parent_path, parent_shape, mesh, stacked)
+        entries = list(pspec) + [None] * (len(parent_shape) - len(pspec))
+        last_axis = entries[-1]
+        sz = 1
+        if last_axis is not None:
+            names = last_axis if isinstance(last_axis, tuple) else (last_axis,)
+            for nm in names:
+                sz *= _axis_size(mesh, nm)
+        assign = entries[:-1] + [last_axis if (last_axis and nb % sz == 0)
+                                 else None, None]
+        return P(*assign[:ndim])
+    if ("moe" in path and any(f"'{k}'" in path for k in ("wi", "wg", "wo"))
+            and ndim == 4):
+        # stacked expert weights [L, E, a, b]
+        L, E, a, b = shape
+        if E % model == 0:
+            # expert parallelism over model + ZeRO-3 over data: the per-layer
+            # slice is all-gathered just-in-time inside the layer scan
+            assign[1] = "model"
+            if a % data == 0:
+                assign[2] = "data"
+        else:
+            # tensor-parallel experts (e.g. 60 experts vs 16-way model axis)
+            if "'wo'" in path:       # [L, E, F, D]: row-parallel
+                if a % model == 0:
+                    assign[2] = "model"
+                if b % data == 0:
+                    assign[3] = "data"
+            else:                    # [L, E, D, F]: column-parallel
+                if a % data == 0:
+                    assign[2] = "data"
+                if b % model == 0:
+                    assign[3] = "model"
+        return P(*assign)
+    if "lm_head" in path:
+        if ndim >= 2:  # [D, V]: vocab-parallel output head
+            D, V = shape[-2], shape[-1]
+            if V % model == 0:
+                assign[ndim - 1] = "model"
+            if D % data == 0:
+                assign[ndim - 2] = "data"
+            return P(*assign)
+    if "embed" in path or "items" in path:
+        if ndim >= 2:  # [V, D]
+            V, D = shape[-2], shape[-1]
+            if V % model == 0:
+                assign[ndim - 2] = "model"
+            if D % data == 0:
+                assign[ndim - 1] = "data"
+            return P(*assign)
+    # Megatron column/row parallel for transformer projections: inputs of
+    # up-projections FSDP over data (cheap weight all-gather), outputs over
+    # model; down-projections ('wo') the reverse (row-parallel).
+    if ndim - start == 2:
+        a, b = ndim - 2, ndim - 1
+        if any(f"'{n}'" in path for n in ("wq", "wk", "wv", "wi", "wg",
+                                          "router", "down", "rbf_proj")):
+            if shape[a] % data == 0:
+                assign[a] = "data"
+            if shape[b] % model == 0:
+                assign[b] = "model"
+            return P(*assign)
+        if "'wo'" in path or "'out_proj'" in path:
+            if shape[a] % model == 0:
+                assign[a] = "model"
+            if shape[b] % data == 0:
+                assign[b] = "data"
+            return P(*assign)
+
+    # ---- generic 2D+ rule ---------------------------------------------
+    if ndim - start >= 2:
+        dims = list(range(start, ndim))
+        # model axis -> largest divisible dim; data -> next largest
+        by_size = sorted(dims, key=lambda d: -shape[d])
+        for d in by_size:
+            if shape[d] % model == 0:
+                assign[d] = "model"
+                break
+        for d in by_size:
+            if assign[d] is None and shape[d] % data == 0:
+                assign[d] = "data"
+                break
+        return P(*assign)
+    return P()  # vectors / norms replicated
+
+
+def params_shardings(params: Any, mesh: Mesh, stacked_key: str = "layers"
+                     ) -> Any:
+    """Pytree of NamedSharding matching ``params``."""
+    def one(path, leaf):
+        keystr = jax.tree_util.keystr(path)
+        stacked = stacked_key in keystr
+        spec = _leaf_spec(keystr, tuple(leaf.shape), mesh, stacked)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, ndim: int, batch_dim: int = 0) -> NamedSharding:
+    """Shard dim ``batch_dim`` over the pod+data axes; rest replicated."""
+    spec: list = [None] * ndim
+    spec[batch_dim] = data_axes(mesh)
+    return NamedSharding(mesh, P(*spec))
+
+
+def dim_sharding(mesh: Mesh, ndim: int, assignments: dict) -> NamedSharding:
+    """assignments: {dim_index: axis or tuple-of-axes}; validated lazily."""
+    spec: list = [None] * ndim
+    for d, a in assignments.items():
+        spec[d] = a
+    return NamedSharding(mesh, P(*spec))
+
+
+def kv_cache_shardings(mesh: Mesh, cfg, batch: int, max_len: int):
+    """Cache [L, B, Hkv, S, Dh]: batch over data axes when divisible, else
+    the sequence dim shards over every available axis (split-KV decode)."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    model = _axis_size(mesh, "model")
+    if batch % dsize == 0:
+        # batch over data; sequence over model (flash-decoding split-KV)
+        spec_kv = P(None, daxes, None, "model" if max_len % model == 0 else None, None)
+        spec_len = P(daxes)
+    else:
+        all_axes = tuple(list(daxes) + (["model"] if model > 1 else []))
+        spec_kv = P(None, None, None, all_axes, None)
+        spec_len = P()
+    return {"k": NamedSharding(mesh, spec_kv),
+            "v": NamedSharding(mesh, spec_kv),
+            "len": NamedSharding(mesh, spec_len)}

@@ -1,0 +1,499 @@
+"""Per-(arch x shape) lowering cells: step fn + ShapeDtypeStruct inputs +
+shardings.  This is the single source of truth the dry-run, the roofline
+analysis and the perf loop all consume.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.shapes import (
+    GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES, GNNShape, LMShape, RecsysShape,
+)
+from repro.graphops.sampler import max_subgraph_size
+from repro.launch.mesh import data_axes
+from repro.launch.sharding import (
+    batch_sharding, kv_cache_shardings, params_shardings, replicated,
+)
+from repro.models import transformer as tfm
+from repro.models.gnn import dimenet as dn
+from repro.models.gnn import mace as mc
+from repro.models.gnn import nequip as nq
+from repro.models.gnn import pna as pn
+from repro.models.gnn.graphdata import GraphBatch
+from repro.models.recsys import mind as mi
+from repro.train import optimizer as opt
+from repro.train.trainer import TrainState, init_train_state, make_train_step
+from repro.utils import round_up
+
+I32 = jnp.int32
+F32 = jnp.float32
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass
+class LoweringCell:
+    arch_id: str
+    shape_name: str
+    kind: str                      # train | prefill | decode | serve | ...
+    fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    model_flops_per_step: float    # 6*N*D (dense) / 6*N_active*D (MoE)
+    note: str = ""
+
+
+def _eval_shape(fn, *a, **k):
+    return jax.eval_shape(fn, *a, **k)
+
+
+def _shard_like(tree, mesh):
+    return params_shardings(tree, mesh)
+
+
+def _adam_cfg(arch_id: str) -> opt.AdamWConfig:
+    bits = 8 if arch_id == "qwen3-moe-235b-a22b" else 32
+    return opt.AdamWConfig(state_bits=bits)
+
+
+# =============================================================== LM family
+
+def _lm_state_specs(cfg, ocfg, mesh):
+    params_sds = _eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0),
+                                                     cfg))
+    state_sds = _eval_shape(lambda: init_train_state(
+        jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                               params_sds), ocfg))
+    shard = TrainState(
+        params=_shard_like(state_sds.params, mesh),
+        opt_state=opt.AdamState(
+            step=replicated(mesh),
+            m=_shard_like(state_sds.opt_state.m, mesh),
+            v=_shard_like(state_sds.opt_state.v, mesh)),
+        ef=None)
+    return state_sds, shard
+
+
+def _lm_model_flops(cfg, B: int, S: int, kind: str) -> float:
+    """6ND (train) / 2ND (inference) + causal attention term."""
+    n = cfg.active_param_count()
+    L, Hq, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    if kind == "decode":
+        # one token against an S-long cache per layer (QK^T + PV)
+        return 2.0 * n * B + 4.0 * B * Hq * S * Dh * L
+    attn_fwd = 2.0 * B * Hq * float(S) * S * Dh * L  # causal half included
+    if kind == "train":
+        return 6.0 * n * B * S + 3.0 * attn_fwd
+    return 2.0 * n * B * S + attn_fwd
+
+
+def lm_cell(arch_id: str, shape: LMShape, shape_name: str, mesh: Mesh,
+            cfg_override=None) -> LoweringCell:
+    import dataclasses
+    spec = get_arch(arch_id)
+    cfg = cfg_override if cfg_override is not None else spec.full()
+    daxes = data_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    # layer-boundary activations: batch over data axes, d_model over model
+    dspec = daxes[0] if len(daxes) == 1 else daxes
+    if shape.kind in ("train", "prefill") and S % mesh.shape["model"] == 0:
+        # Megatron-style sequence parallelism: layer-boundary activations
+        # shard S over the model axis, so norms/residuals are comm-free and
+        # the per-layer boundary collectives become bf16 ag/rs of [B,S,D]/mp
+        # instead of repeated full-activation f32 gathers (see perf log)
+        cfg = dataclasses.replace(cfg, act_pspec=(dspec, "model", None))
+    elif (shape.kind in ("train", "prefill")
+          and cfg.d_model % mesh.shape["model"] == 0):
+        cfg = dataclasses.replace(cfg, act_pspec=(dspec, None, "model"))
+    # context-parallel attention when heads don't divide the model axis
+    # (head-sharding would replicate; see attention.context_parallel_attention)
+    dp_total = int(np.prod([mesh.shape[a] for a in daxes]))
+    if (shape.kind in ("train", "prefill")
+            and cfg.n_heads % mesh.shape["model"] != 0
+            and S % mesh.shape["model"] == 0 and B % dp_total == 0):
+        cfg = dataclasses.replace(cfg, cp_mesh=mesh, cp_data_axes=daxes)
+    if cfg.moe is not None:
+        mp = mesh.shape["model"]
+        dp = int(np.prod([mesh.shape[a] for a in daxes]))
+        T_l = (B // dp) * S if shape.kind in ("train", "prefill") else 0
+        if shape.kind in ("train", "prefill") and T_l % mp == 0:
+            # explicit shard_map expert parallelism (all-to-all dispatch);
+            # expert axis padded up to a mesh-divisible size when needed
+            # (Qwen2: 60 -> 64; 4 dead experts, router-masked) and
+            # sequence-sharded in/out when the boundary constraint is SP
+            e_alloc = ((cfg.moe.n_experts + mp - 1) // mp) * mp
+            seq_sh = (cfg.act_pspec is not None
+                      and cfg.act_pspec[1] == "model")
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(
+                    cfg.moe, mesh=mesh, data_axes=daxes, model_axis="model",
+                    seq_sharded=seq_sh,
+                    n_experts_alloc=(e_alloc if e_alloc != cfg.moe.n_experts
+                                     else 0)))
+        else:
+            # pjit path (tiny decode batches)
+            ep = "model" if cfg.moe.e_alloc % mp == 0 else None
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(
+                    cfg.moe, dispatch_pspec=(ep, dspec, None)))
+
+    if shape.kind == "train":
+        ocfg = _adam_cfg(arch_id)
+        state_sds, state_shard = _lm_state_specs(cfg, ocfg, mesh)
+        loss_fn = lambda p, b: tfm.lm_loss(p, b["tokens"], b["targets"], cfg)
+        step = make_train_step(loss_fn, ocfg)
+        batch_sds = {"tokens": SDS((B, S), I32), "targets": SDS((B, S), I32)}
+        bshard = {k: batch_sharding(mesh, 2) for k in batch_sds}
+        out_shard = (state_shard, {"loss": replicated(mesh),
+                                   "lr": replicated(mesh),
+                                   "gnorm": replicated(mesh)})
+        return LoweringCell(
+            arch_id, shape_name, "train", step, (state_sds, batch_sds),
+            (state_shard, bshard), out_shard,
+            model_flops_per_step=_lm_model_flops(cfg, B, S, "train"))
+
+    params_sds = _eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0),
+                                                     cfg))
+    pshard = _shard_like(params_sds, mesh)
+
+    if shape.kind == "prefill":
+        fn = partial(tfm.prefill, cfg=cfg, max_len=S)
+        toks = SDS((B, S), I32)
+        cache_shard = kv_cache_shardings(mesh, cfg, B, S)
+        out_shard = (batch_sharding(mesh, 2), cache_shard)
+        return LoweringCell(
+            arch_id, shape_name, "prefill",
+            lambda p, t: fn(p, t), (params_sds, toks),
+            (pshard, batch_sharding(mesh, 2)), out_shard,
+            model_flops_per_step=_lm_model_flops(cfg, B, S, "prefill"))
+
+    # decode: one token against a seq_len cache
+    cache_sds = _eval_shape(lambda: tfm.init_kv_cache(cfg, B, S))
+    cache_shard = kv_cache_shardings(mesh, cfg, B, S)
+    tok = SDS((B,), I32)
+    tok_shard = (batch_sharding(mesh, 1)
+                 if B % int(np.prod([mesh.shape[a] for a in daxes])) == 0
+                 else replicated(mesh))
+    fn = lambda p, t, c: tfm.decode_step(p, t, c, cfg)
+    out_shard = (tok_shard if B > 1 else replicated(mesh), cache_shard)
+    # logits out: [B, V] — reuse batch sharding when divisible
+    logits_shard = (batch_sharding(mesh, 2)
+                    if B % int(np.prod([mesh.shape[a] for a in daxes])) == 0
+                    else replicated(mesh))
+    out_shard = (logits_shard, cache_shard)
+    return LoweringCell(
+        arch_id, shape_name, "decode", fn, (params_sds, tok, cache_sds),
+        (pshard, tok_shard, cache_shard), out_shard,
+        model_flops_per_step=_lm_model_flops(cfg, B, S, "decode"),
+        note="split-KV sequence-sharded cache" if B == 1 else "")
+
+
+# =============================================================== GNN family
+
+def _graph_specs(shape: GNNShape, *, geometric: bool, d_feat_molecule: int,
+                 pad_to: int, with_labels_dtype=I32):
+    """ShapeDtypeStructs for a GraphBatch at a given shape."""
+    if shape.kind == "sampled":
+        n, e = max_subgraph_size(shape.batch_nodes, shape.fanout)
+        d_feat = 602  # reddit-style features for the sampled regime
+        G = 1
+    elif shape.kind == "batched":
+        n = shape.n_nodes * shape.batch_graphs
+        e = shape.n_edges * shape.batch_graphs
+        d_feat = d_feat_molecule
+        G = shape.batch_graphs
+    else:
+        n, e = shape.n_nodes, shape.n_edges
+        d_feat = shape.d_feat
+        G = 1
+    N = round_up(n, pad_to)
+    E = round_up(e, pad_to)
+    feat = SDS((N,), I32) if geometric else SDS((N, d_feat), F32)
+    gb = GraphBatch(
+        node_feat=feat,
+        edge_src=SDS((E,), I32), edge_dst=SDS((E,), I32),
+        edge_mask=SDS((E,), jnp.bool_), node_mask=SDS((N,), jnp.bool_),
+        graph_id=SDS((N,), I32),
+        positions=SDS((N, 3), F32) if geometric else None,
+        labels=SDS((N,), with_labels_dtype))
+    return gb, N, E, G, d_feat
+
+
+def _graph_shardings(gb_sds: GraphBatch, mesh: Mesh) -> GraphBatch:
+    """Nodes and edges shard over every mesh axis (graph partitioning)."""
+    axes = tuple(mesh.axis_names)
+    def sh(sds):
+        if sds is None:
+            return None
+        spec = [None] * len(sds.shape)
+        spec[0] = axes
+        return NamedSharding(mesh, P(*spec))
+    return GraphBatch(
+        node_feat=sh(gb_sds.node_feat), edge_src=sh(gb_sds.edge_src),
+        edge_dst=sh(gb_sds.edge_dst), edge_mask=sh(gb_sds.edge_mask),
+        node_mask=sh(gb_sds.node_mask), graph_id=sh(gb_sds.graph_id),
+        positions=sh(gb_sds.positions), labels=sh(gb_sds.labels))
+
+
+def _gnn_param_flops(params_sds) -> float:
+    return sum(math.prod(x.shape) for x in
+               jax.tree_util.tree_leaves(params_sds)
+               if hasattr(x, "shape"))
+
+
+def _gnn_model_flops(arch_id: str, cfg, N: int, E: int, T: int = 0) -> float:
+    """Analytic forward MACs*2; training multiplies by 3 (fwd + 2x bwd)."""
+    if arch_id == "pna":
+        h = cfg.d_hidden
+        per_layer = 2 * E * 3 * h * h + 2 * N * 12 * h * h
+        fwd = cfg.n_layers * per_layer + 2 * N * cfg.d_in * h \
+            + 2 * N * (h * h + h * cfg.n_classes)
+        return 3.0 * fwd
+    if arch_id == "dimenet":
+        h, nb = cfg.d_hidden, cfg.n_bilinear
+        S = cfg.n_spherical * cfg.n_radial
+        per_block = 2 * T * nb * h * (S + 1) + 2 * E * 6 * h * h
+        fwd = cfg.n_blocks * per_block + 2 * E * 3 * h * h
+        return 3.0 * fwd
+    if arch_id in ("nequip", "mace"):
+        from repro.models.gnn.irreps import valid_paths
+        M = cfg.d_hidden
+        paths = valid_paths(cfg.ls, cfg.ls, cfg.ls)
+        tp = sum(2 * M * (2 * a + 1) * (2 * b + 1) * (2 * c + 1)
+                 for a, b, c in paths)
+        dsum = sum(2 * l + 1 for l in cfg.ls)
+        per_layer = E * tp + 2 * E * (cfg.n_rbf * 32 + 32 * len(paths) * M) \
+            + 2 * N * 2 * M * M * dsum
+        if arch_id == "mace":
+            per_layer += (cfg.correlation_order - 1) * N * tp \
+                + cfg.correlation_order * 2 * N * M * M * dsum
+        fwd = cfg.n_layers * per_layer + 2 * N * M * M * dsum
+        return 3.0 * fwd
+    raise KeyError(arch_id)
+
+
+def gnn_cell(arch_id: str, shape: GNNShape, shape_name: str, mesh: Mesh
+             ) -> LoweringCell:
+    spec = get_arch(arch_id)
+    pad = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    pad = max(pad, 512)
+    geometric = arch_id in ("nequip", "mace", "dimenet")
+    ocfg = opt.AdamWConfig()
+
+    if arch_id == "pna":
+        gb_sds, N, E, G, d_feat = _graph_specs(shape, geometric=False,
+                                               d_feat_molecule=16, pad_to=pad)
+        graph_level = shape.kind == "batched"
+        # bf16 hidden state on huge graphs halves the replicated edge-message
+        # buffers SPMD materializes around segment scatters (see perf log)
+        dt = jnp.bfloat16 if E > 10_000_000 else jnp.float32
+        cfg = pn.PNAConfig(name="pna", n_layers=4, d_hidden=75, d_in=d_feat,
+                           n_classes=47, avg_degree=max(E / max(N, 1), 1.0),
+                           graph_level=graph_level, n_graphs=G, dtype=dt,
+                           # explicit dst-partitioned aggregation (shard_map):
+                           # SPMD replicates data-dependent scatters otherwise
+                           mesh=mesh, shard_axes=tuple(mesh.axis_names))
+        if graph_level:
+            def loss_fn(p, b):
+                logits = pn.forward(p, b["graph"], cfg).astype(jnp.float32)
+                tg = b["targets"]
+                logz = jax.nn.logsumexp(logits, -1)
+                gold = jnp.take_along_axis(logits, tg[:, None], -1)[:, 0]
+                return jnp.mean(logz - gold)
+            targets_sds = SDS((G,), I32)
+        else:
+            loss_fn = lambda p, b: pn.loss_fn(p, b["graph"], cfg)
+            targets_sds = SDS((1,), I32)  # labels live in the GraphBatch
+        params_sds = _eval_shape(
+            lambda: pn.init_params(jax.random.PRNGKey(0), cfg))
+        extra = {}
+    elif arch_id == "dimenet":
+        gb_sds, N, E, G, _ = _graph_specs(shape, geometric=True,
+                                          d_feat_molecule=0, pad_to=pad)
+        # triplet view capacity: molecule graphs are dense (8x), huge graphs
+        # use a sampled 2x cap (documented in DESIGN.md)
+        t_cap = round_up(E * (8 if E < 10_000_000 else 2), pad)
+        cfg = dn.DimeNetConfig(name="dimenet", n_blocks=6, d_hidden=128,
+                               n_bilinear=8, n_spherical=7, n_radial=6,
+                               cutoff=5.0, n_types=64, graph_level=True,
+                               n_graphs=G)
+        trip_sds = (SDS((t_cap,), I32), SDS((t_cap,), I32),
+                    SDS((t_cap,), jnp.bool_))
+        loss_fn = lambda p, b: dn.energy_loss(p, b["graph"], cfg,
+                                              b["triplets"], b["targets"])
+        targets_sds = SDS((G,), F32)
+        params_sds = _eval_shape(
+            lambda: dn.init_params(jax.random.PRNGKey(0), cfg))
+        extra = {"triplets": trip_sds}
+    elif arch_id == "nequip":
+        gb_sds, N, E, G, _ = _graph_specs(shape, geometric=True,
+                                          d_feat_molecule=0, pad_to=pad)
+        cfg = nq.NequIPConfig(name="nequip", n_layers=5, d_hidden=32,
+                              l_max=2, n_rbf=8, cutoff=5.0, n_types=64,
+                              n_graphs=G)
+        loss_fn = lambda p, b: nq.energy_loss(p, b["graph"], cfg,
+                                              b["targets"])
+        targets_sds = SDS((G,), F32)
+        params_sds = _eval_shape(
+            lambda: nq.init_params(jax.random.PRNGKey(0), cfg))
+        extra = {}
+    elif arch_id == "mace":
+        gb_sds, N, E, G, _ = _graph_specs(shape, geometric=True,
+                                          d_feat_molecule=0, pad_to=pad)
+        cfg = mc.MACEConfig(name="mace", n_layers=2, d_hidden=128, l_max=2,
+                            correlation_order=3, n_rbf=8, cutoff=5.0,
+                            n_types=64, n_graphs=G)
+        loss_fn = lambda p, b: mc.energy_loss(p, b["graph"], cfg,
+                                              b["targets"])
+        targets_sds = SDS((G,), F32)
+        params_sds = _eval_shape(
+            lambda: mc.init_params(jax.random.PRNGKey(0), cfg))
+        extra = {}
+    else:
+        raise KeyError(arch_id)
+
+    state_sds = _eval_shape(lambda: init_train_state(
+        jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                               params_sds), ocfg))
+    state_shard = TrainState(
+        params=jax.tree_util.tree_map(lambda _: replicated(mesh),
+                                      state_sds.params),
+        opt_state=opt.AdamState(
+            step=replicated(mesh),
+            m=jax.tree_util.tree_map(lambda _: replicated(mesh),
+                                     state_sds.opt_state.m),
+            v=jax.tree_util.tree_map(lambda _: replicated(mesh),
+                                     state_sds.opt_state.v)),
+        ef=None)
+    batch_sds = {"graph": gb_sds, "targets": targets_sds, **extra}
+    gshard = _graph_shardings(gb_sds, mesh)
+    bshard = {"graph": gshard, "targets": replicated(mesh)}
+    if "triplets" in extra:
+        taxes = tuple(mesh.axis_names)
+        tsh = NamedSharding(mesh, P(taxes))
+        bshard["triplets"] = (tsh, tsh, tsh)
+    step = make_train_step(loss_fn, ocfg)
+    out_shard = (state_shard, {"loss": replicated(mesh),
+                               "lr": replicated(mesh),
+                               "gnorm": replicated(mesh)})
+    N_pad = gb_sds.node_feat.shape[0]
+    E_pad = gb_sds.edge_src.shape[0]
+    T_pad = extra["triplets"][0].shape[0] if "triplets" in extra else 0
+    flops = _gnn_model_flops(arch_id, cfg, N_pad, E_pad, T_pad)
+    return LoweringCell(arch_id, shape_name, "train", step,
+                        (state_sds, batch_sds), (state_shard, bshard),
+                        out_shard, model_flops_per_step=flops)
+
+
+# ============================================================ recsys family
+
+def recsys_cell(arch_id: str, shape: RecsysShape, shape_name: str, mesh: Mesh
+                ) -> LoweringCell:
+    spec = get_arch(arch_id)
+    cfg = spec.full()
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    params_sds = _eval_shape(lambda: mi.init_params(jax.random.PRNGKey(0),
+                                                    cfg))
+    pshard = _shard_like(params_sds, mesh)
+    L = cfg.hist_len
+    flops_base = 2.0 * cfg.embed_dim * cfg.n_interests
+
+    if shape.kind == "train":
+        import dataclasses
+        B = shape.batch
+        cfg = dataclasses.replace(
+            cfg, logits_pspec=(daxes[0] if len(daxes) == 1 else daxes, None))
+        ocfg = opt.AdamWConfig()
+        state_sds = _eval_shape(lambda: init_train_state(
+            jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                   params_sds), ocfg))
+        state_shard = TrainState(
+            params=pshard,
+            opt_state=opt.AdamState(
+                step=replicated(mesh),
+                m=_shard_like(state_sds.opt_state.m, mesh),
+                v=_shard_like(state_sds.opt_state.v, mesh)),
+            ef=None)
+        batch_sds = {"hist": SDS((B, L), I32),
+                     "hist_mask": SDS((B, L), jnp.bool_),
+                     "target": SDS((B,), I32)}
+        bshard = {"hist": batch_sharding(mesh, 2),
+                  "hist_mask": batch_sharding(mesh, 2),
+                  "target": batch_sharding(mesh, 1)}
+        step = make_train_step(lambda p, b: mi.train_loss(p, b, cfg), ocfg)
+        out_shard = (state_shard, {"loss": replicated(mesh),
+                                   "lr": replicated(mesh),
+                                   "gnorm": replicated(mesh)})
+        return LoweringCell(arch_id, shape_name, "train", step,
+                            (state_sds, batch_sds), (state_shard, bshard),
+                            out_shard,
+                            model_flops_per_step=6.0 * B * (
+                                L * cfg.embed_dim ** 2 + B * cfg.embed_dim))
+
+    if shape.kind == "serve":
+        B, C = shape.batch, shape.n_candidates
+        fn = lambda p, h, m, c: mi.score_candidates(p, h, m, c, cfg)
+        args = (params_sds, SDS((B, L), I32), SDS((B, L), jnp.bool_),
+                SDS((B, C), I32))
+        in_sh = (pshard, batch_sharding(mesh, 2), batch_sharding(mesh, 2),
+                 batch_sharding(mesh, 2))
+        return LoweringCell(arch_id, shape_name, "serve", fn, args, in_sh,
+                            batch_sharding(mesh, 2),
+                            model_flops_per_step=2.0 * B * (
+                                L * cfg.embed_dim ** 2
+                                + C * cfg.n_interests * cfg.embed_dim))
+
+    # retrieval: 1 user x n_candidates
+    C = shape.n_candidates
+    Cpad = round_up(C, dsize)
+    fn = lambda p, h, m, c: mi.retrieval_scores(p, h, m, cfg, c)
+    args = (params_sds, SDS((1, L), I32), SDS((1, L), jnp.bool_),
+            SDS((Cpad,), I32))
+    cand_shard = NamedSharding(mesh, P(daxes))
+    in_sh = (pshard, replicated(mesh), replicated(mesh), cand_shard)
+    return LoweringCell(arch_id, shape_name, "retrieval", fn, args, in_sh,
+                        cand_shard,
+                        model_flops_per_step=2.0 * C * cfg.n_interests
+                        * cfg.embed_dim)
+
+
+# ==================================================================== entry
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh) -> LoweringCell:
+    spec = get_arch(arch_id)
+    if spec.family == "lm":
+        return lm_cell(arch_id, LM_SHAPES[shape_name], shape_name, mesh)
+    if spec.family == "gnn":
+        return gnn_cell(arch_id, GNN_SHAPES[shape_name], shape_name, mesh)
+    return recsys_cell(arch_id, RECSYS_SHAPES[shape_name], shape_name, mesh)
+
+
+def calibration_cells(arch_id: str, shape_name: str, mesh: Mesh,
+                      layers=(2, 4)):
+    """Small fully-unrolled LM variants for loop-exact cost extrapolation.
+
+    XLA's cost_analysis counts while-loop bodies once; compiling the same
+    cell at L=2 and L=4 with unrolled scans gives exact per-layer costs:
+      est(L) = c2 + (L - 2) / 2 * (c4 - c2).
+    """
+    import dataclasses
+    spec = get_arch(arch_id)
+    if spec.family != "lm":
+        return None  # GNN/recsys models unroll naturally (python loops)
+    out = []
+    for L in layers:
+        small = dataclasses.replace(spec.full(), n_layers=L,
+                                    unroll_scans=True)
+        out.append(lm_cell(arch_id, LM_SHAPES[shape_name], shape_name, mesh,
+                           cfg_override=small))
+    return out

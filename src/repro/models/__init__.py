@@ -1,0 +1,2 @@
+"""Model zoo: LM transformers (dense + MoE), GNNs, recsys — pure-functional
+JAX modules (init_fn / apply_fn over parameter pytrees)."""

@@ -1,0 +1,96 @@
+"""Shared functional layers: linear, norms, RoPE, embeddings, MLP."""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None,
+               bias: bool = False, dtype=jnp.float32) -> Params:
+    scale = scale if scale is not None else (1.0 / (d_in ** 0.5))
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b"]).astype(x.dtype)
+
+
+def mlp_init(key, dims: Sequence[int], *, bias: bool = True,
+             dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": dense_init(k, dims[i], dims[i + 1], bias=bias, dtype=dtype)
+            for i, k in enumerate(keys)}
+
+
+def mlp(p: Params, x: jax.Array, act=jax.nn.silu) -> jax.Array:
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x)
+        if i < n - 1:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------- RoPE
+
+def rope_frequencies(head_dim: int, max_pos: int, theta: float = 10000.0):
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)                       # [max_pos, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               positions: jax.Array) -> jax.Array:
+    """x: [..., S, D]; positions: broadcastable to [..., S] int32."""
+    c = cos[positions]                              # [..., S, D/2]
+    s = sin[positions]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out1 = x1 * c - x2 * s
+    out2 = x2 * c + x1 * s
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

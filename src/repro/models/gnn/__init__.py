@@ -1,0 +1,1 @@
+"""GNN model zoo: PNA, DimeNet, NequIP, MACE over the segment-op substrate."""

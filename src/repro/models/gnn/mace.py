@@ -1,0 +1,154 @@
+"""MACE: higher-order equivariant message passing [arXiv:2206.07697].
+
+Each layer builds the one-particle A-basis (NequIP-style edge tensor-product
+aggregation), then the higher-order B-basis by channel-wise CG self-products
+up to ``correlation_order`` (A, A⊗A, (A⊗A)⊗A), linearly recombined into
+messages.  Two layers suffice because the correlation-3 products capture
+many-body terms that deep 2-body nets need depth for.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, mlp, mlp_init
+from repro.models.gnn.graphdata import GraphBatch
+from repro.models.gnn.irreps import (
+    IrrepFeat, cg_real, irrep_linear, irrep_linear_init, norm_squared,
+    spherical_harmonics, valid_paths,
+)
+from repro.models.gnn.radial import bessel_rbf, poly_envelope, safe_norm
+
+
+@dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128
+    l_max: int = 2
+    correlation_order: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_types: int = 16
+    n_graphs: int = 1
+    dtype: object = jnp.float32
+
+    @property
+    def ls(self) -> Tuple[int, ...]:
+        return tuple(range(self.l_max + 1))
+
+
+def _edge_paths(cfg: MACEConfig):
+    return valid_paths(cfg.ls, cfg.ls, cfg.ls)
+
+
+def _product_paths(cfg: MACEConfig):
+    """Channel-wise CG paths for A (x) A -> l3."""
+    return valid_paths(cfg.ls, cfg.ls, cfg.ls)
+
+
+def init_params(key, cfg: MACEConfig) -> Params:
+    M = cfg.d_hidden
+    ep = _edge_paths(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[i], 2 + cfg.correlation_order)
+        layers.append({
+            "radial": mlp_init(ks[0], [cfg.n_rbf, 32, len(ep) * M],
+                               dtype=cfg.dtype),
+            # one linear recombination per correlation order
+            "combine": [irrep_linear_init(ks[1 + c], cfg.ls, M, M, cfg.dtype)
+                        for c in range(cfg.correlation_order)],
+            "self": irrep_linear_init(ks[-1], cfg.ls, M, M, cfg.dtype),
+        })
+    return {
+        "embed": jax.random.normal(keys[-2], (cfg.n_types, M), cfg.dtype) * 0.5,
+        "layers": layers,
+        "head": mlp_init(keys[-1], [M * (cfg.l_max + 1), 64, 1],
+                         dtype=cfg.dtype),
+    }
+
+
+def _a_basis(lp, h, sh, rbf, gb, cfg) -> IrrepFeat:
+    """One-particle basis: aggregate weighted (h_src ⊗ Y) per destination."""
+    paths = _edge_paths(cfg)
+    M = cfg.d_hidden
+    w = mlp(lp["radial"], rbf, act=jax.nn.silu) * gb.edge_mask[:, None]
+    w = w.reshape(-1, len(paths), M)
+    feat_src = {l: x[gb.edge_src] for l, x in h.items()}
+    msg: IrrepFeat = {}
+    for pi, (l1, l2, l3) in enumerate(paths):
+        C, ok = cg_real(l1, l2, l3)
+        if not ok:
+            continue
+        Cj = jnp.asarray(C, cfg.dtype)
+        term = jnp.einsum("emi,euj,ijk->emk", feat_src[l1], sh[l2], Cj)
+        msg[l3] = msg.get(l3, 0.0) + term * w[:, pi, :, None]
+    return {l: jax.ops.segment_sum(x, gb.edge_dst, gb.n_nodes)
+            for l, x in msg.items()}
+
+
+def _channel_product(a: IrrepFeat, b: IrrepFeat, cfg: MACEConfig) -> IrrepFeat:
+    """Channel-wise CG product (same multiplicity index on both sides)."""
+    out: IrrepFeat = {}
+    for (l1, l2, l3) in _product_paths(cfg):
+        if l1 not in a or l2 not in b:
+            continue
+        C, ok = cg_real(l1, l2, l3)
+        if not ok:
+            continue
+        Cj = jnp.asarray(C, cfg.dtype)
+        term = jnp.einsum("nmi,nmj,ijk->nmk", a[l1], b[l2], Cj)
+        out[l3] = out.get(l3, 0.0) + term
+    return out
+
+
+def forward(params: Params, gb: GraphBatch, cfg: MACEConfig) -> jax.Array:
+    assert gb.positions is not None
+    pos = gb.positions.astype(cfg.dtype)
+    d_vec = pos[gb.edge_dst] - pos[gb.edge_src]
+    r = safe_norm(d_vec)
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff) \
+        * poly_envelope(r, cfg.cutoff)[:, None]
+    sh = spherical_harmonics(d_vec, cfg.l_max)
+
+    M = cfg.d_hidden
+    N = gb.n_nodes
+    h: IrrepFeat = {0: params["embed"][gb.node_feat][:, :, None]}
+    for l in range(1, cfg.l_max + 1):
+        h[l] = jnp.zeros((N, M, 2 * l + 1), cfg.dtype)
+
+    for lp in params["layers"]:
+        A = _a_basis(lp, h, sh, rbf, gb, cfg)
+        for l in range(cfg.l_max + 1):
+            A.setdefault(l, jnp.zeros((N, M, 2 * l + 1), cfg.dtype))
+        # B-basis: correlation products A, A⊗A, (A⊗A)⊗A ...
+        msg: IrrepFeat = {}
+        B = A
+        for c in range(cfg.correlation_order):
+            contrib = irrep_linear(lp["combine"][c], B)
+            for l, x in contrib.items():
+                msg[l] = msg.get(l, 0.0) + x
+            if c + 1 < cfg.correlation_order:
+                B = _channel_product(B, A, cfg)
+                for l in range(cfg.l_max + 1):
+                    B.setdefault(l, jnp.zeros((N, M, 2 * l + 1), cfg.dtype))
+        self_part = irrep_linear(lp["self"], h)
+        h = {l: jnp.tanh(msg[l]) if l == 0 else msg[l]
+             for l in msg}
+        h = {l: h[l] + self_part[l] for l in h}
+        h = {l: x * gb.node_mask[:, None, None] for l, x in h.items()}
+
+    inv = norm_squared(h)
+    e_atom = mlp(params["head"], inv, act=jax.nn.silu)[:, 0] * gb.node_mask
+    return jax.ops.segment_sum(e_atom, gb.graph_id, cfg.n_graphs)
+
+
+def energy_loss(params: Params, gb: GraphBatch, cfg: MACEConfig,
+                targets: jax.Array) -> jax.Array:
+    e = forward(params, gb, cfg)
+    return jnp.mean((e - targets) ** 2)

@@ -1,0 +1,52 @@
+"""Radial and angular basis functions (DimeNet / NequIP / MACE)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def safe_norm(vec: jax.Array, axis: int = -1, eps: float = 1e-9) -> jax.Array:
+    """|vec| with finite gradients at zero (double-where trick)."""
+    r2 = jnp.sum(vec * vec, axis=axis)
+    safe = r2 > eps
+    return jnp.sqrt(jnp.where(safe, r2, 1.0)) * safe.astype(vec.dtype)
+
+
+def bessel_rbf(r: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """DimeNet/NequIP radial basis: sqrt(2/c) sin(n pi r / c) / r."""
+    r = jnp.maximum(r, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=r.dtype)
+    return (math.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * r[..., None] / cutoff)
+            / r[..., None])
+
+
+def poly_envelope(r: jax.Array, cutoff: float, p: int = 6) -> jax.Array:
+    """DimeNet's smooth polynomial cutoff u(r) (zero value/derivs at cutoff)."""
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2)
+    c = -p * (p + 1) / 2.0
+    return 1.0 + a * x ** p + b * x ** (p + 1) + c * x ** (p + 2)
+
+
+def legendre(cos_theta: jax.Array, n: int) -> jax.Array:
+    """P_0..P_{n-1}(cos θ) by recursion -> [..., n]."""
+    outs = [jnp.ones_like(cos_theta)]
+    if n > 1:
+        outs.append(cos_theta)
+    for l in range(2, n):
+        outs.append(((2 * l - 1) * cos_theta * outs[-1]
+                     - (l - 1) * outs[-2]) / l)
+    return jnp.stack(outs[:n], axis=-1)
+
+
+def spherical_basis(r: jax.Array, cos_theta: jax.Array, n_spherical: int,
+                    n_radial: int, cutoff: float) -> jax.Array:
+    """DimeNet a_SBF(r, θ): outer product of radial Bessel × Legendre(θ),
+    enveloped — [..., n_spherical * n_radial]."""
+    rb = bessel_rbf(r, n_radial, cutoff) * poly_envelope(r, cutoff)[..., None]
+    ang = legendre(cos_theta, n_spherical)
+    out = rb[..., None, :] * ang[..., :, None]
+    return out.reshape(out.shape[:-2] + (n_spherical * n_radial,))

@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN (GShard-style capacity dispatch, einsum formulation).
+
+Dispatch/combine are expressed as dense einsums over [tokens, experts,
+capacity] one-hots so the whole layer shards cleanly under pjit: expert
+weights carry an explicit E axis (expert parallelism) or shard d_model/d_ff
+(tensor parallelism) — selected per architecture in configs.
+
+Supports shared experts (Qwen-MoE: shared experts always active, routed
+experts top-k) and an auxiliary load-balancing loss (Switch/GShard).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0       # shared-expert width = n_shared * d_ff_expert
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # PartitionSpec tuple for the dispatched [E, C, D] buffer, e.g.
+    # ("model", "data", None) = expert parallel; None disables (tests).
+    # Requires an ambient mesh at trace time.
+    dispatch_pspec: Optional[tuple] = None
+    # When set, route through the explicit shard_map expert-parallel layer
+    # (moe_sharded.py) instead of the pjit scatter formulation.
+    mesh: object = None
+    data_axes: tuple = ("data",)
+    model_axis: str = "model"
+    # sequence-parallel integration: the layer input/output stay S-sharded
+    # over the model axis (no per-layer slice/gather collectives)
+    seq_sharded: bool = False
+    # allocated expert count (>= n_experts): pads the expert axis up to a
+    # mesh-divisible size (e.g. Qwen2's 60 -> 64 on a 16-way model axis);
+    # the router masks padded experts to -inf so they never receive tokens
+    n_experts_alloc: int = 0
+
+    @property
+    def e_alloc(self) -> int:
+        return self.n_experts_alloc or self.n_experts
+
+
+def _mask_padded(logits: jax.Array, cfg: MoEConfig) -> jax.Array:
+    if cfg.e_alloc == cfg.n_experts:
+        return logits
+    idx = jnp.arange(cfg.e_alloc)
+    return jnp.where(idx[None, :] < cfg.n_experts, logits, -1e30)
+
+
+def _constrain_ecd(x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    if cfg.dispatch_pspec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*cfg.dispatch_pspec))
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    k_r, k_i, k_g, k_o, k_s = jax.random.split(key, 5)
+    E, F = cfg.e_alloc, cfg.d_ff_expert
+    s_in = 1.0 / (d_model ** 0.5)
+    s_out = 1.0 / (F ** 0.5)
+    p = {
+        "router": dense_init(k_r, d_model, E, scale=s_in, dtype=dtype),
+        "wi": jax.random.normal(k_i, (E, d_model, F), dtype) * s_in,
+        "wg": jax.random.normal(k_g, (E, d_model, F), dtype) * s_in,
+        "wo": jax.random.normal(k_o, (E, F, d_model), dtype) * s_out,
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * F
+        ks1, ks2, ks3 = jax.random.split(k_s, 3)
+        p["shared"] = {
+            "wi": jax.random.normal(ks1, (d_model, Fs), dtype) * s_in,
+            "wg": jax.random.normal(ks2, (d_model, Fs), dtype) * s_in,
+            "wo": jax.random.normal(ks3, (Fs, d_model), dtype) * s_out,
+        }
+    return p
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: MoEConfig,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Sort-based capacity dispatch (MegaBlocks-style): token->expert
+    assignments are sorted by expert, positions within each expert's buffer
+    derive from exclusive-cumsum offsets, and tokens scatter into a dense
+    [E*C, D] buffer for the grouped expert GEMMs.  No [T, E, C] one-hot is
+    ever materialized, so the layer scales to millions of tokens."""
+    if cfg.mesh is not None:
+        from repro.models.moe_sharded import moe_apply_sharded
+        return moe_apply_sharded(p, x, cfg, cfg.mesh, cfg.data_axes,
+                                 cfg.model_axis)
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    E, K = cfg.e_alloc, cfg.top_k
+
+    logits = (xt @ p["router"]["w"]).astype(jnp.float32)      # [T, E]
+    logits = _mask_padded(logits, cfg)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)             # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    C = max(int(T * K * cfg.capacity_factor / E), 1)
+    TK = T * K
+    flat_e = gate_idx.reshape(TK)                             # expert per slot
+    flat_t = jnp.arange(TK, dtype=jnp.int32) // K             # token per slot
+    flat_g = gate_vals.reshape(TK)
+
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)                   # [E]
+    starts = jnp.cumsum(counts) - counts                      # exclusive
+    pos = jnp.arange(TK, dtype=jnp.int32) - starts[sorted_e]  # pos in expert
+    keep = pos < C
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)         # overflow row
+
+    # dropped tokens scatter-add zeros into a clamped slot (no overflow row,
+    # keeping [E*C, D] cleanly shardable as [E, C, D])
+    slot = jnp.where(keep, slot, E * C - 1)
+    gathered = jnp.where(keep[:, None], xt[flat_t[order]], 0)
+    buf = jnp.zeros((E * C, D), x.dtype).at[slot].add(gathered)
+    xe = _constrain_ecd(buf.reshape(E, C, D), cfg)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["wo"])
+    ye = _constrain_ecd(ye, cfg)
+
+    contrib = ye.reshape(E * C, D)[slot] \
+        * (flat_g[order] * keep)[:, None].astype(ye.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[flat_t[order]].add(contrib)
+
+    if "shared" in p:
+        sh = p["shared"]
+        hs = jax.nn.silu(xt @ sh["wg"]) * (xt @ sh["wi"])
+        out = out + hs @ sh["wo"]
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    frac = counts.astype(jnp.float32) / jnp.float32(TK)
+    prob = jnp.mean(probs, axis=0)
+    aux = cfg.router_aux_weight * E * jnp.sum(frac * prob) * K
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,1 @@
+"""Recsys models: MIND multi-interest retrieval over the embedding-bag substrate."""

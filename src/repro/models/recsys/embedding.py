@@ -1,0 +1,34 @@
+"""Sharded embedding table + EmbeddingBag built from take/segment_sum.
+
+JAX has no native EmbeddingBag or CSR sparse — the lookup is
+``jnp.take`` over a (row-shardable) table followed by a masked mean, which is
+exactly the FBGEMM-TBE pattern mapped to XLA gather + reduce.  Under pjit the
+table rows shard over the model axis; gathers become all-to-all-free because
+XLA converts them to dynamic-slice + psum on the sharded dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params
+
+
+def embedding_table_init(key, vocab: int, dim: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, dim), dtype) * 0.05}
+
+
+def embedding_bag(p: Params, ids: jax.Array, mask: jax.Array,
+                  combiner: str = "mean") -> jax.Array:
+    """ids: [B, L] int32; mask: [B, L] bool -> [B, D]."""
+    emb = jnp.take(p["table"], ids, axis=0)            # [B, L, D]
+    m = mask.astype(emb.dtype)[..., None]
+    s = jnp.sum(emb * m, axis=1)
+    if combiner == "sum":
+        return s
+    cnt = jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return s / cnt
+
+
+def embedding_lookup(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)

@@ -1,0 +1,325 @@
+"""Decoder-only LM transformer: GQA + RoPE + (Ge/Swi)GLU, dense or MoE FFN.
+
+Layer parameters are *stacked* along a leading L axis and the layer loop is a
+``lax.scan`` — compile time stays flat for 94-layer configs and remat applies
+per-layer.  Three entry points per the assigned shapes:
+
+  train_step  — full-sequence causal LM loss (chunked-scan attention)
+  prefill     — run the prompt, return KV cache + last-position logits
+  decode_step — one token against the cache (split-KV-friendly layout)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (
+    Params, apply_rope, dense_init, embed, embedding_init, rmsnorm,
+    rmsnorm_init, rope_frequencies,
+)
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    act: str = "swiglu"              # "swiglu" | "geglu"
+    rope_theta: float = 10000.0
+    max_seq: int = 8192
+    tie_embeddings: bool = True
+    embed_scale: bool = False        # gemma multiplies embeddings by sqrt(d)
+    moe: Optional[MoEConfig] = None
+    attn_chunk: int = 512
+    remat: bool = True
+    dtype: Any = jnp.float32
+    # layer-boundary activation PartitionSpec, e.g. ("data", None, "model");
+    # None disables the constraint (single-device tests).  Requires an
+    # ambient mesh at trace time (the dry-run lowers inside `with mesh:`).
+    act_pspec: Optional[tuple] = None
+    # fully unroll layer/chunk scans (roofline calibration builds: XLA's
+    # cost_analysis counts while-loop bodies once, so calibration compiles
+    # use small unrolled configs and extrapolate per-layer costs)
+    unroll_scans: bool = False
+    # context-parallel attention (shard_map, sequence over the model axis):
+    # set when head counts don't divide the model axis — see attention.py
+    cp_mesh: Any = None
+    cp_data_axes: tuple = ("data",)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND model-FLOPs)."""
+        d, L = self.d_model, self.n_layers
+        attn_p = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        if self.moe:
+            E, F = self.moe.n_experts, self.moe.d_ff_expert
+            ffn = d * E + 3 * E * d * F
+            if self.moe.n_shared_experts:
+                ffn += 3 * d * F * self.moe.n_shared_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        return L * (attn_p + ffn + 2 * d) + self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared only)."""
+        if not self.moe:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        attn_p = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        F = self.moe.d_ff_expert
+        ffn = d * self.moe.n_experts + 3 * d * F * (
+            self.moe.top_k + self.moe.n_shared_experts)
+        return L * (attn_p + ffn + 2 * d) + self.vocab * d + d
+
+
+# ------------------------------------------------------------------- params
+
+def _layer_init(key, cfg: TransformerConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {
+        "ln1": rmsnorm_init(d, cfg.dtype),
+        "ln2": rmsnorm_init(d, cfg.dtype),
+        "wq": dense_init(ks[0], d, cfg.q_dim, dtype=cfg.dtype),
+        "wk": dense_init(ks[1], d, cfg.kv_dim, dtype=cfg.dtype),
+        "wv": dense_init(ks[2], d, cfg.kv_dim, dtype=cfg.dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, d, dtype=cfg.dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[4], d, cfg.moe, cfg.dtype)
+    else:
+        p["ffn"] = {
+            "wi": dense_init(ks[5], d, cfg.d_ff, dtype=cfg.dtype),
+            "wg": dense_init(ks[6], d, cfg.d_ff, dtype=cfg.dtype),
+            "wo": dense_init(ks[7], cfg.d_ff, d, dtype=cfg.dtype),
+        }
+    return p
+
+
+def init_params(key, cfg: TransformerConfig) -> Params:
+    k_e, k_l, k_h = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_l, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    p: Params = {
+        "embed": embedding_init(k_e, cfg.vocab, cfg.d_model, cfg.dtype),
+        "layers": layers,
+        "final_ln": rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_h, cfg.d_model, cfg.vocab, dtype=cfg.dtype)
+    return p
+
+
+# ------------------------------------------------------------------ forward
+
+def _constrain(x: jax.Array, cfg: "TransformerConfig") -> jax.Array:
+    if cfg.act_pspec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*cfg.act_pspec))
+
+
+def _glu(p: Params, x: jax.Array, act: str) -> jax.Array:
+    g = x @ p["wg"]["w"]
+    h = x @ p["wi"]["w"]
+    gate = jax.nn.gelu(g) if act == "geglu" else jax.nn.silu(g)
+    return (gate * h) @ p["wo"]["w"]
+
+
+def _attention_block(lp: Params, x: jax.Array, cfg: TransformerConfig,
+                     cos, sin, positions) -> jax.Array:
+    B, S, D = x.shape
+    h = rmsnorm(lp["ln1"], x)
+    q = (h @ lp["wq"]["w"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (h @ lp["wk"]["w"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lp["wv"]["w"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q.transpose(0, 2, 1, 3), cos, sin, positions[:, None, :])
+    k = apply_rope(k.transpose(0, 2, 1, 3), cos, sin, positions[:, None, :])
+    v = v.transpose(0, 2, 1, 3)
+    if cfg.cp_mesh is not None:
+        o = attn.context_parallel_attention(
+            q, k, v, cfg.cp_mesh, data_axes=cfg.cp_data_axes,
+            causal=True, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+    else:
+        o = attn.chunked_attention(q, k, v, causal=True,
+                                   chunk=min(cfg.attn_chunk, S),
+                                   unroll=cfg.unroll_scans)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.q_dim)
+    return x + o @ lp["wo"]["w"]
+
+
+def _layer_fwd(lp: Params, x: jax.Array, cfg: TransformerConfig, cos, sin,
+               positions) -> Tuple[jax.Array, jax.Array]:
+    x = _attention_block(lp, x, cfg, cos, sin, positions)
+    h = rmsnorm(lp["ln2"], x)
+    if cfg.moe is not None:
+        y, aux = moe_apply(lp["moe"], h, cfg.moe)
+    else:
+        y, aux = _glu(lp["ffn"], h, cfg.act), jnp.float32(0.0)
+    return x + y, aux
+
+
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (logits [B, S, V], aux_loss)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    cos, sin = rope_frequencies(cfg.head_dim, S, cfg.rope_theta)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(carry, lp):
+        x, aux = carry
+        x2, a = _layer_fwd(lp, x, cfg, cos, sin, positions)
+        return (_constrain(x2, cfg), aux + a), None
+
+    x = _constrain(x, cfg)
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                               params["layers"],
+                               unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = rmsnorm(params["final_ln"], x)
+    if cfg.act_pspec is not None:
+        # gather d_model before the vocab projection: the head contracts D
+        # against the (vocab-sharded, data-FSDP) table — leaving D sharded
+        # over "model" here forces an all-reduce of full [B,S,V] logits
+        from jax.sharding import PartitionSpec as P
+        x = jax.lax.with_sharding_constraint(
+            x, P(cfg.act_pspec[0], None, None))
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(cfg.dtype)
+    else:
+        logits = x @ params["lm_head"]["w"]
+    return logits, aux
+
+
+def lm_loss(params: Params, tokens: jax.Array, targets: jax.Array,
+            cfg: TransformerConfig) -> jax.Array:
+    logits, aux = forward(params, tokens, cfg)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux
+
+
+# -------------------------------------------------------------- serving path
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
+                  dtype=None) -> Dict[str, jax.Array]:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig,
+            max_len: int):
+    """Run the prompt; returns (last-position logits, filled KV cache)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    cos, sin = rope_frequencies(cfg.head_dim, max_len, cfg.rope_theta)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, lp):
+        x = _constrain(x, cfg)
+        Bx, Sx, Dx = x.shape
+        h = rmsnorm(lp["ln1"], x)
+        q = (h @ lp["wq"]["w"]).reshape(Bx, Sx, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]["w"]).reshape(Bx, Sx, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]["w"]).reshape(Bx, Sx, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q.transpose(0, 2, 1, 3), cos, sin, positions[:, None, :])
+        k = apply_rope(k.transpose(0, 2, 1, 3), cos, sin, positions[:, None, :])
+        v = v.transpose(0, 2, 1, 3)
+        o = attn.chunked_attention(q, k, v, causal=True,
+                                   chunk=min(cfg.attn_chunk, Sx),
+                                   unroll=cfg.unroll_scans)
+        o = o.transpose(0, 2, 1, 3).reshape(Bx, Sx, cfg.q_dim)
+        x = x + o @ lp["wo"]["w"]
+        h2 = rmsnorm(lp["ln2"], x)
+        if cfg.moe is not None:
+            y, _ = moe_apply(lp["moe"], h2, cfg.moe)
+        else:
+            y = _glu(lp["ffn"], h2, cfg.act)
+        # cache padded to max_len
+        pad = max_len - Sx
+        kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"],
+                               unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = rmsnorm(params["final_ln"], x)
+    last = x[:, -1]
+    if cfg.tie_embeddings:
+        logits = last @ params["embed"]["table"].T.astype(cfg.dtype)
+    else:
+        logits = last @ params["lm_head"]["w"]
+    cache = {"k": ks, "v": vs,
+             "len": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: Params, token: jax.Array, cache: Dict[str, jax.Array],
+                cfg: TransformerConfig):
+    """One decode step.  token [B] int32; cache from init_kv_cache/prefill."""
+    B = token.shape[0]
+    max_len = cache["k"].shape[3]
+    x = embed(params["embed"], token[:, None]).astype(cfg.dtype)[:, 0]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    cos, sin = rope_frequencies(cfg.head_dim, max_len, cfg.rope_theta)
+    pos = cache["len"]                                        # [B]
+
+    def body(x, lp_kv):
+        lp, k_cache, v_cache = lp_kv
+        h = rmsnorm(lp["ln1"], x)
+        q = (h @ lp["wq"]["w"]).reshape(B, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]["w"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]["w"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q[:, :, None, :], cos, sin, pos[:, None, None])[:, :, 0]
+        k = apply_rope(k[:, :, None, :], cos, sin, pos[:, None, None])[:, :, 0]
+        onehot = jax.nn.one_hot(pos, max_len, dtype=k_cache.dtype)  # [B, S]
+        k_cache = k_cache + onehot[:, None, :, None] * k[:, :, None, :]
+        v_cache = v_cache + onehot[:, None, :, None] * v[:, :, None, :]
+        o = attn.decode_attention(q, k_cache, v_cache, pos + 1)
+        x = x + o.reshape(B, cfg.q_dim) @ lp["wo"]["w"]
+        h2 = rmsnorm(lp["ln2"], x)
+        if cfg.moe is not None:
+            y, _ = moe_apply(lp["moe"], h2[:, None, :], cfg.moe)
+            y = y[:, 0]
+        else:
+            y = _glu(lp["ffn"], h2, cfg.act)
+        return x + y, (k_cache, v_cache)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = rmsnorm(params["final_ln"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(cfg.dtype)
+    else:
+        logits = x @ params["lm_head"]["w"]
+    new_cache = {"k": new_k, "v": new_v, "len": cache["len"] + 1}
+    return logits, new_cache

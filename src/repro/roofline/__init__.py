@@ -1,0 +1,3 @@
+from repro.roofline.analysis import analyze_compiled, HW
+
+__all__ = ["analyze_compiled", "HW"]

@@ -1,0 +1,168 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs   / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes   / (chips x HBM_bw)
+  collective term = coll_bytes  / (chips x link_bw)
+
+``cost_analysis`` supplies FLOPs and bytes (per-partition program; we scale
+by chip count to keep the formula's global form).  Collective bytes are not
+in cost_analysis: we parse the post-SPMD optimized HLO and sum output-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+HW = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output bytes per collective kind from optimized HLO text."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        out[kind] = out.get(kind, 0.0) + float(n * nbytes)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    n_chips: int
+    hlo_flops: float            # global (per-device x chips)
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, float]
+    model_flops: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    peak_memory_bytes: float = 0.0
+
+    def __post_init__(self):
+        chips = self.n_chips
+        self.compute_s = self.hlo_flops / (chips * HW["peak_flops_bf16"])
+        self.memory_s = self.hlo_bytes / (chips * HW["hbm_bw"])
+        self.collective_s = self.coll_bytes / (chips * HW["ici_bw"])
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def step_time_bound_s(self) -> float:
+        """Roofline step time (max of the three terms — full overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful compute vs the roofline bound: how close to peak we'd run
+        if every term overlapped perfectly (1.0 = MODEL_FLOPS at peak)."""
+        ideal = self.model_flops / (self.n_chips * HW["peak_flops_bf16"])
+        bound = self.step_time_bound_s
+        return ideal / bound if bound > 0 else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "chips": self.n_chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def raw_costs(compiled) -> Tuple[float, float, Dict[str, float]]:
+    """(flops, bytes, collective-bytes-by-kind) of the per-partition program.
+
+    NOTE: XLA cost analysis counts while-loop bodies once; use
+    :func:`extrapolate` with unrolled calibration compiles for scan-over-
+    layer models (the dry-run does this automatically for LM archs)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    return flops, nbytes, collective_bytes(text)
+
+
+def extrapolate(c_small: Tuple, c_big: Tuple, l_small: int, l_big: int,
+                l_target: int) -> Tuple[float, float, Dict[str, float]]:
+    """Linear per-layer extrapolation from two unrolled calibration builds."""
+    span = l_big - l_small
+    f = c_small[0] + (l_target - l_small) / span * (c_big[0] - c_small[0])
+    b = c_small[1] + (l_target - l_small) / span * (c_big[1] - c_small[1])
+    kinds = set(c_small[2]) | set(c_big[2])
+    coll = {}
+    for k in kinds:
+        a0 = c_small[2].get(k, 0.0)
+        a1 = c_big[2].get(k, 0.0)
+        coll[k] = max(a0 + (l_target - l_small) / span * (a1 - a0), 0.0)
+    return f, b, coll
+
+
+def peak_memory(compiled) -> float:
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            return float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return 0.0
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, n_chips: int,
+                     model_flops: float,
+                     costs: Optional[Tuple] = None) -> RooflineReport:
+    flops, nbytes, coll = costs if costs is not None else raw_costs(compiled)
+    # cost_analysis reports the per-partition program; scale to global
+    return RooflineReport(
+        arch=arch, shape=shape, n_chips=n_chips,
+        hlo_flops=flops * n_chips, hlo_bytes=nbytes * n_chips,
+        coll_bytes=sum(coll.values()) * n_chips, coll_breakdown=coll,
+        model_flops=model_flops, peak_memory_bytes=peak_memory(compiled))

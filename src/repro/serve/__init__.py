@@ -1,0 +1,1 @@
+"""Serving runtime: continuous-batching decode engine + KV cache manager."""

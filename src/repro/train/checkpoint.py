@@ -1,0 +1,140 @@
+"""Checkpoint save/restore: sharded-agnostic, async, elastic.
+
+Format: one ``.npz`` per flattened leaf chunk + a JSON manifest holding the
+pytree structure, shapes and dtypes.  Saves gather to host (device_get), so a
+checkpoint written on one mesh restores onto ANY mesh/sharding — that is the
+elastic-rescale path (node failure -> re-mesh -> restore).  ``AsyncSaver``
+overlaps serialization with the next training steps.  On a real multi-host
+pod each process writes its addressable shards; this container is
+single-process so the save is whole-array (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(tree: Params, directory: str, step: int, keep: int = 3) -> str:
+    """Synchronous checkpoint save; returns the checkpoint path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": {}}
+    arrays = {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        name = f"a{i}"
+        arrays[name] = arr
+        manifest["leaves"][key] = {"file": name, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.isdir(path):  # re-save after restart overwrites
+        shutil.rmtree(path)
+    os.replace(tmp, path)  # atomic publish
+    _gc(directory, keep)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(tree_like: Params, directory: str, step: Optional[int] = None,
+            shardings: Optional[Params] = None) -> Params:
+    """Restore into the structure of ``tree_like`` (values replaced).
+
+    ``shardings``: optional pytree of NamedSharding for elastic re-mesh —
+    arrays are device_put with the new sharding."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat, treedef = _flatten_with_paths(tree_like)
+    flat_shard = None
+    if shardings is not None:
+        flat_shard, _ = _flatten_with_paths(shardings)
+    out = {}
+    for key in flat:
+        meta = manifest["leaves"][key]
+        arr = data[meta["file"]]
+        if flat_shard is not None and key in flat_shard:
+            out[key] = jax.device_put(arr, flat_shard[key])
+        else:
+            out[key] = jax.numpy.asarray(arr)
+    leaves = [out[k] for k, _ in
+              sorted(((k, v) for k, v in flat.items()), key=lambda kv: kv[0])]
+    # reorder to original flatten order
+    ordered_keys = list(flat.keys())
+    leaves = [out[k] for k in ordered_keys]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), leaves)
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncSaver:
+    """Fire-and-forget checkpointing on a background thread."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+        self.error: Optional[BaseException] = None
+
+    def save(self, tree: Params, directory: str, step: int, keep: int = 3):
+        self.wait()
+        # device_get on the main thread (XLA not thread-safe for transfers
+        # interleaved with compute dispatch), serialize off-thread
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _run():
+            try:
+                self.last_path = save(host_tree, directory, step, keep)
+            except BaseException as e:  # surfaced on next wait()
+                self.error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.error is not None:
+            err, self.error = self.error, None
+            raise err

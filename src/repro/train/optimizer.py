@@ -1,0 +1,160 @@
+"""AdamW built from scratch, with an 8-bit-state variant.
+
+State sharding: every moment tensor inherits its parameter's PartitionSpec,
+so under the (data, model) mesh the optimizer state is fully sharded
+(ZeRO-style) with zero extra code.  The 8-bit variant stores moments as int8
+with per-block absmax scales (block = last-dim tiles of 256) — 4x state
+memory reduction; used for the 235B-param MoE cell (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    state_bits: int = 32          # 32 (fp32 moments) or 8 (int8 + scales)
+    block: int = 256              # quantization block size
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+# --------------------------------------------------------- int8 moment codec
+#
+# Blocks run along the LAST dim only ([..., d] -> [..., d/bs, bs]) so the
+# quantized moments keep the parameter's leading-dim sharding — a flat
+# [n/256, 256] layout cannot be resharded from the param layout without a
+# full all-gather (measured: 3x ~300GB per step on the 235B config).
+
+def _block_size(last: int, block: int) -> int:
+    for bs in (block, 128, 64, 32, 16, 8):
+        if bs <= block and last % bs == 0:
+            return bs
+    return last
+
+
+def _quant8(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array]:
+    bs = _block_size(x.shape[-1] if x.ndim else 1, block)
+    if x.ndim == 0:
+        x = x[None]
+        bs = 1
+    xb = x.reshape(x.shape[:-1] + (x.shape[-1] // bs, bs))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(xb / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale)
+    return out.reshape(shape)
+
+
+# ------------------------------------------------------------------- states
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+def init_state(params: Params, cfg: AdamWConfig) -> AdamState:
+    if cfg.state_bits == 8:
+        def zq(p):
+            q, s = _quant8(jnp.zeros_like(p, jnp.float32), cfg.block)
+            return {"q": q, "s": s}
+        zeros = lambda: jax.tree_util.tree_map(zq, params)
+        return AdamState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+    z = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=z(), v=z())
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def apply_updates(params: Params, grads: Params, state: AdamState,
+                  cfg: AdamWConfig) -> Tuple[Params, AdamState, Dict]:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    if cfg.state_bits == 8:
+        def upd(p, g, mq, vq):
+            g = g.astype(jnp.float32) * scale
+            m = _dequant8(mq["q"], mq["s"], p.shape)
+            rms = _dequant8(vq["q"], vq["s"], p.shape)   # sqrt(v) stored:
+            v = rms * rms                                # halves dyn. range
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            # trust clip: bounds blowup when a tiny v underflows the int8
+            # grid while its m survives (the 8-bit Adam failure mode)
+            u = jnp.clip(u, -5.0, 5.0)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            nm_q, nm_s = _quant8(m, cfg.block)
+            nv_q, nv_s = _quant8(jnp.sqrt(v), cfg.block)
+            return newp, {"q": nm_q, "s": nm_s}, {"q": nv_q, "s": nv_s}
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        outs = [upd(p, g, m, v) for p, g, m, v
+                in zip(flat_p, flat_g, flat_m, flat_v)]
+        newp = tdef.unflatten([o[0] for o in outs])
+        newm = tdef.unflatten([o[1] for o in outs])
+        newv = tdef.unflatten([o[2] for o in outs])
+        return newp, AdamState(step, newm, newv), {"lr": lr, "gnorm": gnorm}
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, m, v
+
+    newp, newm, newv = {}, {}, {}
+    flat = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+    newp = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return newp, AdamState(step, newm, newv), {"lr": lr, "gnorm": gnorm}

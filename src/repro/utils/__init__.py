@@ -1,0 +1,3 @@
+from repro.utils.misc import round_up, pad_to, INF_HOPS, cdiv
+
+__all__ = ["round_up", "pad_to", "INF_HOPS", "cdiv"]

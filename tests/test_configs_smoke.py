@@ -1,0 +1,174 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs.  Also pins the FULL configs to the exact
+assigned hyperparameters (the dry-run exercises them via ShapeDtypeStructs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, all_cells, get_arch
+from repro.models import transformer as tfm
+from repro.models.gnn import dimenet as dn
+from repro.models.gnn import mace as mc
+from repro.models.gnn import nequip as nq
+from repro.models.gnn import pna as pn
+from repro.models.gnn.graphdata import build_triplets, random_graph_batch
+from repro.models.recsys import mind as mi
+from repro.train import optimizer as opt
+from repro.train.trainer import init_train_state, make_train_step
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.isfinite(x).all())
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating))
+
+
+# ------------------------------------------------------------ registry
+
+def test_registry_has_all_ten_archs():
+    assert len(ARCHS) == 10
+    cells = list(all_cells())
+    assert len(cells) == 40  # 10 archs x their 4 shapes
+
+
+@pytest.mark.parametrize("arch_id,checks", [
+    ("yi-34b", dict(n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+                    d_ff=20480, vocab=64000)),
+    ("starcoder2-3b", dict(n_layers=30, d_model=3072, n_heads=24,
+                           n_kv_heads=2, d_ff=12288, vocab=49152)),
+    ("gemma-2b", dict(n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+                      d_ff=16384, vocab=256000, head_dim=256, act="geglu")),
+])
+def test_full_lm_configs_exact(arch_id, checks):
+    cfg = get_arch(arch_id).full()
+    for k, v in checks.items():
+        assert getattr(cfg, k) == v, (arch_id, k)
+
+
+def test_full_moe_configs_exact():
+    q2 = get_arch("qwen2-moe-a2.7b").full()
+    assert (q2.n_layers, q2.d_model, q2.n_heads) == (24, 2048, 16)
+    assert (q2.moe.n_experts, q2.moe.top_k, q2.moe.d_ff_expert,
+            q2.moe.n_shared_experts) == (60, 4, 1408, 4)
+    q3 = get_arch("qwen3-moe-235b-a22b").full()
+    assert (q3.n_layers, q3.d_model, q3.n_heads, q3.n_kv_heads) == (
+        94, 4096, 64, 4)
+    assert (q3.moe.n_experts, q3.moe.top_k, q3.moe.d_ff_expert) == (
+        128, 8, 1536)
+    # ~235B total / ~22B active sanity
+    assert 2.0e11 < q3.param_count() < 2.6e11
+    assert 1.5e10 < q3.active_param_count() < 2.6e10
+
+
+def test_full_gnn_recsys_configs_exact():
+    p = get_arch("pna").full()
+    assert (p.n_layers, p.d_hidden) == (4, 75)
+    n = get_arch("nequip").full()
+    assert (n.n_layers, n.d_hidden, n.l_max, n.n_rbf) == (5, 32, 2, 8)
+    d = get_arch("dimenet").full()
+    assert (d.n_blocks, d.d_hidden, d.n_bilinear, d.n_spherical,
+            d.n_radial) == (6, 128, 8, 7, 6)
+    m = get_arch("mace").full()
+    assert (m.n_layers, m.d_hidden, m.l_max, m.correlation_order,
+            m.n_rbf) == (2, 128, 2, 3, 8)
+    r = get_arch("mind").full()
+    assert (r.embed_dim, r.n_interests, r.capsule_iters) == (64, 4, 3)
+
+
+# ------------------------------------------------------------- LM smokes
+
+@pytest.mark.parametrize("arch_id", [
+    "yi-34b", "starcoder2-3b", "gemma-2b", "qwen2-moe-a2.7b",
+    "qwen3-moe-235b-a22b"])
+def test_lm_smoke_train_and_decode(arch_id):
+    cfg = get_arch(arch_id).smoke()
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step = jax.jit(make_train_step(
+        lambda p, b: tfm.lm_loss(p, b[0], b[1], cfg), ocfg))
+    state = init_train_state(params, ocfg)
+    state, metrics = step(state, (toks, toks))
+    assert np.isfinite(float(metrics["loss"]))
+    assert _finite(state.params)
+    # serve path
+    logits, cache = tfm.prefill(state.params, toks, cfg, max_len=24)
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = tfm.decode_step(state.params, nxt, cache, cfg)
+    assert logits2.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(logits2).all())
+    assert int(cache["len"][0]) == 17
+
+
+# ------------------------------------------------------------ GNN smokes
+
+def test_pna_smoke():
+    cfg = get_arch("pna").smoke()
+    gb = random_graph_batch(jax.random.PRNGKey(0), 48, 160, cfg.d_in,
+                            n_labels=cfg.n_classes)
+    params = pn.init_params(jax.random.PRNGKey(1), cfg)
+    out = pn.forward(params, gb, cfg)
+    assert out.shape == (48, cfg.n_classes)
+    assert bool(jnp.isfinite(out).all())
+    g = jax.grad(pn.loss_fn)(params, gb, cfg)
+    assert _finite(g)
+
+
+def test_dimenet_smoke():
+    cfg = get_arch("dimenet").smoke()
+    gb = random_graph_batch(jax.random.PRNGKey(2), 24, 72, 0, geometric=True,
+                            batch=4)
+    tri = tuple(jnp.asarray(t) for t in build_triplets(
+        np.asarray(gb.edge_src), np.asarray(gb.edge_dst)))
+    import dataclasses
+    cfg = dataclasses.replace(cfg, n_graphs=4)
+    params = dn.init_params(jax.random.PRNGKey(3), cfg)
+    e = dn.forward(params, gb, cfg, tri)
+    assert e.shape == (4, 1)
+    assert bool(jnp.isfinite(e).all())
+    g = jax.grad(dn.energy_loss)(params, gb, cfg, tri, jnp.zeros(4))
+    assert _finite(g)
+
+
+@pytest.mark.parametrize("arch_id,mod", [("nequip", nq), ("mace", mc)])
+def test_equivariant_smoke(arch_id, mod):
+    import dataclasses
+    cfg = dataclasses.replace(get_arch(arch_id).smoke(), n_graphs=4)
+    gb = random_graph_batch(jax.random.PRNGKey(4), 24, 72, 0, geometric=True,
+                            batch=4)
+    params = mod.init_params(jax.random.PRNGKey(5), cfg)
+    e = mod.forward(params, gb, cfg)
+    assert e.shape == (4,)
+    assert bool(jnp.isfinite(e).all())
+    g = jax.grad(mod.energy_loss)(params, gb, cfg, jnp.zeros(4))
+    assert _finite(g)
+
+
+# ----------------------------------------------------------- recsys smoke
+
+def test_mind_smoke():
+    cfg = get_arch("mind").smoke()
+    params = mi.init_params(jax.random.PRNGKey(6), cfg)
+    B, L = 8, cfg.hist_len
+    hist = jax.random.randint(jax.random.PRNGKey(7), (B, L), 0, cfg.n_items)
+    mask = jnp.ones((B, L), bool)
+    batch = {"hist": hist, "hist_mask": mask,
+             "target": jax.random.randint(jax.random.PRNGKey(8), (B,), 0,
+                                          cfg.n_items)}
+    loss = mi.train_loss(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    g = jax.grad(mi.train_loss)(params, batch, cfg)
+    assert _finite(g)
+    caps = mi.interests(params, hist, mask, cfg)
+    assert caps.shape == (B, cfg.n_interests, cfg.embed_dim)
+    cand = jax.random.randint(jax.random.PRNGKey(9), (B, 13), 0, cfg.n_items)
+    sc = mi.score_candidates(params, hist, mask, cand, cfg)
+    assert sc.shape == (B, 13)
+    rs = mi.retrieval_scores(params, hist[:1], mask[:1], cfg,
+                             jnp.arange(cfg.n_items))
+    assert rs.shape == (cfg.n_items,)
+    assert bool(jnp.isfinite(rs).all())

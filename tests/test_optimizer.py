@@ -1,0 +1,118 @@
+"""Algorithm 3/4: view matching, ChangePG splicing, ordering, result parity."""
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, GraphSchema, GraphSession
+from repro.core.matcher import match_view
+from repro.core.optimizer import optimize_query, sort_by_opt_eff
+from repro.core.parser import parse_query, parse_view
+
+
+def make_social(seed=0, n=40, p=0.12):
+    rng = np.random.default_rng(seed)
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    for i in range(n):
+        b.add_node("Person" if i % 3 else "Place")
+    for u in range(n):
+        for v in range(n):
+            if u != v and rng.random() < p:
+                b.add_edge(u, v, "knows" if (u + v) % 4 else "livesIn")
+    return GraphSession(b.finalize(edge_cap=8192), schema), schema
+
+
+def test_match_and_rewrite_simple():
+    v = parse_view("""CREATE VIEW VK AS (
+        CONSTRUCT (s)-[r:VK]->(d) MATCH (s:Person)-[:knows*2..3]->(d:Person))""")
+    q = parse_query("MATCH (a:Person)-[:knows*2..3]->(b:Person) RETURN a, b")
+    m = match_view(q.path, v.match)
+    assert m is not None and m.forward and m.start == 0
+
+
+def test_no_match_when_interior_referenced():
+    v = parse_view("""CREATE VIEW VK AS (
+        CONSTRUCT (s)-[r:VK]->(d)
+        MATCH (s:Person)-[:knows]->(m:Person)-[:knows]->(d:Person))""")
+    q = parse_query(
+        "MATCH (a:Person)-[:knows]->(m:Person)-[:knows]->(b:Person) RETURN a, m, b")
+    assert match_view(q.path, v.match) is None  # m is referenced
+    q2 = parse_query(
+        "MATCH (a:Person)-[:knows]->(m:Person)-[:knows]->(b:Person) RETURN a, b")
+    assert match_view(q2.path, v.match) is not None
+
+
+def test_no_match_on_hop_mismatch():
+    v = parse_view("""CREATE VIEW VK AS (
+        CONSTRUCT (s)-[r:VK]->(d) MATCH (s:Person)-[:knows*2..3]->(d:Person))""")
+    for rng in ["*2..4", "*1..3", "*2..", ""]:
+        q = parse_query(f"MATCH (a:Person)-[:knows{rng}]->(b:Person) RETURN a, b")
+        assert match_view(q.path, v.match) is None, rng
+
+
+def test_reversed_match():
+    v = parse_view("""CREATE VIEW VK AS (
+        CONSTRUCT (s)-[r:VK]->(d) MATCH (s:Person)-[:knows*2..3]->(d:Person))""")
+    q = parse_query("MATCH (b:Person)<-[:knows*2..3]-(a:Person) RETURN a, b")
+    m = match_view(q.path, v.match)
+    assert m is not None and not m.forward
+
+
+def test_query_parity_with_views():
+    sess, schema = make_social()
+    sess.create_view("""CREATE VIEW VK AS (
+        CONSTRUCT (s)-[r:VK]->(d) MATCH (s:Person)-[:knows*2..3]->(d:Person))""")
+    sess.create_view("""CREATE VIEW VL AS (
+        CONSTRUCT (s)-[r:VL]->(d) MATCH (s:Person)-[:livesIn]->(d:Place))""")
+    queries = [
+        "MATCH (a:Person)-[:knows*2..3]->(b:Person) RETURN a, b",
+        "MATCH (a:Person)-[:knows*2..3]->(b:Person)-[:livesIn]->(c:Place) RETURN a, c",
+        "MATCH (a:Place)<-[:livesIn]-(b:Person) RETURN a, b",
+    ]
+    for qtext in queries:
+        r_ori = sess.query(qtext, use_views=False)
+        r_opt = sess.query(qtext, use_views=True)
+        # bag parity: same pairs with same path counts
+        po = sorted(zip(*r_ori.pairs()[:2]))
+        pv = sorted(zip(*r_opt.pairs()[:2]))
+        assert po == pv, qtext
+        co = sorted(zip(*r_ori.pairs()))
+        cv = sorted(zip(*r_opt.pairs()))
+        assert co == cv, f"bag mismatch for {qtext}"
+        assert r_opt.metrics.db_hits <= r_ori.metrics.db_hits, qtext
+
+
+def test_unbounded_query_parity_set_semantics():
+    sess, schema = make_social(seed=3, n=30)
+    sess.create_view("""CREATE VIEW VU AS (
+        CONSTRUCT (s)-[r:VU]->(d) MATCH (s:Person)-[:knows*2..]->(d:Person))""")
+    qtext = "MATCH (a:Person)-[:knows*2..]->(b:Person) RETURN a, b"
+    r_ori = sess.query(qtext, use_views=False)
+    r_opt = sess.query(qtext, use_views=True)
+    assert sorted(zip(*r_ori.pairs()[:2])) == sorted(zip(*r_opt.pairs()[:2]))
+    assert r_opt.metrics.db_hits < r_ori.metrics.db_hits
+
+
+def test_sort_by_opt_eff_order():
+    sess, schema = make_social(seed=1)
+    v1 = sess.create_view("""CREATE VIEW BIGV AS (
+        CONSTRUCT (s)-[r:BIGV]->(d) MATCH (s:Person)-[:knows*2..3]->(d:Person))""")
+    v2 = sess.create_view("""CREATE VIEW SMALLV AS (
+        CONSTRUCT (s)-[r:SMALLV]->(d) MATCH (s:Person)-[:livesIn]->(d:Place))""")
+    order = sort_by_opt_eff([v1, v2])
+    # the multi-hop view saves far more DBHits than the 1-hop view
+    assert order[0].name == "BIGV"
+    assert v1.stats.opt_eff() >= v2.stats.opt_eff()
+
+
+def test_longer_view_consumes_subpath():
+    """Figure 8-12 scenario: overlapping views, ordering decides the rewrite."""
+    sess, schema = make_social(seed=2)
+    v2hop = sess.create_view("""CREATE VIEW TWOHOP AS (
+        CONSTRUCT (s)-[r:TWOHOP]->(d)
+        MATCH (s:Person)-[:knows]->(m:Person)-[:knows]->(d:Person))""")
+    q = parse_query(
+        "MATCH (a:Person)-[:knows]->(m:Person)-[:knows]->(b:Person)"
+        "-[:livesIn]->(c:Place) RETURN a, c")
+    out = optimize_query(q, [v2hop])
+    labels = [r.label for r in out.path.rels]
+    assert labels == ["TWOHOP", "livesIn"]

@@ -1,0 +1,89 @@
+import pytest
+
+from repro.core.parser import ParseError, parse_query, parse_view
+from repro.core.pattern import Direction
+from repro.utils import INF_HOPS
+
+
+def test_basic_query():
+    q = parse_query("MATCH (n:Comment)-[r:replyOf*..]->(m:Post) RETURN n, m")
+    p = q.path
+    assert p.start.label == "Comment" and p.end.label == "Post"
+    assert len(p.rels) == 1
+    r = p.rels[0]
+    assert r.label == "replyOf"
+    assert (r.min_hops, r.max_hops) == (1, INF_HOPS)
+    assert r.direction is Direction.OUT
+    assert q.returns == ("n", "m")
+    # n and m are referenced by RETURN
+    assert p.start.is_referenced and p.end.is_referenced
+
+
+@pytest.mark.parametrize("rng,expect", [
+    ("*", (1, INF_HOPS)),
+    ("*3", (3, 3)),
+    ("*3..", (3, INF_HOPS)),
+    ("*..4", (1, 4)),
+    ("*2..5", (2, 5)),
+])
+def test_hop_ranges(rng, expect):
+    q = parse_query(f"MATCH (a)-[:x{rng}]->(b) RETURN a")
+    assert q.path.rels[0].hop_range() == expect
+
+
+def test_key_filter_and_directions():
+    q = parse_query("MATCH (a:P {id: 7})<-[:x]-(b)-[:y*1..2]-(c) RETURN c")
+    assert q.path.start.key == 7
+    assert q.path.rels[0].direction is Direction.IN
+    assert q.path.rels[1].direction is Direction.BOTH
+    interior = q.path.nodes[1]
+    assert not interior.is_referenced
+    assert q.path.nodes[2].is_referenced
+
+
+def test_count_star():
+    q = parse_query("MATCH (a)-[:x]->(b) RETURN count(*)")
+    assert q.count_only
+
+
+def test_multi_segment():
+    q = parse_query(
+        "MATCH (a:A)-[:x*2..3]->(b:B)-[:y]->(c:C) RETURN a, c")
+    assert len(q.path.rels) == 2
+    assert q.path.nodes[1].label == "B"
+
+
+def test_view_statement():
+    v = parse_view("""CREATE VIEW ROOT_POST AS (
+        CONSTRUCT (c)-[r:ROOT_POST]->(p)
+        MATCH (c:Comment)-[:replyOf*..]->(p:Post))""")
+    assert v.name == "ROOT_POST"
+    assert v.forward  # construct src is match start
+    assert v.match.rels[0].unbounded
+
+
+def test_view_reversed_construct():
+    v = parse_view("""CREATE VIEW R AS (
+        CONSTRUCT (p)-[r:R]->(c)
+        MATCH (c:Comment)-[:replyOf*..]->(p:Post))""")
+    assert not v.forward
+
+
+@pytest.mark.parametrize("bad", [
+    "MATCH (a-[:x]->(b) RETURN a",
+    "MATCH (a)-[:x*5..2]->(b) RETURN a",
+    "CREATE VIEW V AS (CONSTRUCT (a)-[r:W]->(b) MATCH (a)-[:x]->(b))",
+])
+def test_parse_errors(bad):
+    with pytest.raises(ParseError):
+        if bad.startswith("CREATE"):
+            parse_view(bad)
+        else:
+            parse_query(bad)
+
+
+def test_pretty_round_trip():
+    text = "MATCH (n:Comment)-[:replyOf*2..5]->(m:Post) RETURN n, m"
+    q1 = parse_query(text)
+    q2 = parse_query(q1.pretty())
+    assert q1.path == q2.path
