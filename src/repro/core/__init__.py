@@ -1,26 +1,30 @@
 """MV4PG core: property-graph store, views, templated maintenance, optimizer."""
 from repro.core.schema import GraphSchema, LabelRegistry, NO_LABEL
 from repro.core.graph import (
-    PropertyGraph, GraphBuilder, create_edge, create_node, delete_edge,
-    delete_node, find_node,
+    PropertyGraph, GraphBuilder, LabelEpochs, WriteBatch, create_edge,
+    create_node, delete_edge, delete_node, find_node,
 )
 from repro.core.pattern import (
     Direction, NodePat, PathPattern, Query, RelPat, ViewDef,
 )
 from repro.core.parser import parse_query, parse_view
-from repro.core.executor import ExecConfig, Metrics, PathExecutor, ReachResult
+from repro.core.executor import (
+    ExecConfig, ExecEngine, Metrics, PathExecutor, ReachResult,
+)
 from repro.core.maintenance import ViewTemplates, MaintTemplate
-from repro.core.views import GraphSession, MaterializedView, ViewStats
+from repro.core.views import (
+    BatchResult, GraphSession, MaterializedView, ViewStats,
+)
 from repro.core.optimizer import optimize_query
 
 __all__ = [
     "GraphSchema", "LabelRegistry", "NO_LABEL",
-    "PropertyGraph", "GraphBuilder", "create_edge", "create_node",
-    "delete_edge", "delete_node", "find_node",
+    "PropertyGraph", "GraphBuilder", "LabelEpochs", "WriteBatch",
+    "create_edge", "create_node", "delete_edge", "delete_node", "find_node",
     "Direction", "NodePat", "PathPattern", "Query", "RelPat", "ViewDef",
     "parse_query", "parse_view",
-    "ExecConfig", "Metrics", "PathExecutor", "ReachResult",
+    "ExecConfig", "ExecEngine", "Metrics", "PathExecutor", "ReachResult",
     "ViewTemplates", "MaintTemplate",
-    "GraphSession", "MaterializedView", "ViewStats",
+    "BatchResult", "GraphSession", "MaterializedView", "ViewStats",
     "optimize_query",
 ]

@@ -23,13 +23,13 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import PropertyGraph
+from repro.core.graph import LabelEpochs, PropertyGraph
 from repro.core.pattern import Direction, PathPattern, Query, RelPat
 from repro.core.schema import GraphSchema, NO_LABEL
 from repro.utils import INF_HOPS, round_up
@@ -128,31 +128,108 @@ def _dense_adjacency(g: PropertyGraph, label_id: int, counting: bool,
 
 
 # ---------------------------------------------------------------------------
-# Executor
+# Engine: session-persistent cache owner
 # ---------------------------------------------------------------------------
 
-class PathExecutor:
-    """Evaluates :class:`PathPattern` s against a :class:`PropertyGraph`."""
+class ExecEngine:
+    """Owns the executor state that outlives a single query or write.
+
+    The seed rebuilt per-label compact edge slices, degree vectors, and dense
+    adjacency tiles on *every* query (and twice per single-edge write, once
+    per telescoping side).  The engine makes that state session-persistent:
+    every cache entry records the :class:`LabelEpochs` epoch of its edge
+    label at build time, and a mutation invalidates only the labels it
+    touched — a write to ``replyOf`` leaves the ``hasTag`` slices warm.
+
+    Wildcard (``NO_LABEL``) entries depend on the whole edge arena, so they
+    key off the global generation and drop on every graph swap.  ``hits`` /
+    ``misses`` count cache lookups (the engine-layer tests assert reuse and
+    per-label eviction through them).
+    """
 
     def __init__(self, g: PropertyGraph, schema: GraphSchema,
                  cfg: Optional[ExecConfig] = None):
         self.g = g
         self.schema = schema
         self.cfg = cfg or ExecConfig()
-        self._deg_cache: Dict[Tuple[int, bool], jax.Array] = {}
-        self._adj_cache: Dict[Tuple[int, bool, bool], jax.Array] = {}
-        self._edge_cache: Dict[int, Tuple] = {}
+        self.epochs = LabelEpochs()
+        self._edge_cache: Dict[int, Tuple[int, Tuple]] = {}
+        self._deg_cache: Dict[Tuple[int, bool], Tuple[int, jax.Array]] = {}
+        self._adj_cache: Dict[Tuple[int, bool, bool], Tuple[int, jax.Array]] = {}
+        self.hits = 0
+        self.misses = 0
 
-    # -- caches ----------------------------------------------------------
+    # -- invalidation -----------------------------------------------------
 
-    def invalidate(self, g: PropertyGraph):
-        """Swap in a mutated graph (drops degree/adjacency caches)."""
+    def set_graph(self, g: PropertyGraph,
+                  touched_edge_labels: Optional[Iterable[int]] = None) -> None:
+        """Swap in a mutated graph.
+
+        ``touched_edge_labels`` lists the edge labels the mutation touched;
+        only their entries (plus wildcard entries) are evicted.  ``None``
+        means the delta is unknown — evict everything (the conservative
+        behavior external ``session.g = ...`` assignments get).
+        """
+        if g is self.g:
+            return
         self.g = g
-        self._deg_cache.clear()
-        self._adj_cache.clear()
-        self._edge_cache.clear()
+        if touched_edge_labels is None:
+            self.epochs.bump_all()
+            self._edge_cache.clear()
+            self._deg_cache.clear()
+            self._adj_cache.clear()
+            return
+        touched = {int(l) for l in touched_edge_labels}
+        self.epochs.bump(touched)
 
-    def _label_edges(self, label_id: int):
+        def stale(lid: int) -> bool:
+            return lid in touched or lid == NO_LABEL
+
+        for k in [k for k in self._edge_cache if stale(k)]:
+            del self._edge_cache[k]
+        for k in [k for k in self._deg_cache if stale(k[0])]:
+            del self._deg_cache[k]
+        for k in [k for k in self._adj_cache if stale(k[0])]:
+            del self._adj_cache[k]
+
+    def snapshot(self, g: Optional[PropertyGraph] = None,
+                 touched_edge_labels: Optional[Iterable[int]] = None
+                 ) -> "ExecEngine":
+        """Derived engine sharing every still-valid cache entry.
+
+        Used for the old/mid-graph sides of telescoped maintenance deltas:
+        those graphs differ from the engine's graph only by the labels a
+        write touched, so the untouched labels' slices are reused instead of
+        rebuilt (the copies are dict-shallow; no array work happens here).
+        """
+        eng = ExecEngine(self.g, self.schema, self.cfg)
+        eng.epochs = self.epochs.snapshot()
+        eng._edge_cache = dict(self._edge_cache)
+        eng._deg_cache = dict(self._deg_cache)
+        eng._adj_cache = dict(self._adj_cache)
+        if g is not None:
+            eng.set_graph(g, touched_edge_labels)
+        return eng
+
+    def cached_edge_labels(self) -> set:
+        """Labels with a live compact-slice entry (engine-test introspection)."""
+        return {lid for lid, (ep, _) in self._edge_cache.items()
+                if ep == self.epochs.of(lid)}
+
+    # -- epoch-checked lookup ---------------------------------------------
+
+    def _lookup(self, cache: Dict, key, label_id: int, build):
+        ep = self.epochs.of(label_id)
+        ent = cache.get(key)
+        if ent is not None and ent[0] == ep:
+            self.hits += 1
+            return ent[1]
+        self.misses += 1
+        val = build()
+        cache[key] = (ep, val)
+        return val
+
+    def label_edges(self, label_id: int):
         """Per-label edge index: compact (src, dst, weight, mask) arrays.
 
         A GDBMS scans only the label's adjacency; the mask-scan over the
@@ -160,40 +237,81 @@ class PathExecutor:
         arena and slow every *other* query down.  The compact slice makes a
         hop O(E_label) (measured 2-6x on the paper workloads; see
         EXPERIMENTS.md §Perf)."""
-        if label_id in self._edge_cache:
-            return self._edge_cache[label_id]
+        return self._lookup(self._edge_cache, label_id, label_id,
+                            lambda: self._build_label_edges(label_id))
+
+    def _build_label_edges(self, label_id: int):
         if label_id == NO_LABEL:
-            entry = (self.g.edge_src, self.g.edge_dst, self.g.edge_weight,
-                     self.g.edge_alive)
-        else:
-            idx = np.flatnonzero(np.asarray(self.g.edge_alive)
-                                 & (np.asarray(self.g.edge_label) == label_id))
-            cap = max(round_up(idx.shape[0], 512), 512)
-            pad = np.zeros(cap, np.int32)
-            src = pad.copy(); dst = pad.copy(); w = pad.copy()
-            mask = np.zeros(cap, bool)
-            src[: idx.shape[0]] = np.asarray(self.g.edge_src)[idx]
-            dst[: idx.shape[0]] = np.asarray(self.g.edge_dst)[idx]
-            w[: idx.shape[0]] = np.asarray(self.g.edge_weight)[idx]
-            mask[: idx.shape[0]] = True
-            entry = (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
-                     jnp.asarray(mask))
-        self._edge_cache[label_id] = entry
-        return entry
+            return (self.g.edge_src, self.g.edge_dst, self.g.edge_weight,
+                    self.g.edge_alive)
+        idx = np.flatnonzero(np.asarray(self.g.edge_alive)
+                             & (np.asarray(self.g.edge_label) == label_id))
+        cap = max(round_up(idx.shape[0], 512), 512)
+        pad = np.zeros(cap, np.int32)
+        src = pad.copy(); dst = pad.copy(); w = pad.copy()
+        mask = np.zeros(cap, bool)
+        src[: idx.shape[0]] = np.asarray(self.g.edge_src)[idx]
+        dst[: idx.shape[0]] = np.asarray(self.g.edge_dst)[idx]
+        w[: idx.shape[0]] = np.asarray(self.g.edge_weight)[idx]
+        mask[: idx.shape[0]] = True
+        return (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+                jnp.asarray(mask))
+
+    def deg(self, label_id: int, reverse: bool) -> jax.Array:
+        return self._lookup(
+            self._deg_cache, (label_id, reverse), label_id,
+            lambda: (self.g.in_degree(label_id) if reverse
+                     else self.g.out_degree(label_id)))
+
+    def adj(self, label_id: int, counting: bool, reverse: bool) -> jax.Array:
+        return self._lookup(
+            self._adj_cache, (label_id, counting, reverse), label_id,
+            lambda: _dense_adjacency(self.g, label_id, counting, reverse))
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+class PathExecutor:
+    """Evaluates :class:`PathPattern` s against a :class:`PropertyGraph`.
+
+    Evaluation state (frontier blocking, metrics) lives here; cached derived
+    state (label slices, degrees, adjacency) lives in the :class:`ExecEngine`.
+    Constructing with ``engine=`` binds to a shared persistent engine; the
+    legacy ``PathExecutor(g, schema, cfg)`` form creates a private one.
+    """
+
+    def __init__(self, g: Optional[PropertyGraph] = None,
+                 schema: Optional[GraphSchema] = None,
+                 cfg: Optional[ExecConfig] = None,
+                 engine: Optional[ExecEngine] = None):
+        if engine is None:
+            if g is None or schema is None:
+                raise ValueError("PathExecutor needs (g, schema) or engine=")
+            engine = ExecEngine(g, schema, cfg)
+        self.engine = engine
+        self.schema = engine.schema if schema is None else schema
+        self.cfg = cfg or engine.cfg
+
+    @property
+    def g(self) -> PropertyGraph:
+        return self.engine.g
+
+    # -- caches (delegated to the engine) ---------------------------------
+
+    def invalidate(self, g: PropertyGraph):
+        """Swap in a mutated graph (unknown delta: drops all caches)."""
+        self.engine.set_graph(g, None)
+
+    def _label_edges(self, label_id: int):
+        return self.engine.label_edges(label_id)
 
     def _deg(self, label_id: int, reverse: bool) -> jax.Array:
-        key = (label_id, reverse)
-        if key not in self._deg_cache:
-            self._deg_cache[key] = (self.g.in_degree(label_id) if reverse
-                                    else self.g.out_degree(label_id))
-        return self._deg_cache[key]
+        return self.engine.deg(label_id, reverse)
 
     def _adj(self, label_id: int, counting: bool, reverse: bool) -> jax.Array:
-        key = (label_id, counting, reverse)
-        if key not in self._adj_cache:
-            self._adj_cache[key] = _dense_adjacency(
-                self.g, label_id, counting, reverse)
-        return self._adj_cache[key]
+        return self.engine.adj(label_id, counting, reverse)
 
     # -- primitive hop ----------------------------------------------------
 

@@ -15,8 +15,8 @@ multiples of 128 to keep tiles MXU-aligned on the TPU target.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Tuple
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,93 @@ from repro.core.schema import GraphSchema, NO_LABEL
 from repro.utils import round_up
 
 DEAD = -1  # label value for dead slots
+
+
+# ---------------------------------------------------------------------------
+# Per-label mutation epochs (host-side version counters)
+# ---------------------------------------------------------------------------
+
+class LabelEpochs:
+    """Per-edge-label version counters for fine-grained cache invalidation.
+
+    The :class:`PropertyGraph` itself is immutable; a mutation produces a new
+    pytree.  What persists across versions is the *engine* (executor caches),
+    and it needs to know which labels a mutation touched.  Every mutation
+    bumps the epoch of each edge label it touched plus a global generation;
+    cache entries record the epoch they were built at and are stale iff the
+    label's epoch moved (wildcard/NO_LABEL entries key off the global
+    generation, since they depend on every label).
+    """
+
+    def __init__(self) -> None:
+        self._by_label: Dict[int, int] = {}
+        self.generation: int = 0   # bumped on every graph swap
+
+    def of(self, label_id: int) -> int:
+        if label_id == NO_LABEL:
+            return self.generation
+        return self._by_label.get(label_id, 0)
+
+    def bump(self, label_ids: Iterable[int]) -> None:
+        self.generation += 1
+        for lid in label_ids:
+            if lid == NO_LABEL:
+                continue
+            self._by_label[lid] = self._by_label.get(lid, 0) + 1
+
+    def bump_all(self) -> None:
+        self.generation += 1
+        for lid in list(self._by_label):
+            self._by_label[lid] += 1
+
+    def snapshot(self) -> "LabelEpochs":
+        e = LabelEpochs()
+        e._by_label = dict(self._by_label)
+        e.generation = self.generation
+        return e
+
+
+# ---------------------------------------------------------------------------
+# Write batches (the unit of batched maintenance)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class WriteBatch:
+    """A group of base-graph mutations applied (and maintained) together.
+
+    Application order is fixed and documented: **edge deletes, then edge
+    creates, then node creates, then node deletes**.  The order matters for
+    the exactness of the telescoped maintenance deltas (see
+    :mod:`repro.core.maintenance`): deletes and creates telescope around a
+    common mid-graph, and node deletes are handled last by affected-source
+    recompute on the final graph.
+    """
+
+    edge_creates: List[Tuple[int, int, str]] = field(default_factory=list)
+    edge_deletes: List[int] = field(default_factory=list)
+    node_creates: List[Tuple[str, Optional[int]]] = field(default_factory=list)
+    node_deletes: List[int] = field(default_factory=list)
+
+    # -- builder-style helpers -------------------------------------------
+    def create_edge(self, src: int, dst: int, label: str) -> "WriteBatch":
+        self.edge_creates.append((int(src), int(dst), label))
+        return self
+
+    def delete_edge(self, edge_id: int) -> "WriteBatch":
+        self.edge_deletes.append(int(edge_id))
+        return self
+
+    def create_node(self, label: str, key: Optional[int] = None) -> "WriteBatch":
+        self.node_creates.append((label, key))
+        return self
+
+    def delete_node(self, node_id: int) -> "WriteBatch":
+        self.node_deletes.append(int(node_id))
+        return self
+
+    def __len__(self) -> int:
+        return (len(self.edge_creates) + len(self.edge_deletes)
+                + len(self.node_creates) + len(self.node_deletes))
 
 
 @jax.tree_util.register_dataclass
@@ -148,6 +235,27 @@ def create_node(g: PropertyGraph, slot, label_id, key) -> PropertyGraph:
         node_key=g.node_key.at[slot].set(jnp.asarray(key, jnp.int32)),
         node_alive=g.node_alive.at[slot].set(True),
     )
+
+
+def create_nodes(g: PropertyGraph, slots, label_ids, keys) -> PropertyGraph:
+    """Vectorized multi-node write (one ``.at[]`` dispatch per array)."""
+    slots = jnp.asarray(slots, jnp.int32)
+    return replace(
+        g,
+        node_label=g.node_label.at[slots].set(jnp.asarray(label_ids, jnp.int32)),
+        node_key=g.node_key.at[slots].set(jnp.asarray(keys, jnp.int32)),
+        node_alive=g.node_alive.at[slots].set(True),
+    )
+
+
+def delete_nodes(g: PropertyGraph, node_ids) -> PropertyGraph:
+    """Delete many nodes and every incident edge in one masked update."""
+    node_ids = jnp.asarray(node_ids, jnp.int32)
+    node_alive = g.node_alive.at[node_ids].set(False)
+    dead = jnp.zeros(g.node_cap, bool).at[node_ids].set(True)
+    incident = dead[g.edge_src] | dead[g.edge_dst]
+    edge_alive = g.edge_alive & ~incident
+    return replace(g, node_alive=node_alive, edge_alive=edge_alive)
 
 
 def free_edge_slots(g: PropertyGraph, n: int) -> np.ndarray:

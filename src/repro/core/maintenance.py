@@ -255,6 +255,18 @@ def _endpoint_ok(g: PropertyGraph, schema: GraphSchema, node: NodePat,
     return True
 
 
+def _node_pat_mask(schema: GraphSchema, node: NodePat, ids: np.ndarray,
+                   labels: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Vectorized ``_endpoint_ok`` over host copies of the node arrays."""
+    lid = schema.node_label_id(node.label)
+    m = np.ones(ids.shape[0], bool)
+    if lid != NO_LABEL:
+        m &= labels[ids] == lid
+    if node.key is not None:
+        m &= keys[ids] == node.key
+    return m
+
+
 @dataclass
 class DeltaPairs:
     """Sparse (src, dst, count) delta produced by template instantiation."""
@@ -353,6 +365,139 @@ def edge_delta_pairs(
 
 def _subpath_rev(path: PathPattern) -> PathPattern:
     return path.reversed()
+
+
+# ---------------------------------------------------------------------------
+# Batched (multi-Δ) template instantiation
+# ---------------------------------------------------------------------------
+#
+# The telescoping identity is linear in the update:  for a batch delta
+# Δ = Σ_j E_j of one label,  A_new^k − A_old^k = Σ_i A_new^i · Δ · A_old^{k−1−i}
+# holds verbatim (each changed path instance is counted exactly once, at the
+# last created / first deleted edge it uses).  So a batch of J edges needs one
+# J-source ``run_path`` per (template, side) instead of J single-source runs —
+# the executor blocks all J frontier rows into the same jitted hops.
+
+def batch_edge_delta_pairs(
+    templates: ViewTemplates,
+    vdef: ViewDef,
+    schema: GraphSchema,
+    edge_srcs: np.ndarray,
+    edge_dsts: np.ndarray,
+    edge_label: str,
+    counting: bool,
+    metrics: Metrics,
+    ex_pre: PathExecutor,
+    ex_suf: PathExecutor,
+) -> DeltaPairs:
+    """Exact path-count delta for a batch of created/deleted same-label edges.
+
+    ``ex_pre``/``ex_suf`` select the telescoping sides exactly as in
+    :func:`edge_delta_pairs` — create: (new, old); delete: (old, new); for a
+    mixed batch the caller telescopes both steps around a common mid graph.
+    Duplicate edges in the batch contribute with multiplicity, matching
+    Δ = Σ_j E_j.
+    """
+    edge_srcs = np.asarray(edge_srcs, np.int32)
+    edge_dsts = np.asarray(edge_dsts, np.int32)
+    if edge_srcs.size == 0:
+        return DeltaPairs.empty()
+    parts: List[DeltaPairs] = []
+    node_arrays = None  # host copies for endpoint checks, fetched on demand
+    for tpl in templates.edge:
+        if tpl.rel_label is not None and tpl.rel_label != edge_label:
+            continue
+        rel = vdef.match.rels[tpl.position]
+        if rel.direction is Direction.IN:
+            orientations = [(edge_dsts, edge_srcs)]
+        elif rel.direction is Direction.OUT:
+            orientations = [(edge_srcs, edge_dsts)]
+        else:
+            orientations = [(edge_srcs, edge_dsts), (edge_dsts, edge_srcs)]
+        for U, V in orientations:
+            if tpl.split is None:
+                if node_arrays is None:
+                    node_arrays = (np.asarray(ex_pre.g.node_label),
+                                   np.asarray(ex_pre.g.node_key),
+                                   np.asarray(ex_suf.g.node_label),
+                                   np.asarray(ex_suf.g.node_key))
+                pre_nl, pre_nk, suf_nl, suf_nk = node_arrays
+                keep = (_node_pat_mask(schema, vdef.match.nodes[tpl.position],
+                                       U, pre_nl, pre_nk)
+                        & _node_pat_mask(schema,
+                                         vdef.match.nodes[tpl.position + 1],
+                                         V, suf_nl, suf_nk))
+                if not keep.any():
+                    continue
+                U_k, V_k = U[keep], V[keep]
+            else:
+                U_k, V_k = U, V
+            pre = _run_from(ex_pre, tpl.prefix.reversed(), U_k, counting,
+                            metrics)
+            suf = _run_from(ex_suf, tpl.suffix, V_k, counting, metrics)
+            for j in range(U_k.size):
+                part = DeltaPairs.from_outer(pre[j], suf[j], counting)
+                if part.src.size:
+                    parts.append(part)
+    if not parts:
+        return DeltaPairs.empty()
+    # single concatenate keeps the batched path linear in total pairs
+    acc = DeltaPairs(np.concatenate([p.src for p in parts]),
+                     np.concatenate([p.dst for p in parts]),
+                     np.concatenate([p.count for p in parts]))
+    return acc.merged()
+
+
+def affected_sources_edges(templates: ViewTemplates, vdef: ViewDef,
+                           schema: GraphSchema,
+                           edge_srcs: np.ndarray, edge_dsts: np.ndarray,
+                           edge_label: str, metrics: Metrics,
+                           ex: PathExecutor) -> np.ndarray:
+    """Batched :func:`affected_sources_edge`: one multi-source prefix run per
+    template over every delta edge of the label."""
+    edge_srcs = np.asarray(edge_srcs, np.int32)
+    edge_dsts = np.asarray(edge_dsts, np.int32)
+    hit = np.zeros(ex.g.node_cap, bool)
+    if edge_srcs.size == 0:
+        return np.zeros(0, np.int32)
+    for tpl in templates.edge:
+        if tpl.rel_label is not None and tpl.rel_label != edge_label:
+            continue
+        rel = vdef.match.rels[tpl.position]
+        if rel.direction is Direction.IN:
+            starts = edge_dsts
+        elif rel.direction is Direction.OUT:
+            starts = edge_srcs
+        else:
+            starts = np.concatenate([edge_srcs, edge_dsts])
+        starts = np.unique(starts)
+        rows = _run_from(ex, tpl.prefix.reversed(), starts, counting=False,
+                         metrics=metrics)
+        hit |= rows.astype(bool).any(axis=0)
+    return np.flatnonzero(hit).astype(np.int32)
+
+
+def affected_sources_nodes(templates: ViewTemplates, vdef: ViewDef,
+                           schema: GraphSchema, node_ids: np.ndarray,
+                           metrics: Metrics, ex: PathExecutor) -> np.ndarray:
+    """Batched :func:`affected_sources_node` over every deleted node at once."""
+    node_ids = np.unique(np.asarray(node_ids, np.int32))
+    hit = np.zeros(ex.g.node_cap, bool)
+    if node_ids.size == 0:
+        return np.zeros(0, np.int32)
+    node_labels = np.asarray(ex.g.node_label)
+    for tpl in templates.node_delete:
+        if tpl.node_label is not None:
+            lid = schema.node_label_id(tpl.node_label)
+            ids = node_ids[node_labels[node_ids] == lid]
+        else:
+            ids = node_ids
+        if ids.size == 0:
+            continue
+        rows = _run_from(ex, tpl.prefix.reversed(), ids, counting=False,
+                         metrics=metrics)
+        hit |= rows.astype(bool).any(axis=0)
+    return np.flatnonzero(hit).astype(np.int32)
 
 
 def affected_sources_node(templates: ViewTemplates, vdef: ViewDef,

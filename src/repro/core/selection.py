@@ -21,7 +21,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.executor import ExecConfig, PathExecutor
+from repro.core.executor import ExecConfig, ExecEngine, PathExecutor
 from repro.core.matcher import match_view
 from repro.core.optimizer import change_pg
 from repro.core.parser import parse_query
@@ -124,10 +124,20 @@ def score_candidate(ex: PathExecutor, sub: PathPattern, queries: Sequence[Query]
 
 
 def select_views(g, schema, read_queries: Sequence[str], k: int = 3,
-                 cfg: Optional[ExecConfig] = None) -> List[ViewDef]:
-    """Greedy top-k workload-driven view selection (measured Eq. 1 scores)."""
+                 cfg: Optional[ExecConfig] = None,
+                 engine: Optional[ExecEngine] = None) -> List[ViewDef]:
+    """Greedy top-k workload-driven view selection (measured Eq. 1 scores).
+
+    Pass a session's :class:`ExecEngine` as ``engine`` to score candidates on
+    the already-warm per-label caches instead of rebuilding them; candidate
+    probes are pure reads, so the engine state they leave behind (warmed
+    slices) stays valid for the session."""
     queries = [parse_query(q) for q in read_queries]
-    ex = PathExecutor(g, schema, cfg or ExecConfig(collect_metrics=True))
+    if engine is not None:
+        ex = PathExecutor(engine=engine,
+                          cfg=cfg or ExecConfig(collect_metrics=True))
+    else:
+        ex = PathExecutor(g, schema, cfg or ExecConfig(collect_metrics=True))
     chosen: List[ViewDef] = []
     remaining = {_signature(s): s for s in candidate_subpaths(queries)}
     live_queries = list(queries)

@@ -6,20 +6,30 @@ new edge labeled ROOT_POST").  Bag semantics (one result row per path
 instance) is preserved compactly via the per-edge ``weight`` = path count;
 unbounded (``*n..``) views use set semantics with weight 1 (counting infinite
 walk families is undefined; see DESIGN.md §2).
+
+The session owns one persistent :class:`~repro.core.executor.ExecEngine`
+(DESIGN.md §4): per-label compact edge slices, degree vectors and dense
+adjacency tiles survive across queries and writes, and a mutation invalidates
+only the labels it touched.  Writes go through :meth:`GraphSession.apply_writes`
+— single-op ``create_edge``/``delete_edge``/``delete_node`` are one-element
+batches — and maintenance evaluates one grouped telescoped delta per
+(view, label) instead of one per edge.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core import graph as G
-from repro.core.executor import ExecConfig, Metrics, PathExecutor, ReachResult
+from repro.core.executor import (
+    ExecConfig, ExecEngine, Metrics, PathExecutor, ReachResult,
+)
 from repro.core.maintenance import (
-    DeltaPairs, ViewTemplates, _delta_exec, affected_sources_edge,
-    affected_sources_node, edge_delta_pairs,
+    DeltaPairs, ViewTemplates, affected_sources_edges, affected_sources_nodes,
+    batch_edge_delta_pairs,
 )
 from repro.core.parser import parse_query, parse_view
 from repro.core.pattern import PathPattern, Query, ViewDef
@@ -61,27 +71,70 @@ class MaterializedView:
         return (s, d) if self.vdef.forward else (d, s)
 
 
+@dataclass
+class BatchResult:
+    """Slot ids assigned by :meth:`GraphSession.apply_writes`, in batch order."""
+
+    edge_slots: np.ndarray   # arena slots of batch.edge_creates
+    node_slots: np.ndarray   # arena slots of batch.node_creates
+
+
 class GraphSession:
     """Owns the graph + schema + view catalog; the workload entry point.
 
     Mirrors the paper's Figure 4: queries pass through the view-based
-    optimizer; writes trigger template-driven maintenance.
+    optimizer; writes trigger template-driven maintenance.  All evaluation
+    runs on one session-persistent engine with label-granular invalidation;
+    the old/mid graph sides of telescoped deltas run on engine snapshots
+    that share every still-valid cache entry.
     """
 
     def __init__(self, g: G.PropertyGraph, schema: GraphSchema,
                  cfg: Optional[ExecConfig] = None, auto_optimize: bool = True):
-        self.g = g
         self.schema = schema
         self.cfg = cfg or ExecConfig()
         self.auto_optimize = auto_optimize
         self.views: Dict[str, MaterializedView] = {}
         self.last_maintenance_metrics = Metrics()
         self.last_rewrite_seconds = 0.0
+        self.engine = ExecEngine(g, schema, self.cfg)
+        self._delta_cfg = ExecConfig(
+            backend="segment", src_block=8,
+            max_closure_iters=self.cfg.max_closure_iters,
+            collect_metrics=False)
+        # persistent executors: reads use the workload config, delta sides the
+        # small-block maintenance config; the old/mid wrappers are rebound to
+        # engine snapshots per write (never rebuilt from scratch)
+        self._exec = PathExecutor(engine=self.engine, cfg=self.cfg)
+        self._delta = PathExecutor(engine=self.engine, cfg=self._delta_cfg)
+        self._old_exec = PathExecutor(engine=self.engine, cfg=self._delta_cfg)
+        self._mid_exec = PathExecutor(engine=self.engine, cfg=self._delta_cfg)
+        self._aux_exec = PathExecutor(engine=self.engine, cfg=self._delta_cfg)
 
-    # ------------------------------------------------------------- executor
+    # ------------------------------------------------------------- graph
 
-    def _executor(self, g: Optional[G.PropertyGraph] = None) -> PathExecutor:
-        return PathExecutor(g if g is not None else self.g, self.schema, self.cfg)
+    @property
+    def g(self) -> G.PropertyGraph:
+        return self.engine.g
+
+    @g.setter
+    def g(self, g: G.PropertyGraph) -> None:
+        # external assignment: unknown delta -> conservative full invalidation
+        self.engine.set_graph(g, None)
+
+    def _set_graph(self, g: G.PropertyGraph,
+                   touched_edge_labels: Iterable[int]) -> None:
+        self.engine.set_graph(g, touched_edge_labels)
+
+    def _reserve_edge_slots(self, g: G.PropertyGraph, n: int
+                            ) -> Tuple[G.PropertyGraph, np.ndarray]:
+        """Reserve ``n`` free edge slots, growing the arena first if needed so
+        growth cannot invalidate slots handed out earlier."""
+        free = np.flatnonzero(~np.asarray(g.edge_alive))
+        if free.shape[0] < n:
+            g = G.grow_edge_arena(g, g.edge_cap + 2 * n + 128)
+            free = np.flatnonzero(~np.asarray(g.edge_alive))
+        return g, free[:n].astype(np.int32)
 
     # ----------------------------------------------------------- view create
 
@@ -91,22 +144,17 @@ class GraphSession:
             raise ValueError(f"view {vdef.name!r} already exists")
         t0 = time.perf_counter()
         counting = not any(r.unbounded for r in vdef.match.rels)
-        ex = self._executor()
-        res = ex.run_path(vdef.match, counting=counting)
+        res = self._exec.run_path(vdef.match, counting=counting)
         s_ids, d_ids, cnt = res.pairs()
 
         label_id = self.schema.edge_labels.intern(vdef.name)
         srcs, dsts = (s_ids, d_ids) if vdef.forward else (d_ids, s_ids)
         n_new = srcs.shape[0]
-        free = np.flatnonzero(~np.asarray(self.g.edge_alive))
-        if free.shape[0] < n_new:
-            self.g = G.grow_edge_arena(
-                self.g, self.g.edge_cap + 2 * (n_new - free.shape[0]) + 128)
-            free = np.flatnonzero(~np.asarray(self.g.edge_alive))
-        slots = free[:n_new]
+        g, slots = self._reserve_edge_slots(self.g, n_new)
         if n_new:
-            self.g = G.create_edges(self.g, slots, srcs, dsts, label_id,
-                                    cnt if counting else np.ones_like(cnt))
+            g = G.create_edges(g, slots, srcs, dsts, label_id,
+                               cnt if counting else np.ones_like(cnt))
+        self._set_graph(g, {label_id})
 
         start_lid = self.schema.node_label_id(vdef.match.start.label)
         n_sl = int(np.asarray(self.g.node_mask(start_lid)).sum())
@@ -130,7 +178,7 @@ class GraphSession:
         slots = np.fromiter(view.pair_slot.values(), np.int32,
                             len(view.pair_slot))
         if slots.size:
-            self.g = G.delete_edges(self.g, slots)
+            self._set_graph(G.delete_edges(self.g, slots), {view.label_id})
 
     # ------------------------------------------------------ view-edge deltas
 
@@ -141,11 +189,9 @@ class GraphSession:
             return
         # upper bound on new slots = all delta entries; reserve them upfront so
         # arena growth cannot invalidate slots handed out earlier in the loop
-        free = np.flatnonzero(~np.asarray(self.g.edge_alive))
-        if free.shape[0] < delta.src.size:
-            self.g = G.grow_edge_arena(
-                self.g, self.g.edge_cap + 2 * int(delta.src.size) + 128)
-            free = np.flatnonzero(~np.asarray(self.g.edge_alive))
+        g, free = self._reserve_edge_slots(self.g, int(delta.src.size))
+        if g is not self.g:
+            self._set_graph(g, set())
         add_slots: List[int] = []
         add_src: List[int] = []
         add_dst: List[int] = []
@@ -165,15 +211,20 @@ class GraphSession:
                 add_slots.append(slot)
                 add_src.append(key[0]); add_dst.append(key[1]); add_w.append(w)
                 view.pair_slot[key] = slot
-            # w<0 on a missing pair would mean the delta engine overshot;
-            # exactness of the telescoped delta guarantees it cannot happen.
+            # w<0 on a missing pair is only reachable in batches where a node
+            # delete already killed the pair's arena edge; skipping is exact
+            # (the affected-source recompute owns those rows).
         if add_slots:
-            self.g = G.create_edges(self.g, np.asarray(add_slots),
-                                    np.asarray(add_src), np.asarray(add_dst),
-                                    view.label_id, np.asarray(add_w))
+            self._set_graph(
+                G.create_edges(self.g, np.asarray(add_slots),
+                               np.asarray(add_src), np.asarray(add_dst),
+                               view.label_id, np.asarray(add_w)),
+                {view.label_id})
         if upd_slots:
-            self.g = G.add_edge_weight(self.g, np.asarray(upd_slots),
-                                       np.asarray(upd_delta))
+            self._set_graph(
+                G.add_edge_weight(self.g, np.asarray(upd_slots),
+                                  np.asarray(upd_delta)),
+                {view.label_id})
             # drop dead pairs from the index
             w = np.asarray(self.g.edge_weight)[np.asarray(upd_slots)]
             for slot, wv in zip(upd_slots, w):
@@ -184,12 +235,12 @@ class GraphSession:
 
     def _recompute_sources(self, view: MaterializedView,
                            sources: np.ndarray, metrics: Metrics,
-                           ex: Optional[object] = None) -> None:
+                           ex: Optional[PathExecutor] = None) -> None:
         """Re-derive view rows for the affected sources on the current graph."""
         # current stored pairs for these sources (view-src orientation if fwd)
         desired: Dict[Tuple[int, int], int] = {}
         if sources.size:
-            ex = ex or _delta_exec(self.g, self.schema, self.cfg)
+            ex = ex or self._delta
             res = ex.run_path(view.vdef.match, counting=view.counting,
                               sources=sources)
             metrics += res.metrics
@@ -214,10 +265,13 @@ class GraphSession:
                 upd_slots.append(slot)
                 upd_delta.append(want - have)
         if kill_slots:
-            self.g = G.delete_edges(self.g, np.asarray(kill_slots))
+            self._set_graph(G.delete_edges(self.g, np.asarray(kill_slots)),
+                            {view.label_id})
         if upd_slots:
-            self.g = G.add_edge_weight(self.g, np.asarray(upd_slots),
-                                       np.asarray(upd_delta))
+            self._set_graph(
+                G.add_edge_weight(self.g, np.asarray(upd_slots),
+                                  np.asarray(upd_delta)),
+                {view.label_id})
         if desired:  # brand-new pairs
             keys = list(desired.keys())
             delta = DeltaPairs(
@@ -233,78 +287,229 @@ class GraphSession:
 
     def create_edge(self, src: int, dst: int, label: str) -> int:
         """Create a base edge; incrementally maintain every view."""
-        metrics = Metrics()
-        g_old = self.g
-        label_id = self.schema.edge_labels.intern(label)
-        slot = int(G.free_edge_slots(self.g, 1)[0])
-        self.g = G.create_edge(self.g, slot, src, dst, label_id)
-        ex_new = _delta_exec(self.g, self.schema, self.cfg)
-        ex_old = _delta_exec(g_old, self.schema, self.cfg)
-        for view in self.views.values():
-            if not self._uses_label(view, label):
-                continue
-            if view.counting:
-                delta = edge_delta_pairs(
-                    view.templates, view.vdef, self.g, g_old, self.schema,
-                    self.cfg, src, dst, label, counting=True, metrics=metrics,
-                    ex_pre=ex_new, ex_suf=ex_old)
-                self._apply_delta(view, delta, sign=+1)
-            else:
-                delta = edge_delta_pairs(
-                    view.templates, view.vdef, self.g, self.g, self.schema,
-                    self.cfg, src, dst, label, counting=False, metrics=metrics,
-                    ex_pre=ex_new, ex_suf=ex_new)
-                # set-union: only add pairs not already present
-                self._apply_union(view, delta)
-        self.last_maintenance_metrics = metrics
-        return slot
+        res = self.apply_writes(
+            G.WriteBatch(edge_creates=[(int(src), int(dst), label)]))
+        return int(res.edge_slots[0])
 
     def delete_edge(self, edge_id: int) -> None:
-        metrics = Metrics()
-        g_old = self.g
-        if not bool(g_old.edge_alive[edge_id]):
-            return  # deleting a dead slot is a no-op (idempotent deletes)
-        src = int(g_old.edge_src[edge_id]); dst = int(g_old.edge_dst[edge_id])
-        label = self.schema.edge_labels.name_of(int(g_old.edge_label[edge_id]))
-        self.g = G.delete_edge(self.g, edge_id)
-        ex_new = _delta_exec(self.g, self.schema, self.cfg)
-        ex_old = _delta_exec(g_old, self.schema, self.cfg)
-        for view in self.views.values():
-            if not self._uses_label(view, label):
-                continue
-            if view.counting:
-                delta = edge_delta_pairs(
-                    view.templates, view.vdef, g_old, self.g, self.schema,
-                    self.cfg, src, dst, label, counting=True, metrics=metrics,
-                    ex_pre=ex_old, ex_suf=ex_new)
-                self._apply_delta(view, delta, sign=-1)
-            else:
-                affected = affected_sources_edge(
-                    view.templates, view.vdef, g_old, self.schema, self.cfg,
-                    src, dst, label, metrics, ex=ex_old)
-                self._recompute_sources(view, affected, metrics, ex=ex_new)
-        self.last_maintenance_metrics = metrics
+        self.apply_writes(G.WriteBatch(edge_deletes=[int(edge_id)]))
 
     def delete_node(self, node_id: int) -> None:
+        self.apply_writes(G.WriteBatch(node_deletes=[int(node_id)]))
+
+    def create_node(self, label: str, key: Optional[int] = None) -> int:
+        """Create a node (no maintenance needed; paper §IV-B)."""
+        slot = int(G.free_node_slots(self.g, 1)[0])
+        lid = self.schema.node_labels.intern(label)
+        g = G.create_node(self.g, slot, lid, slot if key is None else int(key))
+        self._set_graph(g, set())
+        return slot
+
+    # ----------------------------------------------------- batched write path
+
+    def apply_writes(self, batch: G.WriteBatch) -> BatchResult:
+        """Apply a :class:`~repro.core.graph.WriteBatch`, then maintain every
+        view with one grouped delta pass per (view, label).
+
+        Application order is the batch contract: edge deletes, then edge
+        creates, then node creates, then node deletes.  Counting views get
+        exact two-step telescoped deltas (deletes telescope old→mid, creates
+        mid→new around the common mid graph); set-semantics deletes and all
+        node deletes are handled by one batched affected-source recompute per
+        view on the final graph.  Returns the assigned edge and node slots,
+        in batch order.
+        """
         metrics = Metrics()
-        g_old = self.g
-        if not bool(g_old.node_alive[node_id]):
-            return
-        # base mutation also kills incident edges — including view edges
-        self.g = G.delete_node(self.g, node_id)
-        ex_new = _delta_exec(self.g, self.schema, self.cfg)
-        ex_old = _delta_exec(g_old, self.schema, self.cfg)
+        g0 = self.g
+
+        # -- resolve edge deletes against g0 (dedup; dead slots are no-ops)
+        e_alive0 = np.asarray(g0.edge_alive)
+        e_src0 = np.asarray(g0.edge_src)
+        e_dst0 = np.asarray(g0.edge_dst)
+        e_lab0 = np.asarray(g0.edge_label)
+        del_ids: List[int] = []
+        del_by_label: Dict[int, List[Tuple[int, int]]] = {}
+        seen = set()
+        for eid in batch.edge_deletes:
+            eid = int(eid)
+            if eid in seen or not bool(e_alive0[eid]):
+                continue
+            seen.add(eid)
+            del_ids.append(eid)
+            del_by_label.setdefault(int(e_lab0[eid]), []).append(
+                (int(e_src0[eid]), int(e_dst0[eid])))
+
+        # -- step 1: edge deletes  g0 -> g1
+        g1 = (G.delete_edges(g0, np.asarray(del_ids, np.int32))
+              if del_ids else g0)
+
+        # -- step 2: edge creates  g1 -> g2 (reserve-then-grow)
+        create_by_label: Dict[int, List[int]] = {}
+        for j, (_, _, lbl) in enumerate(batch.edge_creates):
+            lid = self.schema.edge_labels.intern(lbl)
+            create_by_label.setdefault(lid, []).append(j)
+        g2 = g1
+        created_slots = np.zeros(0, np.int32)
+        if batch.edge_creates:
+            g2, created_slots = self._reserve_edge_slots(
+                g1, len(batch.edge_creates))
+            for lid, idxs in create_by_label.items():
+                g2 = G.create_edges(
+                    g2, created_slots[idxs],
+                    np.asarray([batch.edge_creates[j][0] for j in idxs],
+                               np.int32),
+                    np.asarray([batch.edge_creates[j][1] for j in idxs],
+                               np.int32),
+                    lid, np.ones(len(idxs), np.int32))
+
+        # -- step 3: node creates  g2 -> g2n (no maintenance; paper §IV-B)
+        g2n = g2
+        created_nodes = np.zeros(0, np.int32)
+        if batch.node_creates:
+            created_nodes = np.asarray(
+                G.free_node_slots(g2, len(batch.node_creates)), np.int32)
+            g2n = G.create_nodes(
+                g2, created_nodes,
+                np.asarray([self.schema.node_labels.intern(l)
+                            for l, _ in batch.node_creates], np.int32),
+                np.asarray([int(created_nodes[i]) if k is None else int(k)
+                            for i, (_, k) in enumerate(batch.node_creates)],
+                           np.int32))
+
+        # -- step 4: node deletes  g2n -> g3 (kills incident edges too)
+        n_alive = np.asarray(g2n.node_alive)
+        node_del = np.unique(np.asarray(
+            [n for n in batch.node_deletes if bool(n_alive[int(n)])],
+            np.int32))
+        incident_labels: set = set()
+        g3 = g2n
+        if node_del.size:
+            e_alive2 = np.asarray(g2n.edge_alive)
+            dead = np.zeros(g2n.node_cap, bool)
+            dead[node_del] = True
+            inc = e_alive2 & (dead[np.asarray(g2n.edge_src)]
+                              | dead[np.asarray(g2n.edge_dst)])
+            incident_labels = set(
+                int(l) for l in np.unique(np.asarray(g2n.edge_label)[inc]))
+            g3 = G.delete_nodes(g2n, node_del)
+
+        if g3 is g0 and not batch.node_creates:
+            self.last_maintenance_metrics = metrics
+            return BatchResult(created_slots, created_nodes)  # nothing happened
+
+        # -- engine bookkeeping: snapshot the old side BEFORE swapping, then
+        # invalidate only the touched labels on the persistent engine
+        touched = set(del_by_label) | set(create_by_label) | incident_labels
+        old_eng = self.engine.snapshot()
+        self._set_graph(g3, touched)
+        self._old_exec.engine = old_eng
+        # mid graph (after deletes, before creates): suffix side of both
+        # telescoping steps; coincides with an existing engine when possible
+        if g1 is g0:
+            mid_eng = old_eng
+        elif g1 is g3:
+            mid_eng = self.engine
+        else:
+            mid_eng = old_eng.snapshot(g1, set(del_by_label))
+        self._mid_exec.engine = mid_eng
+        # create-prefix side (after creates, before node deletes)
+        if node_del.size:
+            pre_eng = (old_eng if g2n is g0
+                       else self.engine.snapshot(g2n, incident_labels))
+        else:
+            pre_eng = self.engine
+        self._aux_exec.engine = pre_eng
+
+        node_alive_final = np.asarray(g3.node_alive)
+        dead_set = {int(n) for n in node_del}
+
+        def endpoints_alive(delta: DeltaPairs) -> DeltaPairs:
+            """Drop delta rows whose view-pair endpoint died in this batch
+            (their arena edges are gone; recompute owns the sources)."""
+            if node_del.size == 0 or delta.src.size == 0:
+                return delta
+            keep = (node_alive_final[delta.src]
+                    & node_alive_final[delta.dst])
+            return DeltaPairs(delta.src[keep], delta.dst[keep],
+                              delta.count[keep])
+
+        # (label name, srcs, dsts) per delta group, shared across views
+        name_of = self.schema.edge_labels.name_of
+        del_groups = [
+            (name_of(lid),
+             np.asarray([p[0] for p in pairs], np.int32),
+             np.asarray([p[1] for p in pairs], np.int32))
+            for lid, pairs in del_by_label.items()]
+        create_groups = [
+            (name_of(lid),
+             np.asarray([batch.edge_creates[j][0] for j in idxs], np.int32),
+             np.asarray([batch.edge_creates[j][1] for j in idxs], np.int32))
+            for lid, idxs in create_by_label.items()]
+
+        # -- per-view maintenance: one grouped pass per (view, label)
         for view in self.views.values():
-            # drop index entries for view edges incident to the node
-            for key in [k for k in view.pair_slot if node_id in k]:
-                view.pair_slot.pop(key)
-            affected = affected_sources_node(
-                view.templates, view.vdef, g_old, self.schema, self.cfg,
-                node_id, metrics, ex=ex_old)
-            affected = affected[affected != node_id]
-            self._recompute_sources(view, affected, metrics, ex=ex_new)
+            if dead_set:
+                for key in [k for k in view.pair_slot
+                            if k[0] in dead_set or k[1] in dead_set]:
+                    view.pair_slot.pop(key)
+            affected = np.zeros(0, np.int32)
+            if view.counting:
+                for name, srcs, dsts in del_groups:
+                    if not self._uses_label(view, name):
+                        continue
+                    delta = batch_edge_delta_pairs(
+                        view.templates, view.vdef, self.schema, srcs, dsts,
+                        name, counting=True, metrics=metrics,
+                        ex_pre=self._old_exec, ex_suf=self._mid_exec)
+                    self._apply_delta(view, endpoints_alive(delta), sign=-1)
+                for name, srcs, dsts in create_groups:
+                    if not self._uses_label(view, name):
+                        continue
+                    delta = batch_edge_delta_pairs(
+                        view.templates, view.vdef, self.schema, srcs, dsts,
+                        name, counting=True, metrics=metrics,
+                        ex_pre=self._aux_exec, ex_suf=self._mid_exec)
+                    self._apply_delta(view, endpoints_alive(delta), sign=+1)
+            else:
+                # set semantics: deletes delimit affected sources on the old
+                # graph; rows re-derive on the final graph below
+                for name, srcs, dsts in del_groups:
+                    if not self._uses_label(view, name):
+                        continue
+                    aff = affected_sources_edges(
+                        view.templates, view.vdef, self.schema, srcs, dsts,
+                        name, metrics=metrics, ex=self._old_exec)
+                    affected = np.union1d(affected, aff).astype(np.int32)
+            if node_del.size:
+                aff = affected_sources_nodes(
+                    view.templates, view.vdef, self.schema, node_del,
+                    metrics=metrics, ex=self._aux_exec)
+                affected = np.union1d(affected, aff).astype(np.int32)
+            if affected.size:
+                affected = np.setdiff1d(affected, node_del).astype(np.int32)
+            if affected.size:
+                self._recompute_sources(view, affected, metrics,
+                                        ex=self._delta)
+            if not view.counting:
+                # creates under set semantics: union-add pairs reachable
+                # through the new edges, evaluated on the final graph
+                for name, srcs, dsts in create_groups:
+                    if not self._uses_label(view, name):
+                        continue
+                    delta = batch_edge_delta_pairs(
+                        view.templates, view.vdef, self.schema, srcs, dsts,
+                        name, counting=False, metrics=metrics,
+                        ex_pre=self._delta, ex_suf=self._delta)
+                    self._apply_union(view, endpoints_alive(delta))
             view.stats.e_vl = len(view.pair_slot)
+
+        # the snapshots are per-batch; point the wrappers back at the live
+        # engine so stale graphs cannot leak into the next operation
+        self._old_exec.engine = self.engine
+        self._mid_exec.engine = self.engine
+        self._aux_exec.engine = self.engine
         self.last_maintenance_metrics = metrics
+        return BatchResult(created_slots, created_nodes)
 
     def _apply_union(self, view: MaterializedView, delta: DeltaPairs) -> None:
         if delta.src.size == 0:
@@ -321,6 +526,14 @@ class GraphSession:
         return any(r.label == label or r.label is None
                    for r in view.vdef.match.rels)
 
+    # ------------------------------------------------------- view selection
+
+    def select_views(self, read_queries, k: int = 3):
+        """Workload-driven view selection scored on the session's warm engine."""
+        from repro.core.selection import select_views as _select
+        return _select(self.g, self.schema, read_queries, k=k, cfg=self.cfg,
+                       engine=self.engine)
+
     # -------------------------------------------------------------- queries
 
     def query(self, q: Union[str, Query], use_views: Optional[bool] = None
@@ -334,15 +547,14 @@ class GraphSession:
             t0 = time.perf_counter()
             q = optimize_query(q, list(self.views.values()))
             self.last_rewrite_seconds = time.perf_counter() - t0
-        return self._executor().run_query(q)
+        return self._exec.run_query(q)
 
     # ------------------------------------------------------------ integrity
 
     def check_consistency(self, name: str) -> bool:
         """Paper §VI-C verification: stored view == re-derived from scratch."""
         view = self.views[name]
-        ex = self._executor()
-        res = ex.run_path(view.vdef.match, counting=view.counting)
+        res = self._exec.run_path(view.vdef.match, counting=view.counting)
         s_ids, d_ids, cnt = res.pairs()
         fresh: Dict[Tuple[int, int], int] = {}
         for s, d, c in zip(s_ids, d_ids, cnt):

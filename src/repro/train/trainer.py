@@ -75,7 +75,8 @@ def make_compressed_dp_step(loss_fn, cfg: opt.AdamWConfig, mesh,
     compression halves DP reduce bytes vs bf16 (see EXPERIMENTS.md §Perf).
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from repro.utils.compat import shard_map
 
     def local_step(params, opt_state, ef, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)

@@ -1,0 +1,27 @@
+"""Version-compat shims for jax APIs that moved between releases."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map`` with a ``check_vma`` kwarg; older
+    releases only have ``jax.experimental.shard_map.shard_map`` where the
+    same knob is spelled ``check_rep``.  Dispatch on what this jax provides.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` is newer than some supported jax releases; the
+    portable spelling is a psum of 1 over the named axis."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -101,12 +101,13 @@ print("CP_ATTENTION_OK")
 
 # ---------------- compressed DP reduce ------------------------------------
 from repro.train.compression import compressed_psum
+from repro.utils.compat import shard_map
 def red(x):
     val, resid = compressed_psum(x, "data")
     return val, resid
 xs = jax.random.normal(jax.random.PRNGKey(6), (8, 64))
 with mesh:
-    val, resid = jax.jit(jax.shard_map(
+    val, resid = jax.jit(shard_map(
         red, mesh=mesh, in_specs=P("data", None),
         out_specs=(P("data", None), P("data", None)),
         check_vma=False))(xs)

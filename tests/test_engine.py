@@ -1,0 +1,281 @@
+"""Engine layer: cache reuse, label-granular invalidation, batched writes.
+
+Covers the session-persistent :class:`ExecEngine` and the batched
+``apply_writes`` maintenance path:
+
+* repeated identical queries reuse the per-label caches (no rebuilds,
+  asserted through the engine hit/miss counters);
+* a mutation invalidates only the labels it touched;
+* ``apply_writes`` of mixed creates/deletes keeps counting and set-semantics
+  views consistent, and is equivalent to the looped single-op path;
+* a deterministic randomized consistency sweep (the hypothesis property from
+  ``test_maintenance_property.py``, runnable without hypothesis).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    GraphBuilder, GraphSchema, GraphSession, WriteBatch,
+)
+from repro.core import graph as G
+from repro.core.schema import NO_LABEL
+
+
+def _toy_session(edge_cap=1024):
+    """A,B nodes with x and y edges: x forms a chain, y fans out."""
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    nodes = [b.add_node("A" if i % 2 == 0 else "B") for i in range(8)]
+    for i in range(7):
+        b.add_edge(nodes[i], nodes[i + 1], "x")
+    for i in range(0, 8, 2):
+        b.add_edge(nodes[i], nodes[(i + 3) % 8], "y")
+    return GraphSession(b.finalize(edge_cap=edge_cap), schema)
+
+
+QX = "MATCH (a:A)-[:x*1..2]->(b:B) RETURN a, b"
+QY = "MATCH (a:A)-[:y]->(b) RETURN a, b"
+
+
+# ---------------------------------------------------------------------------
+# cache reuse + invalidation granularity
+# ---------------------------------------------------------------------------
+
+def test_repeated_query_reuses_caches():
+    sess = _toy_session()
+    sess.query(QX, use_views=False)          # cold: builds x slices/degrees
+    misses_after_warmup = sess.engine.misses
+    hits_before = sess.engine.hits
+    for _ in range(3):
+        sess.query(QX, use_views=False)
+    assert sess.engine.misses == misses_after_warmup, "repeat query rebuilt state"
+    assert sess.engine.hits > hits_before
+
+
+def test_per_label_invalidation_evicts_only_mutated_label():
+    sess = _toy_session()
+    xid = sess.schema.edge_labels.id_of("x")
+    yid = sess.schema.edge_labels.id_of("y")
+    sess.query(QX, use_views=False)
+    sess.query(QY, use_views=False)
+    assert {xid, yid} <= sess.engine.cached_edge_labels()
+
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    sess.create_edge(int(nodes[0]), int(nodes[3]), "x")   # touches only x
+
+    cached = sess.engine.cached_edge_labels()
+    assert yid in cached, "mutating x must not evict y"
+    assert xid not in cached, "mutating x must evict x"
+
+    # y query runs entirely on warm caches; x query rebuilds
+    misses = sess.engine.misses
+    sess.query(QY, use_views=False)
+    assert sess.engine.misses == misses
+    sess.query(QX, use_views=False)
+    assert sess.engine.misses > misses
+
+
+def test_external_graph_assignment_invalidates_everything():
+    sess = _toy_session()
+    sess.query(QX, use_views=False)
+    sess.query(QY, use_views=False)
+    assert sess.engine.cached_edge_labels()
+    sess.g = G.delete_edge(sess.g, 0)   # unknown delta -> conservative
+    assert not sess.engine.cached_edge_labels()
+
+
+def test_epoch_bump_per_touched_label():
+    sess = _toy_session()
+    xid = sess.schema.edge_labels.id_of("x")
+    yid = sess.schema.edge_labels.id_of("y")
+    ex, ey = sess.engine.epochs.of(xid), sess.engine.epochs.of(yid)
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    sess.create_edge(int(nodes[0]), int(nodes[3]), "x")
+    assert sess.engine.epochs.of(xid) == ex + 1
+    assert sess.engine.epochs.of(yid) == ey
+    assert sess.engine.epochs.of(NO_LABEL) > 0  # global generation moved
+
+
+# ---------------------------------------------------------------------------
+# batched writes
+# ---------------------------------------------------------------------------
+
+COUNTING_VIEW = ("CREATE VIEW VC AS (CONSTRUCT (s)-[r:VC]->(d) "
+                 "MATCH (s:A)-[:x*1..2]->(d:B))")
+SET_VIEW = ("CREATE VIEW VS AS (CONSTRUCT (s)-[r:VS]->(d) "
+            "MATCH (s:A)-[:x*1..]->(d:B))")
+
+
+def _stored(sess, name):
+    view = sess.views[name]
+    return {k: (int(sess.g.edge_weight[s]) if view.counting else 1)
+            for k, s in view.pair_slot.items()
+            if bool(sess.g.edge_alive[s])}
+
+
+def test_apply_writes_mixed_creates_deletes_consistent():
+    sess = _toy_session()
+    sess.create_view(COUNTING_VIEW)
+    sess.create_view(SET_VIEW)
+    alive = np.flatnonzero(np.asarray(sess.g.edge_alive)
+                           & (np.asarray(sess.g.edge_label)
+                              == sess.schema.edge_labels.id_of("x")))
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    batch = WriteBatch(
+        edge_creates=[(int(nodes[0]), int(nodes[5]), "x"),
+                      (int(nodes[2]), int(nodes[7]), "x"),
+                      (int(nodes[4]), int(nodes[1]), "y")],
+        edge_deletes=[int(alive[0]), int(alive[2])],
+    )
+    res = sess.apply_writes(batch)
+    assert res.edge_slots.shape[0] == 3
+    assert sess.check_consistency("VC")
+    assert sess.check_consistency("VS")
+
+
+def test_apply_writes_equivalent_to_looped_single_ops():
+    batch = None
+    results = {}
+    for mode in ("looped", "batched"):
+        sess = _toy_session()
+        sess.create_view(COUNTING_VIEW)
+        sess.create_view(SET_VIEW)
+        alive = np.flatnonzero(np.asarray(sess.g.edge_alive)
+                               & (np.asarray(sess.g.edge_label)
+                                  == sess.schema.edge_labels.id_of("x")))
+        nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+        creates = [(int(nodes[0]), int(nodes[5]), "x"),
+                   (int(nodes[2]), int(nodes[7]), "x")]
+        deletes = [int(alive[1]), int(alive[3])]
+        if mode == "looped":
+            # batch order contract: deletes first, then creates
+            for eid in deletes:
+                sess.delete_edge(eid)
+            for s, d, l in creates:
+                sess.create_edge(s, d, l)
+        else:
+            sess.apply_writes(WriteBatch(edge_creates=creates,
+                                         edge_deletes=deletes))
+        assert sess.check_consistency("VC")
+        assert sess.check_consistency("VS")
+        results[mode] = (_stored(sess, "VC"), _stored(sess, "VS"))
+    assert results["looped"] == results["batched"]
+
+
+def test_apply_writes_node_ops():
+    sess = _toy_session()
+    sess.create_view(COUNTING_VIEW)
+    sess.create_view(SET_VIEW)
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    n_before = int(sess.g.num_nodes())
+    batch = (WriteBatch()
+             .create_node("A", 101)
+             .create_node("B")
+             .delete_node(int(nodes[3])))
+    res = sess.apply_writes(batch)
+    assert res.node_slots.shape[0] == 2
+    assert all(bool(sess.g.node_alive[int(s)]) for s in res.node_slots)
+    assert int(sess.g.num_nodes()) == n_before + 1   # +2 created, -1 deleted
+    assert not bool(sess.g.node_alive[int(nodes[3])])
+    assert sess.check_consistency("VC")
+    assert sess.check_consistency("VS")
+
+
+def test_apply_writes_mixed_with_node_delete_consistent():
+    sess = _toy_session()
+    sess.create_view(COUNTING_VIEW)
+    sess.create_view(SET_VIEW)
+    alive = np.flatnonzero(np.asarray(sess.g.edge_alive)
+                           & (np.asarray(sess.g.edge_label)
+                              == sess.schema.edge_labels.id_of("x")))
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    batch = WriteBatch(
+        edge_creates=[(int(nodes[0]), int(nodes[5]), "x"),
+                      (int(nodes[6]), int(nodes[1]), "x")],
+        edge_deletes=[int(alive[0])],
+        node_deletes=[int(nodes[5])],   # kills one freshly created edge too
+    )
+    sess.apply_writes(batch)
+    assert sess.check_consistency("VC")
+    assert sess.check_consistency("VS")
+
+
+def test_apply_writes_dead_and_duplicate_deletes_are_noops():
+    sess = _toy_session()
+    sess.create_view(COUNTING_VIEW)
+    alive = np.flatnonzero(np.asarray(sess.g.edge_alive))
+    eid = int(alive[0])
+    sess.delete_edge(eid)
+    before = _stored(sess, "VC")
+    sess.apply_writes(WriteBatch(edge_deletes=[eid, eid]))  # dead + dup
+    assert _stored(sess, "VC") == before
+    assert sess.check_consistency("VC")
+
+
+def test_create_edge_grows_full_arena():
+    """Micro-fix: session create_edge grows the arena instead of raising."""
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    a = b.add_node("A"); c = b.add_node("B")
+    for _ in range(128):
+        b.add_edge(a, c, "x")
+    sess = GraphSession(b.finalize(edge_cap=128), schema)
+    assert int(np.sum(~np.asarray(sess.g.edge_alive))) == 0  # arena full
+    slot = sess.create_edge(a, c, "x")
+    assert bool(sess.g.edge_alive[slot])
+    assert sess.g.edge_cap > 128
+
+
+# ---------------------------------------------------------------------------
+# deterministic randomized consistency (hypothesis-free property sweep)
+# ---------------------------------------------------------------------------
+
+VIEW_SHAPES = [
+    "CREATE VIEW V{i} AS (CONSTRUCT (s)-[r:V{i}]->(d) MATCH (s:A)-[:x*1..2]->(d:B))",
+    "CREATE VIEW V{i} AS (CONSTRUCT (s)-[r:V{i}]->(d) MATCH (s:A)-[:x*2..]->(d:B))",
+    "CREATE VIEW V{i} AS (CONSTRUCT (s)-[r:V{i}]->(d) MATCH (s:A)-[:x]->(m:B)-[:y*1..2]->(d:A))",
+    "CREATE VIEW V{i} AS (CONSTRUCT (d)-[r:V{i}]->(s) MATCH (s:A)-[:x*1..2]->(d:B))",
+]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_randomized_batches_stay_consistent(seed):
+    rng = np.random.default_rng(seed)
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    n = int(rng.integers(6, 10))
+    for _ in range(n):
+        b.add_node(str(rng.choice(["A", "B"])))
+    base = {}
+    for u in range(n):
+        for v in range(n):
+            if u != v and rng.random() < 0.3:
+                base[b.add_edge(u, v, str(rng.choice(["x", "y"])))] = (u, v)
+    sess = GraphSession(b.finalize(edge_cap=4 * len(base) + 1024), schema)
+    views = [sess.create_view(VIEW_SHAPES[i].format(i=i))
+             for i in range(len(VIEW_SHAPES))]
+    alive_nodes = set(range(n))
+
+    for _ in range(4):
+        wb = WriteBatch()
+        for _ in range(int(rng.integers(1, 4))):
+            if len(alive_nodes) >= 2:
+                u, v = rng.choice(sorted(alive_nodes), 2, replace=False)
+                wb.create_edge(int(u), int(v), str(rng.choice(["x", "y"])))
+        for eid in list(base)[: int(rng.integers(0, 3))]:
+            wb.delete_edge(eid)
+            del base[eid]
+        if alive_nodes and rng.random() < 0.5:
+            nid = int(rng.choice(sorted(alive_nodes)))
+            wb.delete_node(nid)
+            alive_nodes.discard(nid)
+            base = {e: (u, v) for e, (u, v) in base.items()
+                    if u != nid and v != nid}
+        res = sess.apply_writes(wb)
+        for s, (u, v, _) in zip(res.edge_slots, wb.edge_creates):
+            if bool(sess.g.edge_alive[int(s)]):
+                base[int(s)] = (u, v)
+        for view in views:
+            assert sess.check_consistency(view.name), (
+                f"seed={seed} view {view.name} inconsistent "
+                f"({view.vdef.pretty()})")

@@ -1,0 +1,100 @@
+"""Hypothesis property tests for templated maintenance.
+
+The property asserted is the paper's own consistency criterion (§IV-B
+Correctness, §VI-C): after any sequence of updates, the incrementally
+maintained view equals the view dropped and re-created from scratch.
+
+Needs ``hypothesis`` (``pip install -r requirements-dev.txt``); the module
+skips cleanly without it.  A deterministic randomized variant of the same
+property lives in ``test_engine.py`` so CI without hypothesis still covers
+the maintenance path.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import GraphBuilder, GraphSchema, GraphSession
+
+VIEW_SHAPES = [
+    "CREATE VIEW V{i} AS (CONSTRUCT (s)-[r:V{i}]->(d) MATCH (s:A)-[:x*1..2]->(d:B))",
+    "CREATE VIEW V{i} AS (CONSTRUCT (s)-[r:V{i}]->(d) MATCH (s:A)-[:x*2..3]->(d:A))",
+    "CREATE VIEW V{i} AS (CONSTRUCT (s)-[r:V{i}]->(d) MATCH (s:A)-[:x*2..]->(d:B))",
+    "CREATE VIEW V{i} AS (CONSTRUCT (s)-[r:V{i}]->(d) MATCH (s:B)-[:x*1..]->(d:B))",
+    "CREATE VIEW V{i} AS (CONSTRUCT (s)-[r:V{i}]->(d) MATCH (s:A)-[:x]->(m:B)-[:y*1..2]->(d:A))",
+    "CREATE VIEW V{i} AS (CONSTRUCT (d)-[r:V{i}]->(s) MATCH (s:A)-[:x*1..2]->(d:B))",
+    "CREATE VIEW V{i} AS (CONSTRUCT (s)-[r:V{i}]->(d) MATCH (s:A)-[:x*1..2]->(m:A)-[:x*1..2]->(d:B))",
+]
+
+
+@st.composite
+def graph_and_ops(draw):
+    n = draw(st.integers(4, 9))
+    labels = [draw(st.sampled_from(["A", "B"])) for _ in range(n)]
+    edges = []
+    for u in range(n):
+        for v in range(n):
+            if u == v:
+                continue
+            if draw(st.booleans()) and draw(st.integers(0, 2)) == 0:
+                edges.append((u, v, draw(st.sampled_from(["x", "y"]))))
+    view_idx = draw(st.lists(st.integers(0, len(VIEW_SHAPES) - 1),
+                             min_size=1, max_size=2, unique=True))
+    n_ops = draw(st.integers(1, 5))
+    ops = []
+    for _ in range(n_ops):
+        kind = draw(st.sampled_from(["ce", "de", "dn"]))
+        ops.append((kind, draw(st.integers(0, 10 ** 6)),
+                    draw(st.integers(0, 10 ** 6)),
+                    draw(st.sampled_from(["x", "y"]))))
+    return labels, edges, view_idx, ops
+
+
+@given(graph_and_ops())
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+def test_maintenance_consistency(data):
+    labels, edges, view_idx, ops = data
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    for lb in labels:
+        b.add_node(lb)
+    base_eids = []
+    for u, v, el in edges:
+        base_eids.append(b.add_edge(u, v, el))
+    g = b.finalize(edge_cap=max(4 * len(edges) + 512, 1024))
+    sess = GraphSession(g, schema)
+    views = []
+    for i, vi in enumerate(view_idx):
+        views.append(sess.create_view(VIEW_SHAPES[vi].format(i=i)))
+    alive_nodes = set(range(len(labels)))
+    alive_base_edges = dict(
+        (eid, (u, v)) for eid, (u, v, _) in zip(base_eids, edges))
+
+    for kind, r1, r2, el in ops:
+        if kind == "ce" and len(alive_nodes) >= 2:
+            nodes = sorted(alive_nodes)
+            u = nodes[r1 % len(nodes)]
+            v = nodes[r2 % len(nodes)]
+            if u != v:
+                eid = sess.create_edge(u, v, el)
+                alive_base_edges[eid] = (u, v)
+        elif kind == "de" and alive_base_edges:
+            eids = sorted(alive_base_edges)
+            eid = eids[r1 % len(eids)]
+            sess.delete_edge(eid)
+            del alive_base_edges[eid]
+        elif kind == "dn" and alive_nodes:
+            nodes = sorted(alive_nodes)
+            nid = nodes[r1 % len(nodes)]
+            sess.delete_node(nid)
+            alive_nodes.discard(nid)
+            alive_base_edges = {e: (u, v) for e, (u, v)
+                                in alive_base_edges.items()
+                                if u != nid and v != nid}
+        for view in views:
+            assert sess.check_consistency(view.name), (
+                f"view {view.name} inconsistent after {kind} "
+                f"({view.vdef.pretty()})")
