@@ -11,7 +11,14 @@ Prints ``name,us_per_call,derived`` CSV rows.
   table5/7_* — whole-workload speedups (paper Tables V/VII)
   fig19_*    — maintenance scaling, 10^0..10^3 deleted edges (paper Fig. 19)
   fig17_*    — DBHit/Rows profiling with vs without views (paper Figs 17-18)
+  wildcard_* — wildcard 1-hop: compact all-base-edges index vs full-arena
+               masked scan, with materialized views in the arena
   roofline_* — dry-run roofline table (results/dryrun_all.json, if present)
+
+Each benchmark additionally writes its rows as machine-readable
+``BENCH_<name>.json`` under ``--json-dir`` (default ``results/``), so CI runs
+accumulate a perf trajectory.  ``--smoke`` is the CI-friendly subset:
+``--small`` sizes, maintenance + wildcard only.
 """
 from __future__ import annotations
 
@@ -23,9 +30,13 @@ import time
 
 import numpy as np
 
+_JSON_ROWS: list = []
+
 
 def _row(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _JSON_ROWS.append({"name": name, "us_per_call": round(us, 3),
+                       "derived": derived})
 
 
 def bench_workloads(small: bool) -> None:
@@ -146,6 +157,75 @@ def bench_profile(small: bool) -> None:
          f"dbhit_ratio={r_ori.metrics.db_hits/max(r_opt.metrics.db_hits,1):.1f}")
 
 
+def bench_wildcard(small) -> None:
+    """Wildcard 1-hop microbench (fig17-style): the compact all-base-edges
+    index vs the full-arena masked scan it replaces, on an SNB-like graph
+    with materialized views inflating the arena (the phantom-edge regime).
+
+    Also asserts the tentpole invariant: wildcard pair counts are identical
+    before and after view materialization."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.mv4pg import WORKLOADS
+    from repro.core import GraphSession
+    from repro.core.executor import _hop_segment
+    from repro.core.schema import NO_LABEL
+    from repro.data.synthetic import snb_like
+
+    mode = small if isinstance(small, str) else ("small" if small else "default")
+    n_person, n_post, n_comment = {
+        "small": (500, 400, 3000),
+        "default": (1000, 800, 6000),
+        "large": (2000, 1500, 12000),
+    }[mode]
+    g, schema, _ = snb_like(seed=0, n_person=n_person, n_post=n_post,
+                            n_comment=n_comment)
+    sess = GraphSession(g, schema)
+    wq = "MATCH (n:Person)-[r]->(m) RETURN n, m"
+    pairs_before = sess.query(wq, use_views=False).num_pairs()
+    for stmt in WORKLOADS["snb"].views:       # >= 2 materialized views
+        sess.create_view(stmt)
+    res = sess.query(wq, use_views=False)
+    assert res.num_pairs() == pairs_before, (
+        f"phantom view edges leaked into the wildcard query: "
+        f"{pairs_before} pairs before views, {res.num_pairs()} after")
+
+    # one counting hop from a blocked frontier of Person sources
+    N = sess.g.node_cap
+    lid = schema.node_label_id("Person")
+    srcs = np.flatnonzero(np.asarray(sess.g.node_mask(lid)))[:256]
+    F = jnp.zeros((256, N), jnp.int32).at[
+        jnp.arange(srcs.shape[0]), jnp.asarray(srcs)].set(1)
+    esrc, edst, ew, em = sess.engine.label_edges(NO_LABEL)   # compact base
+    arena = (sess.g.edge_src, sess.g.edge_dst, sess.g.edge_weight,
+             sess.g.edge_alive)                              # old NO_LABEL path
+
+    def timeit(fn, n=5):
+        jax.block_until_ready(fn())   # warm-up / trace
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / n
+
+    t_compact = timeit(lambda: _hop_segment(
+        F, esrc, edst, em, ew, counting=True, reverse=False))
+    t_arena = timeit(lambda: _hop_segment(
+        F, arena[0], arena[1], arena[3], arena[2],
+        counting=True, reverse=False))
+    e_base = int(np.asarray(em).sum())
+    _row("wildcard_1hop_compact", t_compact * 1e6,
+         f"E_base={e_base};slice_cap={int(em.shape[0])};"
+         f"speedup_vs_arena={t_arena / max(t_compact, 1e-12):.2f}")
+    _row("wildcard_1hop_arena_scan", t_arena * 1e6,
+         f"E_arena_cap={sess.g.edge_cap};"
+         f"E_alive={int(np.asarray(sess.g.edge_alive).sum())}")
+    # end-to-end wildcard query on the warm session (views materialized)
+    t_q = timeit(lambda: sess.query(wq, use_views=False), n=3)
+    _row("wildcard_query_e2e", t_q * 1e6,
+         f"pairs={res.num_pairs()};views={len(sess.views)}")
+
+
 def bench_kernels(small: bool) -> None:
     """Microbenchmarks of the Pallas kernels vs their jnp oracles
     (interpret mode on CPU: correctness-path timing, not TPU perf)."""
@@ -200,9 +280,12 @@ BENCHES = {
     "workloads": bench_workloads,
     "maintenance": bench_maintenance_scaling,
     "profile": bench_profile,
+    "wildcard": bench_wildcard,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }
+
+SMOKE_BENCHES = ("maintenance", "wildcard")
 
 
 def main() -> None:
@@ -211,16 +294,34 @@ def main() -> None:
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--large", action="store_true",
                     help="paper-scale synthetic graphs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke run: --small sizes, "
+                         f"{'+'.join(SMOKE_BENCHES)} only")
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--json-dir", type=str, default="results",
+                    help="directory for machine-readable BENCH_<name>.json")
     args = ap.parse_args()
-    mode = "small" if args.small else ("large" if args.large else "default")
+    small = args.small or args.smoke
+    mode = "small" if small else ("large" if args.large else "default")
+    os.makedirs(args.json_dir, exist_ok=True)
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
+        if args.smoke and not args.only and name not in SMOKE_BENCHES:
+            continue
         t0 = time.time()
-        fn(mode if name in ("workloads", "maintenance") else args.small)
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        first_row = len(_JSON_ROWS)
+        fn(mode if name in ("workloads", "maintenance", "wildcard")
+           else small)
+        elapsed = time.time() - t0
+        print(f"# {name} done in {elapsed:.1f}s", file=sys.stderr)
+        with open(os.path.join(args.json_dir, f"BENCH_{name}.json"),
+                  "w") as f:
+            json.dump({"bench": name, "mode": mode,
+                       "elapsed_s": round(elapsed, 3),
+                       "rows": _JSON_ROWS[first_row:]}, f, indent=2)
+            f.write("\n")
 
 
 if __name__ == "__main__":

@@ -116,9 +116,9 @@ def _active_rows(F):
     return jnp.sum(active.astype(jnp.int32))
 
 
-def _dense_adjacency(g: PropertyGraph, label_id: int, counting: bool,
+def _dense_adjacency(g: PropertyGraph, m: jax.Array, counting: bool,
                      reverse: bool) -> jax.Array:
-    m = g.edge_mask(label_id)
+    """Dense [N, N] adjacency over the edges selected by mask ``m``."""
     a, b = (g.edge_dst, g.edge_src) if reverse else (g.edge_src, g.edge_dst)
     if counting:
         w = jnp.where(m, g.edge_weight, 0)
@@ -141,10 +141,16 @@ class ExecEngine:
     label at build time, and a mutation invalidates only the labels it
     touched — a write to ``replyOf`` leaves the ``hasTag`` slices warm.
 
-    Wildcard (``NO_LABEL``) entries depend on the whole edge arena, so they
-    key off the global generation and drop on every graph swap.  ``hits`` /
-    ``misses`` count cache lookups (the engine-layer tests assert reuse and
-    per-label eviction through them).
+    Wildcard (``NO_LABEL``) hops compile as the union over **base** edge
+    labels only (:meth:`GraphSchema.base_edge_label_ids`): view labels are
+    excluded so materialized views cannot leak phantom rows into unlabeled-rel
+    queries.  The hop is backed by a cached compact all-base-edges index
+    (host-side CSR-order sort; O(E_base) per hop instead of an O(E_arena)
+    masked scan over the whole arena).  Wildcard entries key off the
+    :class:`LabelEpochs` *base generation*, which moves only when a mutation
+    touches a base label — view creation and view maintenance leave them
+    warm.  ``hits`` / ``misses`` count cache lookups (the engine-layer tests
+    assert reuse and per-label eviction through them).
     """
 
     def __init__(self, g: PropertyGraph, schema: GraphSchema,
@@ -156,6 +162,7 @@ class ExecEngine:
         self._edge_cache: Dict[int, Tuple[int, Tuple]] = {}
         self._deg_cache: Dict[Tuple[int, bool], Tuple[int, jax.Array]] = {}
         self._adj_cache: Dict[Tuple[int, bool, bool], Tuple[int, jax.Array]] = {}
+        self._base_mask_cache: Optional[Tuple[Tuple[int, int], np.ndarray]] = None
         self.hits = 0
         self.misses = 0
 
@@ -166,9 +173,11 @@ class ExecEngine:
         """Swap in a mutated graph.
 
         ``touched_edge_labels`` lists the edge labels the mutation touched;
-        only their entries (plus wildcard entries) are evicted.  ``None``
-        means the delta is unknown — evict everything (the conservative
-        behavior external ``session.g = ...`` assignments get).
+        only their entries are evicted — plus wildcard entries iff at least
+        one touched label is a *base* label (wildcard state is independent of
+        view-label churn).  ``None`` means the delta is unknown — evict
+        everything (the conservative behavior external ``session.g = ...``
+        assignments get).
         """
         if g is self.g:
             return
@@ -180,10 +189,11 @@ class ExecEngine:
             self._adj_cache.clear()
             return
         touched = {int(l) for l in touched_edge_labels}
-        self.epochs.bump(touched)
+        touches_base = bool(touched - self.schema.view_edge_ids)
+        self.epochs.bump(touched, touches_base=touches_base)
 
         def stale(lid: int) -> bool:
-            return lid in touched or lid == NO_LABEL
+            return lid in touched or (lid == NO_LABEL and touches_base)
 
         for k in [k for k in self._edge_cache if stale(k)]:
             del self._edge_cache[k]
@@ -207,6 +217,7 @@ class ExecEngine:
         eng._edge_cache = dict(self._edge_cache)
         eng._deg_cache = dict(self._deg_cache)
         eng._adj_cache = dict(self._adj_cache)
+        eng._base_mask_cache = self._base_mask_cache
         if g is not None:
             eng.set_graph(g, touched_edge_labels)
         return eng
@@ -236,37 +247,77 @@ class ExecEngine:
         whole arena is O(E_total) per hop and — worse — view edges grow the
         arena and slow every *other* query down.  The compact slice makes a
         hop O(E_label) (measured 2-6x on the paper workloads; see
-        EXPERIMENTS.md §Perf)."""
+        EXPERIMENTS.md §Perf).  ``NO_LABEL`` returns the all-base-edges
+        index: every alive edge whose label is base (never view edges),
+        sorted into CSR order host-side."""
         return self._lookup(self._edge_cache, label_id, label_id,
                             lambda: self._build_label_edges(label_id))
 
-    def _build_label_edges(self, label_id: int):
-        if label_id == NO_LABEL:
-            return (self.g.edge_src, self.g.edge_dst, self.g.edge_weight,
-                    self.g.edge_alive)
-        idx = np.flatnonzero(np.asarray(self.g.edge_alive)
-                             & (np.asarray(self.g.edge_label) == label_id))
-        cap = max(round_up(idx.shape[0], 512), 512)
+    @staticmethod
+    def _pack_slices(src: np.ndarray, dst: np.ndarray, w: np.ndarray):
+        """Pad compact host arrays to a 512 multiple and ship to device."""
+        n = src.shape[0]
+        cap = max(round_up(n, 512), 512)
         pad = np.zeros(cap, np.int32)
-        src = pad.copy(); dst = pad.copy(); w = pad.copy()
+        src_p = pad.copy(); dst_p = pad.copy(); w_p = pad.copy()
         mask = np.zeros(cap, bool)
-        src[: idx.shape[0]] = np.asarray(self.g.edge_src)[idx]
-        dst[: idx.shape[0]] = np.asarray(self.g.edge_dst)[idx]
-        w[: idx.shape[0]] = np.asarray(self.g.edge_weight)[idx]
-        mask[: idx.shape[0]] = True
-        return (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+        src_p[:n] = src; dst_p[:n] = dst; w_p[:n] = w
+        mask[:n] = True
+        return (jnp.asarray(src_p), jnp.asarray(dst_p), jnp.asarray(w_p),
                 jnp.asarray(mask))
 
+    def _base_keep_mask(self) -> np.ndarray:
+        """Host bool [E_cap]: alive edges carrying a *base* edge label.
+
+        Memoized on (base_generation, edge_cap): several wildcard cache
+        products (edge slice, 2 degree vectors, 4 adjacency variants) build
+        from it after one invalidation, and only base-label mutations (which
+        move the base generation) or arena growth (which changes the shape)
+        can change its value — view-label writes only flip slots that are
+        excluded either way."""
+        key = (self.epochs.of(NO_LABEL), self.g.edge_cap)
+        if self._base_mask_cache is not None \
+                and self._base_mask_cache[0] == key:
+            return self._base_mask_cache[1]
+        alive = np.asarray(self.g.edge_alive)
+        if self.schema.view_edge_ids:
+            base_ids = np.asarray(self.schema.base_edge_label_ids(), np.int32)
+            mask = alive & np.isin(np.asarray(self.g.edge_label), base_ids)
+        else:
+            mask = alive
+        self._base_mask_cache = (key, mask)
+        return mask
+
+    def _build_label_edges(self, label_id: int):
+        from repro.graphops.csr import compact_coo
+        if label_id == NO_LABEL:
+            keep = self._base_keep_mask()
+        else:
+            keep = (np.asarray(self.g.edge_alive)
+                    & (np.asarray(self.g.edge_label) == label_id))
+        src, dst, w = compact_coo(self.g.edge_src, self.g.edge_dst,
+                                  self.g.edge_weight, keep)
+        return self._pack_slices(src, dst, w)
+
+    def _edge_mask_for(self, label_id: int) -> jax.Array:
+        """Arena-wide bool mask for ``label_id``; wildcard is base-only."""
+        if label_id == NO_LABEL:
+            return jnp.asarray(self._base_keep_mask())
+        return self.g.edge_mask(label_id)
+
     def deg(self, label_id: int, reverse: bool) -> jax.Array:
-        return self._lookup(
-            self._deg_cache, (label_id, reverse), label_id,
-            lambda: (self.g.in_degree(label_id) if reverse
-                     else self.g.out_degree(label_id)))
+        def build():
+            m = self._edge_mask_for(label_id).astype(jnp.int32)
+            col = self.g.edge_dst if reverse else self.g.edge_src
+            return jnp.zeros(self.g.node_cap, jnp.int32).at[col].add(m)
+        return self._lookup(self._deg_cache, (label_id, reverse), label_id,
+                            build)
 
     def adj(self, label_id: int, counting: bool, reverse: bool) -> jax.Array:
         return self._lookup(
             self._adj_cache, (label_id, counting, reverse), label_id,
-            lambda: _dense_adjacency(self.g, label_id, counting, reverse))
+            lambda: _dense_adjacency(self.g, self._edge_mask_for(label_id),
+                                     counting, reverse))
 
 
 # ---------------------------------------------------------------------------

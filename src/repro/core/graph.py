@@ -38,37 +38,44 @@ class LabelEpochs:
     The :class:`PropertyGraph` itself is immutable; a mutation produces a new
     pytree.  What persists across versions is the *engine* (executor caches),
     and it needs to know which labels a mutation touched.  Every mutation
-    bumps the epoch of each edge label it touched plus a global generation;
-    cache entries record the epoch they were built at and are stale iff the
-    label's epoch moved (wildcard/NO_LABEL entries key off the global
-    generation, since they depend on every label).
+    bumps the epoch of each edge label it touched; cache entries record the
+    epoch they were built at and are stale iff the label's epoch moved.
+
+    Wildcard (``NO_LABEL``) entries depend only on the **base** edge labels
+    (view labels are excluded from wildcard matching; see
+    :class:`~repro.core.schema.GraphSchema`), so they key off a separate
+    *base generation* that moves only when a mutation touches at least one
+    base label.  View-label writes — view creation, incremental view
+    maintenance — leave the base generation alone, which is what keeps
+    wildcard cache entries warm across view churn.
     """
 
     def __init__(self) -> None:
         self._by_label: Dict[int, int] = {}
-        self.generation: int = 0   # bumped on every graph swap
+        self.base_generation: int = 0   # bumped only by base-label mutations
 
     def of(self, label_id: int) -> int:
         if label_id == NO_LABEL:
-            return self.generation
+            return self.base_generation
         return self._by_label.get(label_id, 0)
 
-    def bump(self, label_ids: Iterable[int]) -> None:
-        self.generation += 1
+    def bump(self, label_ids: Iterable[int], touches_base: bool = True) -> None:
+        if touches_base:
+            self.base_generation += 1
         for lid in label_ids:
             if lid == NO_LABEL:
                 continue
             self._by_label[lid] = self._by_label.get(lid, 0) + 1
 
     def bump_all(self) -> None:
-        self.generation += 1
+        self.base_generation += 1
         for lid in list(self._by_label):
             self._by_label[lid] += 1
 
     def snapshot(self) -> "LabelEpochs":
         e = LabelEpochs()
         e._by_label = dict(self._by_label)
-        e.generation = self.generation
+        e.base_generation = self.base_generation
         return e
 
 
@@ -155,19 +162,17 @@ class PropertyGraph:
         return m
 
     def edge_mask(self, label_id: int) -> jax.Array:
+        """bool [E_cap] over ``label_id`` edges.  ``NO_LABEL`` here means
+        *every* alive edge — view edges included; schema-aware wildcard
+        masking (base labels only) lives in ``ExecEngine._edge_mask_for``."""
         m = self.edge_alive
         if label_id != NO_LABEL:
             m = m & (self.edge_label == label_id)
         return m
 
-    def out_degree(self, label_id: int = NO_LABEL) -> jax.Array:
-        """int32 [N_cap]: out-degree restricted to edges of ``label_id``."""
-        m = self.edge_mask(label_id).astype(jnp.int32)
-        return jnp.zeros(self.node_cap, jnp.int32).at[self.edge_src].add(m)
-
-    def in_degree(self, label_id: int = NO_LABEL) -> jax.Array:
-        m = self.edge_mask(label_id).astype(jnp.int32)
-        return jnp.zeros(self.node_cap, jnp.int32).at[self.edge_dst].add(m)
+    # degree vectors live in ExecEngine.deg(): they depend on the schema's
+    # base/view label partition (wildcard degrees count base edges only),
+    # which the raw pytree has no access to.
 
 
 # ---------------------------------------------------------------------------
@@ -272,8 +277,31 @@ def free_edge_slots(g: PropertyGraph, n: int) -> np.ndarray:
 def free_node_slots(g: PropertyGraph, n: int) -> np.ndarray:
     free = np.flatnonzero(~np.asarray(g.node_alive))
     if free.shape[0] < n:
-        raise RuntimeError(f"node arena full: need {n}, have {free.shape[0]}")
+        raise RuntimeError(
+            f"node arena full: need {n} slots, have {free.shape[0]} "
+            f"(cap={g.node_cap}); grow the arena"
+        )
     return free[:n]
+
+
+def grow_node_arena(g: PropertyGraph, new_cap: int) -> PropertyGraph:
+    """Host-side amortized node reallocation (mirrors :func:`grow_edge_arena`).
+
+    Growing changes ``node_cap`` — the shape of frontiers, degree vectors and
+    dense adjacency tiles — so engine caches built at the old capacity must be
+    fully invalidated by the caller.
+    """
+    new_cap = round_up(max(new_cap, g.node_cap), 128)
+    pad = new_cap - g.node_cap
+    if pad == 0:
+        return g
+    return replace(
+        g,
+        node_label=jnp.concatenate([g.node_label,
+                                    jnp.full(pad, DEAD, jnp.int32)]),
+        node_key=jnp.concatenate([g.node_key, jnp.full(pad, DEAD, jnp.int32)]),
+        node_alive=jnp.concatenate([g.node_alive, jnp.zeros(pad, bool)]),
+    )
 
 
 def grow_edge_arena(g: PropertyGraph, new_cap: int) -> PropertyGraph:

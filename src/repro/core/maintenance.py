@@ -310,6 +310,20 @@ class DeltaPairs:
                           np.concatenate([self.count, other.count]))
 
 
+def _tpl_matches_label(tpl: MaintTemplate, edge_label: str,
+                       delta_is_view: bool) -> bool:
+    """Does a delta edge of ``edge_label`` instantiate this template?
+
+    Explicit rel labels must match exactly.  A wildcard template rel spans
+    *base* labels only (the schema's base/view partition): view-labeled
+    deltas never instantiate it, so view churn cannot feed back into other
+    views' (or the view's own) maintenance through unlabeled rels.
+    """
+    if tpl.rel_label is not None:
+        return tpl.rel_label == edge_label
+    return not delta_is_view
+
+
 def edge_delta_pairs(
     templates: ViewTemplates,
     vdef: ViewDef,
@@ -334,9 +348,10 @@ def edge_delta_pairs(
     """
     ex_pre = ex_pre or _delta_exec(g_prefix, schema, cfg)
     ex_suf = ex_suf or _delta_exec(g_suffix, schema, cfg)
+    delta_is_view = schema.is_view_edge_label(edge_label)
     acc = DeltaPairs.empty()
     for tpl in templates.edge:
-        if tpl.rel_label is not None and tpl.rel_label != edge_label:
+        if not _tpl_matches_label(tpl, edge_label, delta_is_view):
             continue
         rel = vdef.match.rels[tpl.position]
         # orient Δ's endpoints to the path direction of the matched rel;
@@ -402,10 +417,11 @@ def batch_edge_delta_pairs(
     edge_dsts = np.asarray(edge_dsts, np.int32)
     if edge_srcs.size == 0:
         return DeltaPairs.empty()
+    delta_is_view = schema.is_view_edge_label(edge_label)
     parts: List[DeltaPairs] = []
     node_arrays = None  # host copies for endpoint checks, fetched on demand
     for tpl in templates.edge:
-        if tpl.rel_label is not None and tpl.rel_label != edge_label:
+        if not _tpl_matches_label(tpl, edge_label, delta_is_view):
             continue
         rel = vdef.match.rels[tpl.position]
         if rel.direction is Direction.IN:
@@ -460,8 +476,9 @@ def affected_sources_edges(templates: ViewTemplates, vdef: ViewDef,
     hit = np.zeros(ex.g.node_cap, bool)
     if edge_srcs.size == 0:
         return np.zeros(0, np.int32)
+    delta_is_view = schema.is_view_edge_label(edge_label)
     for tpl in templates.edge:
-        if tpl.rel_label is not None and tpl.rel_label != edge_label:
+        if not _tpl_matches_label(tpl, edge_label, delta_is_view):
             continue
         rel = vdef.match.rels[tpl.position]
         if rel.direction is Direction.IN:
@@ -527,8 +544,9 @@ def affected_sources_edge(templates: ViewTemplates, vdef: ViewDef,
     """Sources whose view rows may change when edge (src,dst,label) changes."""
     ex = ex or _delta_exec(g, schema, cfg)
     hit = np.zeros(g.node_cap, bool)
+    delta_is_view = schema.is_view_edge_label(edge_label)
     for tpl in templates.edge:
-        if tpl.rel_label is not None and tpl.rel_label != edge_label:
+        if not _tpl_matches_label(tpl, edge_label, delta_is_view):
             continue
         rel = vdef.match.rels[tpl.position]
         if rel.direction is Direction.IN:

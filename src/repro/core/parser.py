@@ -57,6 +57,15 @@ def _tokenize(text: str) -> List[str]:
     return toks
 
 
+def _tok_equal(t: str, expected: str) -> bool:
+    """Keyword tokens compare case-insensitively (``match`` parses like
+    ``MATCH``, per Cypher); everything else — labels, variables,
+    punctuation — compares case-sensitively."""
+    if expected.upper() in _KEYWORDS:
+        return t.upper() == expected.upper()
+    return t == expected
+
+
 class _Cursor:
     def __init__(self, toks: List[str]):
         self.toks = toks
@@ -75,7 +84,7 @@ class _Cursor:
 
     def expect(self, tok: str) -> str:
         t = self.next()
-        if t.upper() != tok.upper() if tok.upper() in _KEYWORDS else t != tok:
+        if not _tok_equal(t, tok):
             raise ParseError(f"expected {tok!r}, got {t!r} at token {self.i - 1}")
         return t
 
@@ -83,7 +92,7 @@ class _Cursor:
         t = self.peek()
         if t is None:
             return False
-        ok = t.upper() == tok.upper() if tok.upper() in _KEYWORDS else t == tok
+        ok = _tok_equal(t, tok)
         if ok:
             self.i += 1
         return ok

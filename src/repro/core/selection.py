@@ -139,7 +139,15 @@ def select_views(g, schema, read_queries: Sequence[str], k: int = 3,
     else:
         ex = PathExecutor(g, schema, cfg or ExecConfig(collect_metrics=True))
     chosen: List[ViewDef] = []
-    remaining = {_signature(s): s for s in candidate_subpaths(queries)}
+    # workload queries may already reference view edges (e.g. pre-rewritten
+    # patterns); a view over another view's label is not maintainable, so
+    # the base/view partition filters those candidates out.  Wildcard-rel
+    # candidates are fine: they expand over base labels only.
+    candidates = [s for s in candidate_subpaths(queries)
+                  if not any(r.label is not None
+                             and schema.is_view_edge_label(r.label)
+                             for r in s.rels)]
+    remaining = {_signature(s): s for s in candidates}
     live_queries = list(queries)
     for i in range(k):
         scored: List[Candidate] = []

@@ -7,6 +7,12 @@ instance) is preserved compactly via the per-edge ``weight`` = path count;
 unbounded (``*n..``) views use set semantics with weight 1 (counting infinite
 walk families is undefined; see DESIGN.md §2).
 
+Because view edges share the arena with base edges, view labels live in a
+separate schema partition (``GraphSchema.register_view_label``): wildcard
+relationships, maintenance triggering (:meth:`GraphSession._uses_label`) and
+``check_consistency`` all treat "any label" as "any *base* label", so
+materialized views never leak phantom rows into unlabeled-rel queries.
+
 The session owns one persistent :class:`~repro.core.executor.ExecEngine`
 (DESIGN.md §4): per-label compact edge slices, degree vectors and dense
 adjacency tiles survive across queries and writes, and a mutation invalidates
@@ -123,7 +129,7 @@ class GraphSession:
         self.engine.set_graph(g, None)
 
     def _set_graph(self, g: G.PropertyGraph,
-                   touched_edge_labels: Iterable[int]) -> None:
+                   touched_edge_labels: Optional[Iterable[int]]) -> None:
         self.engine.set_graph(g, touched_edge_labels)
 
     def _reserve_edge_slots(self, g: G.PropertyGraph, n: int
@@ -136,18 +142,38 @@ class GraphSession:
             free = np.flatnonzero(~np.asarray(g.edge_alive))
         return g, free[:n].astype(np.int32)
 
+    def _reserve_node_slots(self, g: G.PropertyGraph, n: int
+                            ) -> Tuple[G.PropertyGraph, np.ndarray, bool]:
+        """Reserve ``n`` free node slots, growing the node arena if needed.
+
+        Returns ``(graph, slots, grew)``.  Node growth changes ``node_cap``
+        — the shape of frontiers, degree vectors and dense adjacency — so the
+        caller must fully invalidate the engine when ``grew`` is True."""
+        free = np.flatnonzero(~np.asarray(g.node_alive))
+        grew = False
+        if free.shape[0] < n:
+            g = G.grow_node_arena(g, g.node_cap + 2 * n + 128)
+            free = np.flatnonzero(~np.asarray(g.node_alive))
+            grew = True
+        return g, free[:n].astype(np.int32), grew
+
     # ----------------------------------------------------------- view create
 
     def create_view(self, stmt: Union[str, ViewDef]) -> MaterializedView:
         vdef = parse_view(stmt) if isinstance(stmt, str) else stmt
         if vdef.name in self.views:
             raise ValueError(f"view {vdef.name!r} already exists")
+        if (vdef.name in self.schema.edge_labels
+                and not self.schema.is_view_edge_label(vdef.name)):
+            raise ValueError(
+                f"view name {vdef.name!r} collides with an existing base "
+                f"edge label; view labels live in a separate partition")
         t0 = time.perf_counter()
         counting = not any(r.unbounded for r in vdef.match.rels)
         res = self._exec.run_path(vdef.match, counting=counting)
         s_ids, d_ids, cnt = res.pairs()
 
-        label_id = self.schema.edge_labels.intern(vdef.name)
+        label_id = self.schema.register_view_label(vdef.name)
         srcs, dsts = (s_ids, d_ids) if vdef.forward else (d_ids, s_ids)
         n_new = srcs.shape[0]
         g, slots = self._reserve_edge_slots(self.g, n_new)
@@ -174,6 +200,13 @@ class GraphSession:
         return view
 
     def drop_view(self, name: str) -> None:
+        """Drop a view and delete its arena edges.  The view's edge label
+        stays registered in the schema's view partition (label ids are never
+        recycled), so wildcard queries remain base-only either way."""
+        if name not in self.views:
+            raise ValueError(
+                f"view {name!r} does not exist; existing views: "
+                f"{sorted(self.views) or '(none)'}")
         view = self.views.pop(name)
         slots = np.fromiter(view.pair_slot.values(), np.int32,
                             len(view.pair_slot))
@@ -298,11 +331,15 @@ class GraphSession:
         self.apply_writes(G.WriteBatch(node_deletes=[int(node_id)]))
 
     def create_node(self, label: str, key: Optional[int] = None) -> int:
-        """Create a node (no maintenance needed; paper §IV-B)."""
-        slot = int(G.free_node_slots(self.g, 1)[0])
+        """Create a node (no maintenance needed; paper §IV-B).  Grows the
+        node arena when full (reserve-then-grow, like the edge path)."""
+        g, slots, grew = self._reserve_node_slots(self.g, 1)
+        slot = int(slots[0])
         lid = self.schema.node_labels.intern(label)
-        g = G.create_node(self.g, slot, lid, slot if key is None else int(key))
-        self._set_graph(g, set())
+        g = G.create_node(g, slot, lid, slot if key is None else int(key))
+        # node growth changes node_cap (frontier/degree/adjacency shapes):
+        # full engine invalidation; otherwise node writes touch no edge label
+        self.engine.set_graph(g, None if grew else set())
         return slot
 
     # ----------------------------------------------------- batched write path
@@ -321,6 +358,15 @@ class GraphSession:
         """
         metrics = Metrics()
         g0 = self.g
+
+        # view edges are owned by the view machinery: a user-created edge
+        # carrying a view label would be invisible to wildcard queries, never
+        # maintained, and orphaned by drop_view — reject before mutating
+        for _, _, lbl in batch.edge_creates:
+            if self.schema.is_view_edge_label(lbl):
+                raise ValueError(
+                    f"cannot create a base edge with view label {lbl!r}; "
+                    f"view edges are maintained by create_view/apply_writes")
 
         # -- resolve edge deletes against g0 (dedup; dead slots are no-ops)
         e_alive0 = np.asarray(g0.edge_alive)
@@ -365,9 +411,10 @@ class GraphSession:
         # -- step 3: node creates  g2 -> g2n (no maintenance; paper §IV-B)
         g2n = g2
         created_nodes = np.zeros(0, np.int32)
+        node_grew = False
         if batch.node_creates:
-            created_nodes = np.asarray(
-                G.free_node_slots(g2, len(batch.node_creates)), np.int32)
+            g2, created_nodes, node_grew = self._reserve_node_slots(
+                g2, len(batch.node_creates))
             g2n = G.create_nodes(
                 g2, created_nodes,
                 np.asarray([self.schema.node_labels.intern(l)
@@ -401,7 +448,9 @@ class GraphSession:
         # invalidate only the touched labels on the persistent engine
         touched = set(del_by_label) | set(create_by_label) | incident_labels
         old_eng = self.engine.snapshot()
-        self._set_graph(g3, touched)
+        # node-arena growth changes node_cap, invalidating every shape-keyed
+        # cache entry — fall back to full invalidation for this (rare) batch
+        self._set_graph(g3, None if node_grew else touched)
         self._old_exec.engine = old_eng
         # mid graph (after deletes, before creates): suffix side of both
         # telescoping steps; coincides with an existing engine when possible
@@ -523,6 +572,15 @@ class GraphSession:
         self._apply_delta(view, sub, sign=+1)
 
     def _uses_label(self, view: MaterializedView, label: str) -> bool:
+        """Does a write to edges of ``label`` affect this view's match?
+
+        A wildcard rel (``label is None``) spans *base* labels only, so
+        writes to another view's label never trigger maintenance here — and a
+        view can never self-maintain through its own materialized edges.
+        View labels only count when the match names them explicitly (a query
+        pattern over a view edge, e.g. after optimizer rewrite)."""
+        if self.schema.is_view_edge_label(label):
+            return any(r.label == label for r in view.vdef.match.rels)
         return any(r.label == label or r.label is None
                    for r in view.vdef.match.rels)
 
@@ -552,7 +610,11 @@ class GraphSession:
     # ------------------------------------------------------------ integrity
 
     def check_consistency(self, name: str) -> bool:
-        """Paper §VI-C verification: stored view == re-derived from scratch."""
+        """Paper §VI-C verification: stored view == re-derived from scratch.
+
+        The re-derivation runs on the session engine, so a wildcard rel in
+        the view's match expands over base labels only — other views'
+        (and this view's own) materialized edges cannot pollute the check."""
         view = self.views[name]
         res = self._exec.run_path(view.vdef.match, counting=view.counting)
         s_ids, d_ids, cnt = res.pairs()

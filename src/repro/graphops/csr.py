@@ -23,6 +23,23 @@ def build_csr(src: np.ndarray, dst: np.ndarray, num_nodes: int
     return indptr, dst[perm], perm
 
 
+def compact_coo(src: np.ndarray, dst: np.ndarray, weight: np.ndarray,
+                keep: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Select the kept COO edges and sort them by src (CSR edge order).
+
+    Used by the executor's all-base-edges wildcard index: the arena is a
+    free-list, so alive edges of many labels interleave; the sort groups each
+    source's out-edges contiguously, which keeps the gather/scatter hop's
+    memory access pattern CSR-like without materializing ``indptr``.
+    """
+    idx = np.flatnonzero(np.asarray(keep))
+    src_k = np.asarray(src)[idx]
+    perm = np.argsort(src_k, kind="stable")
+    return (src_k[perm], np.asarray(dst)[idx][perm],
+            np.asarray(weight)[idx][perm])
+
+
 def ell_from_coo(src: np.ndarray, dst: np.ndarray, num_nodes: int,
                  max_deg: int | None = None, pad: int = -1
                  ) -> Tuple[np.ndarray, int]:

@@ -82,6 +82,29 @@ def test_parse_errors(bad):
             parse_query(bad)
 
 
+def test_lowercase_keywords_parse():
+    """Keywords are case-insensitive (Cypher convention): lowercase ``match
+    ... return`` parses identically to the uppercase form."""
+    q_lower = parse_query("match (n:A)-[r:x]->(m:B) return n, m")
+    q_upper = parse_query("MATCH (n:A)-[r:x]->(m:B) RETURN n, m")
+    assert q_lower == q_upper
+    assert parse_query("Match (a)-[:x]->(b) Return count(*)").count_only
+
+
+def test_lowercase_view_statement_parses():
+    v = parse_view("create view V1 as (construct (s)-[r:V1]->(d) "
+                   "match (s:A)-[:x]->(d:B))")
+    assert v.name == "V1" and v.forward
+
+
+def test_labels_and_vars_stay_case_sensitive():
+    """Only keywords fold case — labels and variables do not."""
+    q = parse_query("match (n:person)-[:KNOWS]->(m) return n")
+    assert q.path.start.label == "person"
+    assert q.path.rels[0].label == "KNOWS"
+    assert q.path.start.var == "n"
+
+
 def test_pretty_round_trip():
     text = "MATCH (n:Comment)-[:replyOf*2..5]->(m:Post) RETURN n, m"
     q1 = parse_query(text)

@@ -1,0 +1,283 @@
+"""Base/view edge-label partition: wildcard queries must never see view edges.
+
+Views are materialized as real edges in the same arena (paper §IV-A), so a
+wildcard relationship ``-[r]->`` that compiled to the whole-arena edge mask
+returned phantom rows as soon as a view existed.  These tests lock in the
+partition semantics end to end:
+
+* wildcard pair sets are invariant under view creation/drop, on both the
+  ``segment`` and ``dense`` backends (toy graph and the SNB-like graph);
+* ``check_consistency`` holds for a wildcard-rel view while other views
+  exist, regardless of creation order;
+* a view-label-only write triggers zero maintenance work for a wildcard-rel
+  view and leaves the engine's wildcard caches warm (base-generation rule);
+* node-arena exhaustion grows the arena instead of raising, in both the
+  single-op and the batched write path;
+* ``drop_view`` of a missing view raises a descriptive ``ValueError``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, GraphSchema, GraphSession, WriteBatch
+from repro.core.executor import ExecConfig
+from repro.core.schema import NO_LABEL
+
+
+def _toy_session(cfg=None, edge_cap=1024):
+    """A,B nodes with x and y edges: x forms a chain, y fans out."""
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    nodes = [b.add_node("A" if i % 2 == 0 else "B") for i in range(8)]
+    for i in range(7):
+        b.add_edge(nodes[i], nodes[i + 1], "x")
+    for i in range(0, 8, 2):
+        b.add_edge(nodes[i], nodes[(i + 3) % 8], "y")
+    return GraphSession(b.finalize(edge_cap=edge_cap), schema, cfg=cfg)
+
+
+WILD_Q = "MATCH (n:A)-[r]->(m:B) RETURN n, m"
+COUNTING_VIEW = ("CREATE VIEW VC AS (CONSTRUCT (s)-[r:VC]->(d) "
+                 "MATCH (s:A)-[:x*1..2]->(d:B))")
+SET_VIEW = ("CREATE VIEW VS AS (CONSTRUCT (s)-[r:VS]->(d) "
+            "MATCH (s:A)-[:x*1..]->(d:B))")
+WILD_VIEW = ("CREATE VIEW VW AS (CONSTRUCT (s)-[r:VW]->(d) "
+             "MATCH (s:A)-[q]->(d:B))")
+
+
+def _pair_set(res):
+    s, d, c = res.pairs()
+    return set(zip(s.tolist(), d.tolist(), c.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# tentpole invariant: wildcard results identical with 0, 1, N views
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["segment", "dense"])
+def test_wildcard_invariance_across_views_toy(backend):
+    sess = _toy_session(ExecConfig(backend=backend))
+    p0 = _pair_set(sess.query(WILD_Q, use_views=False))
+    assert p0, "toy graph must have wildcard A->B pairs"
+
+    sess.create_view(COUNTING_VIEW)        # 1 view
+    assert _pair_set(sess.query(WILD_Q, use_views=False)) == p0
+    sess.create_view(SET_VIEW)             # N views
+    sess.create_view(WILD_VIEW)
+    assert _pair_set(sess.query(WILD_Q, use_views=False)) == p0
+
+    for name in ("VW", "VS", "VC"):        # back to 0 views
+        sess.drop_view(name)
+    assert _pair_set(sess.query(WILD_Q, use_views=False)) == p0
+
+
+@pytest.mark.parametrize("backend", ["segment", "dense"])
+def test_wildcard_invariance_snb_person(backend):
+    """Acceptance query on the SNB-like graph: (n:Person)-[r]->(m:Person)."""
+    from repro.configs.mv4pg import WORKLOADS
+    from repro.data.synthetic import snb_like
+
+    g, schema, _ = snb_like(seed=0, n_person=120, n_post=80, n_comment=300,
+                            n_place=10, n_tag=30)
+    sess = GraphSession(g, schema, cfg=ExecConfig(backend=backend))
+    q = "MATCH (n:Person)-[r]->(m:Person) RETURN n, m"
+    p0 = _pair_set(sess.query(q, use_views=False))
+    assert p0
+
+    created = []
+    for stmt in WORKLOADS["snb"].views:    # ROOT_POST, COMMENT_TAG, KNOWS2
+        created.append(sess.create_view(stmt).name)
+        assert _pair_set(sess.query(q, use_views=False)) == p0, (
+            f"{backend}: phantom pairs after creating {created[-1]}")
+    # KNOWS2 materializes Person->Person edges — the nastiest leak case
+    assert "KNOWS2" in created
+    for name in created:
+        sess.drop_view(name)
+    assert _pair_set(sess.query(q, use_views=False)) == p0
+
+
+def test_wildcard_counts_exclude_view_weights():
+    """Bag semantics: view edges carry path-count weights; a leak would not
+    only add pairs but multiply counts.  num_results must be invariant too."""
+    sess = _toy_session()
+    r0 = sess.query(WILD_Q, use_views=False)
+    n0, c0 = r0.num_pairs(), r0.num_results()
+    sess.create_view(COUNTING_VIEW)
+    r1 = sess.query(WILD_Q, use_views=False)
+    assert (r1.num_pairs(), r1.num_results()) == (n0, c0)
+
+
+# ---------------------------------------------------------------------------
+# consistency of wildcard-rel views under other views
+# ---------------------------------------------------------------------------
+
+def test_wildcard_view_consistent_while_other_views_exist():
+    # wildcard view first, labeled view second
+    sess = _toy_session()
+    sess.create_view(WILD_VIEW)
+    sess.create_view(COUNTING_VIEW)
+    assert sess.check_consistency("VW")
+    assert sess.check_consistency("VC")
+
+
+def test_wildcard_view_created_after_other_view_excludes_its_edges():
+    # labeled view first: the wildcard view's materialization must not
+    # include VC's A->B view edges
+    ref = _toy_session()
+    expected = _pair_set(ref.query("MATCH (s:A)-[q]->(d:B) RETURN s, d",
+                                   use_views=False))
+    sess = _toy_session()
+    sess.create_view(COUNTING_VIEW)
+    view = sess.create_view(WILD_VIEW)
+    stored = {(k[0], k[1], int(sess.g.edge_weight[sl]))
+              for k, sl in view.pair_slot.items()}   # VW is forward
+    assert stored == expected
+    assert sess.check_consistency("VW")
+
+
+def test_wildcard_view_maintained_on_base_writes():
+    """Base writes still trigger wildcard-view maintenance (no over-pruning)."""
+    sess = _toy_session()
+    sess.create_view(WILD_VIEW)
+    n_before = len(sess.views["VW"].pair_slot)
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    sess.create_edge(int(nodes[0]), int(nodes[7]), "z")   # new base label
+    assert sess.check_consistency("VW")
+    assert len(sess.views["VW"].pair_slot) == n_before + 1
+
+
+# ---------------------------------------------------------------------------
+# maintenance triggering + engine invalidation under view-label writes
+# ---------------------------------------------------------------------------
+
+def test_view_label_write_zero_maintenance_and_warm_wildcard_cache():
+    sess = _toy_session()
+    sess.create_view(WILD_VIEW)
+    sess.create_view(COUNTING_VIEW)
+    p0 = _pair_set(sess.query(WILD_Q, use_views=False))
+    base_gen = sess.engine.epochs.of(NO_LABEL)
+    misses = sess.engine.misses
+
+    # a write that touches only another view's label: deleting one of VC's
+    # materialized edges by arena id (the shape _uses_label used to
+    # over-trigger on — and a potential self-maintenance feedback loop)
+    vc_slot = next(iter(sess.views["VC"].pair_slot.values()))
+    sess.apply_writes(WriteBatch(edge_deletes=[int(vc_slot)]))
+
+    m = sess.last_maintenance_metrics
+    assert m.db_hits == 0 and m.rows == 0, (
+        "view-label-only write must trigger zero delta work")
+    assert sess.engine.epochs.of(NO_LABEL) == base_gen, (
+        "view-label write must not move the base generation")
+    # wildcard query runs entirely on warm caches; VW is untouched
+    assert _pair_set(sess.query(WILD_Q, use_views=False)) == p0
+    assert sess.engine.misses == misses, "wildcard caches were evicted"
+    assert sess.check_consistency("VW")
+
+
+def test_apply_writes_rejects_view_label_edge_create():
+    """User-created edges may not carry a view label: they would be invisible
+    to wildcard queries, unmaintained, and orphaned by drop_view."""
+    sess = _toy_session()
+    sess.create_view(COUNTING_VIEW)
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    n_alive = int(sess.g.num_edges())
+    with pytest.raises(ValueError, match="VC"):
+        sess.create_edge(int(nodes[0]), int(nodes[1]), "VC")
+    assert int(sess.g.num_edges()) == n_alive   # rejected before mutation
+    assert sess.check_consistency("VC")
+
+
+@pytest.mark.parametrize("backend", ["segment", "dense"])
+def test_edge_growth_from_view_write_keeps_wildcard_caches_valid(backend):
+    """View materialization can grow the *edge* arena without moving the base
+    generation; warm wildcard caches must stay shape-consistent (the base
+    mask memo keys on (base_generation, edge_cap))."""
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    nodes = [b.add_node("A" if i % 2 == 0 else "B") for i in range(16)]
+    for i in range(15):
+        b.add_edge(nodes[i], nodes[i + 1], "x")
+    sess = GraphSession(b.finalize(edge_cap=128), schema,
+                        cfg=ExecConfig(backend=backend))
+    p0 = _pair_set(sess.query(WILD_Q, use_views=False))      # warm caches
+    base_gen = sess.engine.epochs.of(NO_LABEL)
+    # an unbounded view over the 16-chain materializes >113 pairs -> growth
+    sess.create_view("CREATE VIEW VB AS (CONSTRUCT (s)-[r:VB]->(d) "
+                     "MATCH (s)-[:x*1..]->(d))")
+    assert sess.g.edge_cap > 128
+    assert sess.engine.epochs.of(NO_LABEL) == base_gen
+    assert _pair_set(sess.query(WILD_Q, use_views=False)) == p0
+
+
+def test_base_write_moves_base_generation():
+    sess = _toy_session()
+    sess.query(WILD_Q, use_views=False)
+    base_gen = sess.engine.epochs.of(NO_LABEL)
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    sess.create_edge(int(nodes[0]), int(nodes[3]), "x")
+    assert sess.engine.epochs.of(NO_LABEL) == base_gen + 1
+
+
+def test_view_name_collision_with_base_label_rejected():
+    sess = _toy_session()
+    with pytest.raises(ValueError, match="base"):
+        sess.create_view("CREATE VIEW x AS (CONSTRUCT (s)-[r:x]->(d) "
+                         "MATCH (s:A)-[:y]->(d:B))")
+
+
+# ---------------------------------------------------------------------------
+# satellites: node-arena growth, drop_view error
+# ---------------------------------------------------------------------------
+
+def _full_node_session(n=128):
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    for i in range(n - 1):
+        b.add_node("A" if i % 2 == 0 else "B")
+    last = b.add_node("B")
+    b.add_edge(0, last, "x")
+    return GraphSession(b.finalize(node_cap=n, edge_cap=256), schema)
+
+
+def test_create_node_grows_full_arena():
+    sess = _full_node_session()
+    assert int(np.sum(~np.asarray(sess.g.node_alive))) == 0   # arena full
+    slots = [sess.create_node("A") for _ in range(5)]
+    assert sess.g.node_cap > 128
+    assert all(bool(sess.g.node_alive[s]) for s in slots)
+    assert len(set(slots)) == 5
+
+
+def test_apply_writes_node_creates_grow_full_arena():
+    sess = _full_node_session()
+    sess.create_view(COUNTING_VIEW.replace("*1..2", ""))      # 1-hop view
+    batch = WriteBatch()
+    for i in range(4):
+        batch.create_node("A", 1000 + i)
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    batch.create_edge(int(nodes[0]), int(nodes[1]), "x")
+    res = sess.apply_writes(batch)
+    assert sess.g.node_cap > 128
+    assert res.node_slots.shape[0] == 4
+    assert all(bool(sess.g.node_alive[int(s)]) for s in res.node_slots)
+    # growth forced a full engine invalidation; queries and consistency
+    # must work at the new node_cap
+    assert sess.check_consistency("VC")
+    sess.query(WILD_Q, use_views=False)
+
+
+def test_queries_consistent_across_node_growth():
+    sess = _full_node_session()
+    p0 = _pair_set(sess.query(WILD_Q, use_views=False))
+    sess.create_node("A")                                     # grows
+    assert _pair_set(sess.query(WILD_Q, use_views=False)) == p0
+
+
+def test_drop_view_missing_raises_value_error():
+    sess = _toy_session()
+    sess.create_view(COUNTING_VIEW)
+    with pytest.raises(ValueError) as ei:
+        sess.drop_view("nope")
+    assert "nope" in str(ei.value) and "VC" in str(ei.value)
+    with pytest.raises(ValueError):
+        _toy_session().drop_view("nope")   # empty catalog case
