@@ -13,12 +13,14 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig17_*    — DBHit/Rows profiling with vs without views (paper Figs 17-18)
   wildcard_* — wildcard 1-hop: compact all-base-edges index vs full-arena
                masked scan, with materialized views in the arena
+  plan_cache_* — repeated-query compile overhead: cold (parse+rewrite+plan)
+               vs warm (plan-cache hit), plus fused-vs-unfused e2e parity
   roofline_* — dry-run roofline table (results/dryrun_all.json, if present)
 
 Each benchmark additionally writes its rows as machine-readable
 ``BENCH_<name>.json`` under ``--json-dir`` (default ``results/``), so CI runs
 accumulate a perf trajectory.  ``--smoke`` is the CI-friendly subset:
-``--small`` sizes, maintenance + wildcard only.
+``--small`` sizes, maintenance + wildcard + plan_cache only.
 """
 from __future__ import annotations
 
@@ -73,7 +75,9 @@ def bench_workloads(small: bool) -> None:
              f"W_ori/W_opt={rep.workload_speedup:.2f};"
              f"W_ori/(MV+W_opt)={rep.workload_speedup_with_mv:.2f};"
              f"engine_hits={rep.engine_hits};"
-             f"engine_misses={rep.engine_misses}")
+             f"engine_misses={rep.engine_misses};"
+             f"plan_hits={rep.plan_hits};plan_misses={rep.plan_misses};"
+             f"rewrite_amortized_us={rep.rewrite_amortized_s*1e6:.2f}")
 
 
 def bench_maintenance_scaling(small: bool) -> None:
@@ -226,6 +230,85 @@ def bench_wildcard(small) -> None:
          f"pairs={res.num_pairs()};views={len(sess.views)}")
 
 
+def bench_plan_cache(small) -> None:
+    """Repeated-query microbench (the compiled-plan headline number).
+
+    A 3-hop rewritten query on an SNB-like graph with the workload's views
+    materialized: the cold path pays parse + Algorithm-3 rewrite + physical
+    planning; second-and-later executions hit the session plan cache and pay
+    only fingerprinting.  Asserts result/metric parity between the fused
+    plan and the unfused per-hop executor on the same rewritten query, and
+    the acceptance bar: warm non-device overhead >= 5x below cold."""
+    from repro.configs.mv4pg import WORKLOADS
+    from repro.core import GraphSession, PathExecutor
+    from repro.core.optimizer import optimize_query
+    from repro.core.parser import parse_query
+    from repro.data.synthetic import snb_like
+
+    mode = small if isinstance(small, str) else ("small" if small else "default")
+    n_person, n_post, n_comment = {
+        "small": (500, 400, 3000),
+        "default": (1000, 800, 6000),
+        "large": (2000, 1500, 12000),
+    }[mode]
+    g, schema, _ = snb_like(seed=0, n_person=n_person, n_post=n_post,
+                            n_comment=n_comment)
+    sess = GraphSession(g, schema)
+    for stmt in WORKLOADS["snb"].views:
+        sess.create_view(stmt)
+    q = ("MATCH (c:Comment)-[:replyOf*..]->(p:Post)-[:hasTag]->(t:Tag) "
+         "RETURN c, t")
+
+    # cold: the full parse → fingerprint → rewrite → physical-plan pipeline
+    # (what the old read path re-paid on every single call)
+    t0 = time.perf_counter()
+    plan, _ = sess.planner.plan(parse_query(q), list(sess.views.values()),
+                                sess.view_set_generation)
+    t_cold = time.perf_counter() - t0
+
+    def timeit(fn, n=10):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        return (time.perf_counter() - t0) / n
+
+    # warm: same pipeline; rewrite + planning collapse to one cache lookup
+    t_warm = timeit(lambda: sess.planner.plan(
+        parse_query(q), list(sess.views.values()), sess.view_set_generation))
+    overhead_ratio = t_cold / max(t_warm, 1e-12)
+    assert overhead_ratio >= 5.0, (
+        f"plan-cache warm overhead only {overhead_ratio:.1f}x below cold")
+    _row("plan_cache_overhead_cold", t_cold * 1e6,
+         "parse+rewrite+plan, first call")
+    _row("plan_cache_overhead_warm", t_warm * 1e6,
+         f"cold_over_warm={overhead_ratio:.1f};"
+         f"rewrite_misses={sess.planner.rewrite_misses}")
+
+    # result + metric parity: fused plan vs unfused per-hop executor on the
+    # same rewritten query
+    res_plan = sess.query(q, use_views=True)
+    q_rw = optimize_query(parse_query(q), list(sess.views.values()))
+    res_unfused = PathExecutor(engine=sess.engine, cfg=sess.cfg).run_query(q_rw)
+    assert np.array_equal(res_plan.reach, res_unfused.reach), \
+        "fused plan result differs from unfused executor"
+    assert (res_plan.metrics.db_hits == res_unfused.metrics.db_hits
+            and res_plan.metrics.rows == res_unfused.metrics.rows), (
+        f"metric drift: plan={res_plan.metrics} unfused={res_unfused.metrics}")
+
+    # warm end-to-end query: cached plan + fused program vs unfused dispatch
+    t_plan_e2e = timeit(lambda: sess.query(q, use_views=True), n=5)
+    t_unfused_e2e = timeit(
+        lambda: PathExecutor(engine=sess.engine, cfg=sess.cfg).run_query(q_rw),
+        n=5)
+    _row("plan_cache_query_warm_e2e", t_plan_e2e * 1e6,
+         f"unfused_us={t_unfused_e2e*1e6:.1f};"
+         f"e2e_speedup={t_unfused_e2e/max(t_plan_e2e,1e-12):.2f};"
+         f"pairs={res_plan.num_pairs()};"
+         f"plan_hits={sess.planner.plan_hits};"
+         f"plan_misses={sess.planner.plan_misses}")
+
+
 def bench_kernels(small: bool) -> None:
     """Microbenchmarks of the Pallas kernels vs their jnp oracles
     (interpret mode on CPU: correctness-path timing, not TPU perf)."""
@@ -281,11 +364,12 @@ BENCHES = {
     "maintenance": bench_maintenance_scaling,
     "profile": bench_profile,
     "wildcard": bench_wildcard,
+    "plan_cache": bench_plan_cache,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }
 
-SMOKE_BENCHES = ("maintenance", "wildcard")
+SMOKE_BENCHES = ("maintenance", "wildcard", "plan_cache")
 
 
 def main() -> None:
@@ -312,7 +396,8 @@ def main() -> None:
             continue
         t0 = time.time()
         first_row = len(_JSON_ROWS)
-        fn(mode if name in ("workloads", "maintenance", "wildcard")
+        fn(mode if name in ("workloads", "maintenance", "wildcard",
+                            "plan_cache")
            else small)
         elapsed = time.time() - t0
         print(f"# {name} done in {elapsed:.1f}s", file=sys.stderr)

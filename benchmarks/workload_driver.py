@@ -40,6 +40,11 @@ class WorkloadReport:
     mv_total: float = 0.0
     engine_hits: int = 0       # persistent-engine cache hits over the run
     engine_misses: int = 0
+    plan_hits: int = 0         # compiled-plan cache hits over the run
+    plan_misses: int = 0
+    rewrite_total_s: float = 0.0    # Algorithm-3 rewrite time actually paid
+    rewrite_amortized_s: float = 0.0  # rewrite_total_s / query executions:
+    #                                   → ~0 as repeats hit the plan cache
 
     @property
     def workload_speedup(self) -> float:
@@ -176,6 +181,11 @@ def run_workload(g, schema, wl: WorkloadConfig, repeats: int = 3,
     report.w_opt = sum(q.opt_s for q in report.queries)
     report.engine_hits = sess.engine.hits
     report.engine_misses = sess.engine.misses
+    report.plan_hits = sess.planner.plan_hits
+    report.plan_misses = sess.planner.plan_misses
+    report.rewrite_total_s = sess.planner.rewrite_seconds_total
+    report.rewrite_amortized_s = (
+        sess.planner.rewrite_seconds_total / max(sess.planner.plan_calls, 1))
     # paper's consistency verification (§VI-C)
     for vname in list(sess.views):
         assert sess.check_consistency(vname), f"{vname} inconsistent!"

@@ -5,12 +5,15 @@ from repro.core.graph import (
     create_node, delete_edge, delete_node, find_node,
 )
 from repro.core.pattern import (
-    Direction, NodePat, PathPattern, Query, RelPat, ViewDef,
+    Direction, NodePat, PathPattern, Query, QueryFingerprint, RelPat, ViewDef,
 )
-from repro.core.parser import parse_query, parse_view
+from repro.core.parser import (
+    canonicalize_query, parse_query, parse_view, query_fingerprint,
+)
 from repro.core.executor import (
     ExecConfig, ExecEngine, Metrics, PathExecutor, ReachResult,
 )
+from repro.core.plan import CompiledPlan, QueryPlanner
 from repro.core.maintenance import ViewTemplates, MaintTemplate
 from repro.core.views import (
     BatchResult, GraphSession, MaterializedView, ViewStats,
@@ -21,9 +24,11 @@ __all__ = [
     "GraphSchema", "LabelRegistry", "NO_LABEL",
     "PropertyGraph", "GraphBuilder", "LabelEpochs", "WriteBatch",
     "create_edge", "create_node", "delete_edge", "delete_node", "find_node",
-    "Direction", "NodePat", "PathPattern", "Query", "RelPat", "ViewDef",
-    "parse_query", "parse_view",
+    "Direction", "NodePat", "PathPattern", "Query", "QueryFingerprint",
+    "RelPat", "ViewDef",
+    "canonicalize_query", "parse_query", "parse_view", "query_fingerprint",
     "ExecConfig", "ExecEngine", "Metrics", "PathExecutor", "ReachResult",
+    "CompiledPlan", "QueryPlanner",
     "ViewTemplates", "MaintTemplate",
     "BatchResult", "GraphSession", "MaterializedView", "ViewStats",
     "optimize_query",

@@ -37,12 +37,19 @@ from repro.utils import INF_HOPS, round_up
 
 @dataclass
 class ExecConfig:
-    backend: str = "segment"        # "segment" | "dense"
+    backend: str = "segment"        # "segment" | "dense": unfused PathExecutor
+    #                                 backend; "dense" also forces dense hops
+    #                                 in compiled plans (legacy override)
     src_block: int = 256            # sources per frontier block
     max_closure_iters: int = 256    # safety bound for unbounded fixpoints
     use_pallas: bool = False        # route dense hops through the Pallas kernel
     interpret: bool = True          # Pallas interpret mode (CPU container)
     collect_metrics: bool = True    # DBHit/Rows accounting (host syncs/hop)
+    # --- compiled-plan (core/plan.py) knobs ------------------------------
+    plan_backend: str = "auto"      # "auto" = per-hop cost-based choice;
+    #                                 "segment"/"dense"/"pallas" force one
+    dense_node_limit: int = 4096    # never go dense above this node_cap
+    dense_density: float = 0.05     # E_label / node_cap^2 threshold for dense
 
 
 @dataclass
@@ -163,6 +170,7 @@ class ExecEngine:
         self._deg_cache: Dict[Tuple[int, bool], Tuple[int, jax.Array]] = {}
         self._adj_cache: Dict[Tuple[int, bool, bool], Tuple[int, jax.Array]] = {}
         self._base_mask_cache: Optional[Tuple[Tuple[int, int], np.ndarray]] = None
+        self._count_cache: Dict[int, Tuple[Tuple[int, int], int]] = {}
         self.hits = 0
         self.misses = 0
 
@@ -187,6 +195,7 @@ class ExecEngine:
             self._edge_cache.clear()
             self._deg_cache.clear()
             self._adj_cache.clear()
+            self._count_cache.clear()
             return
         touched = {int(l) for l in touched_edge_labels}
         touches_base = bool(touched - self.schema.view_edge_ids)
@@ -218,6 +227,7 @@ class ExecEngine:
         eng._deg_cache = dict(self._deg_cache)
         eng._adj_cache = dict(self._adj_cache)
         eng._base_mask_cache = self._base_mask_cache
+        eng._count_cache = dict(self._count_cache)
         if g is not None:
             eng.set_graph(g, touched_edge_labels)
         return eng
@@ -304,6 +314,26 @@ class ExecEngine:
         if label_id == NO_LABEL:
             return jnp.asarray(self._base_keep_mask())
         return self.g.edge_mask(label_id)
+
+    def label_edge_count(self, label_id: int) -> int:
+        """Number of alive edges carrying ``label_id`` (wildcard: base only).
+
+        The planner's per-hop cost model (segment vs dense vs Pallas) reads
+        this; it is cached per (label epoch, reset generation) with one host
+        reduction per rebuild.  Deliberately outside the ``hits``/``misses``
+        counters: cost-model probes are planner bookkeeping, not executor
+        cache traffic."""
+        key = (self.epochs.of(label_id), self.epochs.reset_generation)
+        ent = self._count_cache.get(label_id)
+        if ent is not None and ent[0] == key:
+            return ent[1]
+        if label_id == NO_LABEL:
+            n = int(self._base_keep_mask().sum())
+        else:
+            n = int(np.sum(np.asarray(self.g.edge_alive)
+                           & (np.asarray(self.g.edge_label) == label_id)))
+        self._count_cache[label_id] = (key, n)
+        return n
 
     def deg(self, label_id: int, reverse: bool) -> jax.Array:
         def build():

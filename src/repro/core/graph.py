@@ -53,6 +53,12 @@ class LabelEpochs:
     def __init__(self) -> None:
         self._by_label: Dict[int, int] = {}
         self.base_generation: int = 0   # bumped only by base-label mutations
+        # bumped only by bump_all (unknown-delta / full invalidations): a
+        # label that has never been individually mutated has no _by_label
+        # entry, so its per-label epoch cannot record a full invalidation —
+        # compiled-plan validity checks this counter alongside the per-label
+        # epochs (node-arena growth and external graph swaps go this way)
+        self.reset_generation: int = 0
 
     def of(self, label_id: int) -> int:
         if label_id == NO_LABEL:
@@ -69,6 +75,7 @@ class LabelEpochs:
 
     def bump_all(self) -> None:
         self.base_generation += 1
+        self.reset_generation += 1
         for lid in list(self._by_label):
             self._by_label[lid] += 1
 
@@ -76,6 +83,7 @@ class LabelEpochs:
         e = LabelEpochs()
         e._by_label = dict(self._by_label)
         e.base_generation = self.base_generation
+        e.reset_generation = self.reset_generation
         return e
 
 

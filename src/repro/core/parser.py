@@ -19,7 +19,8 @@ import re
 from typing import List, Optional, Tuple
 
 from repro.core.pattern import (
-    Direction, NodePat, PathPattern, Query, RelPat, ViewDef, mark_references,
+    Direction, NodePat, PathPattern, Query, QueryFingerprint, RelPat, ViewDef,
+    mark_references,
 )
 from repro.utils import INF_HOPS
 
@@ -216,6 +217,48 @@ def parse_query(text: str) -> Query:
     path = mark_references(path, set(returns))
     return Query(path=path, returns=tuple(returns), limit=limit,
                  count_only=count_only)
+
+
+def query_fingerprint(q: Query, schema) -> QueryFingerprint:
+    """Label-id-resolving fingerprint of ``q`` (no allocation beyond tuples).
+
+    The plan cache's hot-path key: var names are simply omitted (only their
+    ``is_referenced`` consequences matter to the matcher), and label strings
+    resolve through ``schema`` to dense ids (wildcards to ``NO_LABEL``,
+    not-yet-interned labels to ``NEVER_LABEL``).  Resolution is recomputed on
+    every call, so fingerprints stay current as labels are interned.
+    """
+    path = q.path
+    return QueryFingerprint(
+        nodes=tuple((schema.node_label_id(n.label), n.key, n.is_referenced)
+                    for n in path.nodes),
+        rels=tuple((schema.edge_label_id(r.label), r.direction.value,
+                    r.min_hops, r.max_hops, r.is_referenced)
+                   for r in path.rels),
+        force_bool=q.force_bool,
+    )
+
+
+def canonicalize_query(q: Query, schema) -> "tuple[Query, QueryFingerprint]":
+    """Canonicalization pass: stable var renaming + label-id resolution.
+
+    Returns ``(canonical query, fingerprint)``.  The canonical query renames
+    every node var to ``n<i>`` and every rel var to ``r<i>`` (positionally),
+    preserving the ``is_referenced`` flags the matcher consults — so var
+    spelling never splits the plan cache.  Callers that only need the cache
+    key should use :func:`query_fingerprint` directly (the planner's warm
+    path does): it skips rebuilding the pattern dataclasses.
+    """
+    from dataclasses import replace as _replace
+    path = q.path
+    nodes = tuple(
+        _replace(n, var=None if n.var is None else f"n{i}")
+        for i, n in enumerate(path.nodes))
+    rels = tuple(
+        _replace(r, var=None if r.var is None else f"r{i}")
+        for i, r in enumerate(path.rels))
+    canon = _replace(q, path=PathPattern(nodes=nodes, rels=rels))
+    return canon, query_fingerprint(q, schema)
 
 
 def parse_view(text: str) -> ViewDef:

@@ -175,6 +175,34 @@ def mark_references(path: PathPattern, referenced: set[str]) -> PathPattern:
     return PathPattern(nodes=nodes, rels=rels)
 
 
+@dataclass(frozen=True)
+class QueryFingerprint:
+    """Canonical, hashable identity of a query's *execution-relevant* shape.
+
+    Produced by :func:`repro.core.parser.canonicalize_query`: variable names
+    are erased (only their ``is_referenced`` consequences survive) and label
+    strings are resolved to schema label ids, so two textually different
+    queries that compile to the same physical work share one fingerprint.
+    Label ids are stable for the schema's lifetime; a label that is unknown
+    at fingerprint time resolves to ``NEVER_LABEL`` and re-resolves to its
+    real id the moment it is interned — the fingerprint is recomputed per
+    call, so plan-cache keys are always resolution-current.
+
+    ``RETURN`` lists, ``LIMIT`` and ``count_only`` enter the fingerprint only
+    through the ``is_referenced`` flags they induce (which gate the view
+    matcher's splice legality); beyond that, projection does not change the
+    reachability computation (:class:`~repro.core.executor.ReachResult`
+    carries the full per-source rows either way), so e.g. ``RETURN n, m`` and
+    ``RETURN count(*)`` over paths with the same referenced set share a plan.
+    """
+
+    nodes: Tuple[Tuple[int, Optional[int], bool], ...]
+    # per node: (label_id, key, is_referenced)
+    rels: Tuple[Tuple[int, str, int, int, bool], ...]
+    # per rel: (label_id, direction value, min_hops, max_hops, is_referenced)
+    force_bool: bool = False
+
+
 @dataclass
 class ViewEdgePat:
     """Marker rel used after ChangePG: a rel whose label names a view."""

@@ -1,0 +1,462 @@
+"""Compiled query plans + session plan cache: fingerprint → rewrite → physical.
+
+The paper's bet (MV4PG §V) is that workloads repeat *patterns*, so duplicate
+data work should be paid once and materialized.  This module makes the same
+bet about *query compilation*: the read path used to re-parse, re-run the
+Algorithm-3 rewrite against every view, and re-walk the hop list in Python
+(per-hop jit dispatch + per-hop host syncs for DBHit/Rows) on every call.
+A :class:`QueryPlanner` compiles a query once into a cached
+:class:`CompiledPlan` and repeats cost only array work:
+
+1. **normalize + fingerprint** — :func:`repro.core.parser.canonicalize_query`
+   erases variable spelling and resolves labels to schema ids, producing a
+   :class:`~repro.core.pattern.QueryFingerprint` cache key;
+2. **memoized rewrite** — the Algorithm-3 rewrite result is cached per
+   ``(fingerprint, view-set generation)``; the generation is bumped by
+   ``create_view``/``drop_view``, so the rewrite runs once per distinct query
+   shape per view catalog, not once per call;
+3. **physical planning** — each hop picks its backend (``segment`` scatter,
+   ``dense`` MXU matmul, or the Pallas ``block_spmm`` kernel) from cached
+   per-label edge counts (the same |E_L| statistic the paper's Eq. 1–2
+   bookkeeping maintains) instead of one global ``ExecConfig.backend``;
+4. **fused execution** — the whole hop list runs as **one jitted program per
+   (plan, shape)**, with DBHit/Rows accumulated device-side and synced once
+   per query instead of once per hop.
+
+Worked example (3-hop SNB query, ROOT_POST view materialized)::
+
+    sess.create_view("CREATE VIEW ROOT_POST AS (CONSTRUCT (c)-[r:ROOT_POST]"
+                     "->(p) MATCH (c:Comment)-[:replyOf*..]->(p:Post))")
+    sess.query("MATCH (c:Comment)-[:replyOf*..]->(p:Post)-[:hasTag]->(t:Tag)"
+               " RETURN c, t")
+
+    call 1 (cold): parse → fingerprint F → rewrite miss → Algorithm 3 splices
+      ROOT_POST, caches (F, gen=1) → physical plan: hop1 = segment over the
+      ROOT_POST slice, hop2 = segment over hasTag (both too sparse for dense)
+      → jit-compile the 2-hop fused program → execute.
+    call 2+ (warm): parse → fingerprint F → plan-cache hit (epochs, caps and
+      generation all unchanged) → execute the cached program.  Rewrite and
+      planning cost ≈ 0; DBHit/Rows sync once.
+
+**Invalidation.** A cached plan revalidates against exactly the machinery the
+:class:`~repro.core.executor.ExecEngine` already uses: the
+:class:`~repro.core.graph.LabelEpochs` epoch of every edge label the plan
+touches (wildcard hops key off the base generation), the epochs'
+``reset_generation`` (full invalidations: external graph swaps, node-arena
+growth), the node capacity (frontier/adjacency shapes), and — for plans whose
+rewrite consulted the view catalog — the session's view-set generation.  A
+stale plan is recompiled and counted in ``plan_misses``; operand arrays are
+re-fetched from the engine on *every* execution, so a valid plan always runs
+against current data.
+
+DBHit/Rows parity with the unfused per-hop executor is exact: the fused
+program reuses the executor's own ``_hop_segment``/``_hop_dense``/
+``_hop_cost``/``_active_rows`` jitted kernels in the same order, and hops a
+host loop would have skipped via early exit contribute exactly zero to both
+counters (empty frontiers expand to nothing).  Device-side counters are
+int32; per-query totals beyond 2^31 storage touches would need the per-hop
+host accumulation of :class:`~repro.core.executor.PathExecutor`.
+
+Known trade-off: bounded hop ranges unroll fully into the trace, so a
+``*1..m`` hop always executes ``m`` device hops even when the frontier
+empties early (the unfused boolean path host-breaks at the first empty
+frontier).  Results and metrics are unaffected — empty-frontier hops are
+exact no-ops — but queries whose ``max_hops`` far exceeds the graph diameter
+pay trace size and device work for the dead tail; keep such ranges unbounded
+(``*n..``) instead, which compiles to a converging ``while_loop``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import (
+    ExecConfig, ExecEngine, Metrics, ReachResult, _active_rows, _hop_cost,
+    _hop_dense, _hop_segment,
+)
+from repro.core.parser import query_fingerprint
+from repro.core.pattern import Direction, PathPattern, Query, QueryFingerprint
+from repro.core.schema import GraphSchema, NO_LABEL
+from repro.utils import INF_HOPS, round_up
+
+
+# ---------------------------------------------------------------------------
+# physical plan IR
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ExpandStep:
+    """One relationship expansion: hop range over one edge label."""
+
+    label_id: int
+    reverses: Tuple[bool, ...]      # per-direction reverse flags (BOTH = 2)
+    min_hops: int
+    max_hops: int                   # INF_HOPS for unbounded closure
+    backend: str                    # "segment" | "dense" | "pallas"
+
+
+@dataclass(frozen=True)
+class FilterStep:
+    """Node label/key mask applied after an expansion."""
+
+    label_id: int
+    key: Optional[int]
+
+
+def _choose_backend(engine: ExecEngine, cfg: ExecConfig, label_id: int) -> str:
+    """Per-hop physical backend from cached degree/selectivity stats.
+
+    Cost rule: a segment hop costs O(E_label) scatter work per frontier
+    block; a dense hop costs O(node_cap^2) MXU work but wins once the label's
+    adjacency is dense enough to keep the MXU busy.  We go dense (Pallas if
+    enabled) when E_label / node_cap^2 >= ``cfg.dense_density`` and the tile
+    fits (node_cap <= ``cfg.dense_node_limit``); ``cfg.plan_backend`` forces
+    a specific backend when not "auto".
+    """
+    mode = cfg.plan_backend
+    if mode and mode != "auto":
+        return mode
+    if cfg.backend == "dense":
+        # legacy global override: sessions configured with the unfused
+        # executor's backend="dense" (+ use_pallas) keep forcing the dense
+        # path; only the default "segment" defers to the cost model
+        return "pallas" if cfg.use_pallas else "dense"
+    n = engine.g.node_cap
+    if n > cfg.dense_node_limit:
+        return "segment"
+    e = engine.label_edge_count(label_id)
+    if e >= cfg.dense_density * n * n:
+        return "pallas" if cfg.use_pallas else "dense"
+    return "segment"
+
+
+def _cfg_snapshot(cfg: ExecConfig) -> tuple:
+    """The ExecConfig fields a compiled plan's trace or execution depends on;
+    plans revalidate against it so in-place cfg mutation takes effect on the
+    next query (as it did with the per-call unfused executor)."""
+    return (cfg.plan_backend, cfg.backend, cfg.use_pallas, cfg.interpret,
+            cfg.collect_metrics, cfg.max_closure_iters, cfg.src_block,
+            cfg.dense_node_limit, cfg.dense_density)
+
+
+# ---------------------------------------------------------------------------
+# compiled plan
+# ---------------------------------------------------------------------------
+
+class CompiledPlan:
+    """A physical plan compiled from a (rewritten) path pattern.
+
+    Holds the step list, the validity snapshot (label epochs, reset
+    generation, node capacity, view-set generation), and one jitted fused
+    program.  ``jax.jit`` specializes the program per operand shape, so arena
+    growth that changes slice shapes re-traces automatically — "one fused
+    device program per (plan, shape)".
+    """
+
+    def __init__(self, engine: ExecEngine, cfg: ExecConfig,
+                 path: PathPattern, counting: bool,
+                 fingerprint: QueryFingerprint, view_gen: Optional[int],
+                 reuse_from: Optional["CompiledPlan"] = None):
+        self.engine = engine
+        self.cfg = cfg
+        self.path = path
+        self.counting = counting
+        self.fingerprint = fingerprint
+        self.view_gen = view_gen          # None: rewrite never saw the catalog
+        schema = engine.schema
+        start = path.start
+        self.start_label_id = schema.node_label_id(start.label)
+        self.start_key = start.key
+        self.steps: List[object] = []
+        for i, rel in enumerate(path.rels):
+            lid = schema.edge_label_id(rel.label)
+            revs = ((False,) if rel.direction is Direction.OUT
+                    else (True,) if rel.direction is Direction.IN
+                    else (False, True))
+            self.steps.append(ExpandStep(
+                label_id=lid, reverses=revs, min_hops=rel.min_hops,
+                max_hops=rel.max_hops,
+                backend=_choose_backend(engine, cfg, lid)))
+            nxt = path.nodes[i + 1]
+            self.steps.append(FilterStep(
+                label_id=schema.node_label_id(nxt.label), key=nxt.key))
+        # validity snapshot (same machinery the engine's caches key off)
+        self.label_epochs: Dict[int, int] = {
+            s.label_id: engine.epochs.of(s.label_id)
+            for s in self.steps if isinstance(s, ExpandStep)}
+        self.reset_gen = engine.epochs.reset_generation
+        self.node_cap = engine.g.node_cap
+        self._cfg_key = _cfg_snapshot(cfg)
+        # an epoch-only recompile usually changes nothing the trace depends
+        # on (steps, counting, config) — adopt the superseded plan's jitted
+        # program so warm XLA executables survive write-interleaved
+        # workloads instead of re-tracing per mutation
+        if (reuse_from is not None
+                and reuse_from.steps == self.steps
+                and reuse_from.counting == self.counting
+                and reuse_from._cfg_key == self._cfg_key):
+            self._fn = reuse_from._fn
+        else:
+            self._fn = jax.jit(self._program)
+
+    # -- validity ----------------------------------------------------------
+
+    def is_valid(self, view_gen: int) -> bool:
+        eng = self.engine
+        if self.node_cap != eng.g.node_cap:
+            return False
+        if self.reset_gen != eng.epochs.reset_generation:
+            return False
+        if self.view_gen is not None and self.view_gen != view_gen:
+            return False
+        if self._cfg_key != _cfg_snapshot(self.cfg):
+            return False    # session cfg mutated since compile
+        return all(eng.epochs.of(lid) == ep
+                   for lid, ep in self.label_epochs.items())
+
+    # -- fused program -----------------------------------------------------
+
+    def _program(self, ids, node_label, node_key, node_alive, operands):
+        """The whole query for one source block, as a single traced program.
+
+        ``ids`` is the padded [blk] source-id block (-1 = padding); operands
+        is a tuple (one entry per expand step) of per-direction array tuples.
+        Returns (F, db_hits, rows, converged).
+        """
+        counting = self.counting
+        collect = self.cfg.collect_metrics
+        blk = ids.shape[0]
+        N = node_label.shape[0]
+        valid = ids >= 0
+        cols = jnp.where(valid, ids, 0)
+        if counting:
+            F = jnp.zeros((blk, N), jnp.int32).at[
+                jnp.arange(blk), cols].add(valid.astype(jnp.int32))
+        else:
+            F = jnp.zeros((blk, N), bool).at[
+                jnp.arange(blk), cols].max(valid)
+        db = jnp.int32(0)
+        rows = jnp.int32(0)
+        ok = jnp.bool_(True)
+
+        def hop(Fc, step_ops, backend, reverses, db, rows):
+            """One expansion hop: mirrors PathExecutor._hop exactly."""
+            out = None
+            for rev, arrs in zip(reverses, step_ops):
+                if collect:
+                    db = db + _hop_cost(Fc, arrs[-1])   # deg is last operand
+                if backend == "segment":
+                    esrc, edst, ew, emask, _ = arrs
+                    nxt = _hop_segment(Fc, esrc, edst, emask, ew,
+                                       counting=counting, reverse=rev)
+                elif backend == "pallas":
+                    from repro.kernels import ops as kops
+                    A, _ = arrs
+                    nxt = kops.block_spmm(Fc.astype(jnp.int32), A,
+                                          counting=counting,
+                                          interpret=self.cfg.interpret)
+                    nxt = nxt if counting else nxt.astype(bool)
+                else:
+                    A, _ = arrs
+                    nxt = _hop_dense(Fc, A, counting=counting)
+                out = nxt if out is None else (
+                    out + nxt if counting else out | nxt)
+            if collect:
+                rows = rows + _active_rows(out)
+            return out, db, rows
+
+        op_i = 0
+        for step in self.steps:
+            if isinstance(step, FilterStep):
+                m = node_alive
+                if step.label_id != NO_LABEL:
+                    m = m & (node_label == step.label_id)
+                if step.key is not None:
+                    m = m & (node_key == step.key)
+                F = F & m[None, :] if not counting else jnp.where(m[None, :],
+                                                                 F, 0)
+                continue
+            step_ops = operands[op_i]
+            op_i += 1
+            lo, hi = step.min_hops, step.max_hops
+            if hi != INF_HOPS:
+                # bounded: acc = sum/or over k in [lo, hi] (lo may be 0).
+                # Hops past an empty frontier contribute zero to F and both
+                # metrics, so skipping the host executor's early break is
+                # result- and metric-identical.
+                acc = F if lo == 0 else None
+                cur = F
+                for k in range(1, hi + 1):
+                    cur, db, rows = hop(cur, step_ops, step.backend,
+                                        step.reverses, db, rows)
+                    if k >= lo:
+                        acc = cur if acc is None else (
+                            acc + cur if counting else acc | cur)
+                F = acc if acc is not None else jnp.zeros_like(F)
+                continue
+            # unbounded boolean closure as a device-side while loop
+            cur = F
+            for _ in range(max(lo, 0)):
+                cur, db, rows = hop(cur, step_ops, step.backend,
+                                    step.reverses, db, rows)
+
+            def cond(c):
+                i, _reach, frontier, _db, _rows = c
+                return jnp.logical_and(i < self.cfg.max_closure_iters,
+                                       jnp.any(frontier))
+
+            def body(c):
+                i, reach, frontier, db, rows = c
+                nxt, db, rows = hop(frontier, step_ops, step.backend,
+                                    step.reverses, db, rows)
+                return (i + 1, reach | nxt, nxt & ~reach, db, rows)
+
+            _, reach, frontier, db, rows = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), cur, cur, db, rows))
+            ok = ok & ~jnp.any(frontier)   # nonempty at exit: not converged
+            F = reach
+        return F, db, rows, ok
+
+    # -- operands ----------------------------------------------------------
+
+    def _gather_operands(self):
+        """Fetch current device operands from the engine (epoch-checked
+        lookups — warm entries are dict hits, so this is cheap per query and
+        guarantees a valid plan always executes against current data)."""
+        eng = self.engine
+        out = []
+        for step in self.steps:
+            if not isinstance(step, ExpandStep):
+                continue
+            per_dir = []
+            for rev in step.reverses:
+                deg = eng.deg(step.label_id, rev)
+                if step.backend == "segment":
+                    esrc, edst, ew, emask = eng.label_edges(step.label_id)
+                    per_dir.append((esrc, edst, ew, emask, deg))
+                else:
+                    per_dir.append((eng.adj(step.label_id, self.counting,
+                                            rev), deg))
+            out.append(tuple(per_dir))
+        return tuple(out)
+
+    # -- execution ---------------------------------------------------------
+
+    def execute(self) -> ReachResult:
+        """Run the fused program over blocked sources; one metric sync."""
+        g = self.engine.g
+        sources = np.flatnonzero(
+            np.asarray(g.node_mask(self.start_label_id, self.start_key))
+        ).astype(np.int32)
+        S = sources.shape[0]
+        blk = self.cfg.src_block
+        S_pad = max(round_up(S, blk), blk)
+        padded = np.full(S_pad, -1, np.int32)
+        padded[:S] = sources
+        operands = self._gather_operands()
+
+        out_rows, db_parts, row_parts, ok_parts = [], [], [], []
+        for b0 in range(0, S_pad, blk):
+            F, db, rows, ok = self._fn(
+                jnp.asarray(padded[b0:b0 + blk]), g.node_label, g.node_key,
+                g.node_alive, operands)
+            out_rows.append(F)
+            db_parts.append(db)
+            row_parts.append(rows)
+            ok_parts.append(ok)
+        reach = np.concatenate(
+            [np.asarray(F) for F in out_rows], axis=0)[:S].astype(np.int32)
+        if not all(bool(np.asarray(o)) for o in ok_parts):
+            raise RuntimeError(
+                "closure did not converge within max_closure_iters")
+        metrics = Metrics(
+            db_hits=S + int(np.asarray(sum(db_parts))),
+            rows=S + int(np.asarray(sum(row_parts))))
+        return ReachResult(src_ids=sources, reach=reach,
+                           counting=self.counting, metrics=metrics)
+
+
+# ---------------------------------------------------------------------------
+# planner: the session plan cache
+# ---------------------------------------------------------------------------
+
+class QueryPlanner:
+    """Session-lifetime owner of the rewrite cache and the plan cache.
+
+    ``plan(q, views, view_gen)`` is the whole compile pipeline; both caches
+    key off the query fingerprint, so repeated query *shapes* — regardless of
+    variable spelling or RETURN clause — compile once.  ``plan_hits`` /
+    ``plan_misses`` and ``rewrite_hits`` / ``rewrite_misses`` make the
+    caching observable (tests and the workload driver read them);
+    ``rewrite_seconds_total`` over ``plan_calls`` is the amortized rewrite
+    cost the paper-protocol runs report.
+    """
+
+    def __init__(self, engine: ExecEngine, schema: GraphSchema,
+                 cfg: Optional[ExecConfig] = None):
+        self.engine = engine
+        self.schema = schema
+        self.cfg = cfg or engine.cfg
+        self._plans: Dict[Tuple[QueryFingerprint, bool], CompiledPlan] = {}
+        self._rewrites: Dict[Tuple[QueryFingerprint, int],
+                             Tuple[PathPattern, bool]] = {}
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.rewrite_hits = 0
+        self.rewrite_misses = 0
+        self.plan_calls = 0
+        self.rewrite_seconds_total = 0.0
+
+    def plan(self, q: Query, views: Sequence, view_gen: int
+             ) -> Tuple[CompiledPlan, float]:
+        """Fingerprint → (memoized) rewrite → (cached) physical plan.
+
+        Returns ``(plan, rewrite_seconds)`` where the second element is the
+        rewrite time actually spent on *this* call (0.0 on a rewrite-cache
+        hit — the number the workload driver watches go to ~0 on repeats).
+        """
+        self.plan_calls += 1
+        fp = query_fingerprint(q, self.schema)
+        use_views = bool(views)
+        key = (fp, use_views)
+        stale = self._plans.get(key)
+        if stale is not None and stale.is_valid(view_gen):
+            self.plan_hits += 1
+            return stale, 0.0
+        self.plan_misses += 1
+        rewrite_s = 0.0
+        if use_views:
+            rw = self._rewrites.get((fp, view_gen))
+            if rw is not None:
+                self.rewrite_hits += 1
+                path, force_bool = rw
+            else:
+                self.rewrite_misses += 1
+                from repro.core.optimizer import optimize_query
+                t0 = time.perf_counter()
+                q_rw = optimize_query(q, list(views))
+                rewrite_s = time.perf_counter() - t0
+                self.rewrite_seconds_total += rewrite_s
+                path, force_bool = q_rw.path, q_rw.force_bool
+                # superseded-generation entries are unreachable (the
+                # generation only moves forward) — prune so catalog churn
+                # cannot grow the cache without bound
+                if any(k[1] != view_gen for k in self._rewrites):
+                    self._rewrites = {k: v for k, v in self._rewrites.items()
+                                      if k[1] == view_gen}
+                self._rewrites[(fp, view_gen)] = (path, force_bool)
+        else:
+            path, force_bool = q.path, q.force_bool
+        counting = (not force_bool
+                    and not any(r.unbounded for r in path.rels))
+        plan = CompiledPlan(self.engine, self.cfg, path, counting,
+                            fingerprint=fp,
+                            view_gen=view_gen if use_views else None,
+                            reuse_from=stale)
+        self._plans[key] = plan
+        return plan, rewrite_s

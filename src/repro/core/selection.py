@@ -36,6 +36,20 @@ def _signature(path: PathPattern) -> tuple:
     )
 
 
+def _match_signature(path: PathPattern) -> tuple:
+    """Canonical match identity of a path: everything ``match_view`` reads.
+
+    Unlike :func:`_signature` this includes the ``is_referenced`` flags (the
+    matcher's NodeCanMatch/RelpCanMatch consult them), so it is safe as a key
+    for memoizing match probes — the same canonicalization idea the planner's
+    :class:`~repro.core.pattern.QueryFingerprint` applies to plans."""
+    return (
+        tuple((n.label, n.key, n.is_referenced) for n in path.nodes),
+        tuple((r.label, r.direction, r.min_hops, r.max_hops, r.is_referenced)
+              for r in path.rels),
+    )
+
+
 def candidate_subpaths(queries: Sequence[Query]) -> List[PathPattern]:
     """All de-duplicated contiguous subpaths with >= 1 relationship whose
     interior elements are unreferenced (spliceable by Algorithm 4)."""
@@ -92,7 +106,10 @@ class _Probe:
 
 
 def score_candidate(ex: PathExecutor, sub: PathPattern, queries: Sequence[Query],
-                    name: str) -> Optional[Candidate]:
+                    name: str,
+                    match_memo: Optional[Dict[tuple, bool]] = None,
+                    measure_memo: Optional[Dict[tuple, tuple]] = None
+                    ) -> Optional[Candidate]:
     """Measure Eq. 1 for one candidate against the current graph."""
     # strip interior references for the view definition
     s_var = sub.start.var or "s"
@@ -106,16 +123,40 @@ def score_candidate(ex: PathExecutor, sub: PathPattern, queries: Sequence[Query]
     sub = PathPattern(nodes=tuple(nodes), rels=sub.rels)
     vdef = ViewDef(name=name, src_var=nodes[0].var, dst_var=nodes[-1].var,
                    match=sub)
-    counting = not any(r.unbounded for r in sub.rels)
-    res = ex.run_path(sub, counting=counting)
-    e_vl = res.num_pairs()
-    start_lid = ex.schema.node_label_id(sub.start.label)
-    import numpy as np
-    n_sl = int(np.asarray(ex.g.node_mask(start_lid)).sum())
-    db_hit_no_v = res.metrics.db_hits
+    # the measured side of Eq. 1 depends only on the graph, which greedy
+    # re-scoring never mutates (candidates are not materialized) — cache it
+    # per candidate signature so each round re-ranks from dict lookups
+    mkey = _signature(sub)
+    cached = None if measure_memo is None else measure_memo.get(mkey)
+    if cached is not None:
+        e_vl, n_sl, db_hit_no_v = cached
+    else:
+        counting = not any(r.unbounded for r in sub.rels)
+        res = ex.run_path(sub, counting=counting)
+        e_vl = res.num_pairs()
+        start_lid = ex.schema.node_label_id(sub.start.label)
+        import numpy as np
+        n_sl = int(np.asarray(ex.g.node_mask(start_lid)).sum())
+        db_hit_no_v = res.metrics.db_hits
+        if measure_memo is not None:
+            measure_memo[mkey] = (e_vl, n_sl, db_hit_no_v)
     per_use_eff = db_hit_no_v - (n_sl + 2 * e_vl)        # Eq. 1
-    n_matches = sum(1 for q in queries
-                    if match_view(q.path, sub) is not None)
+    if match_memo is None:
+        n_matches = sum(1 for q in queries
+                        if match_view(q.path, sub) is not None)
+    else:
+        # greedy re-scoring probes every (candidate, live query) pair per
+        # round; memoize on canonical match signatures so unchanged pairs
+        # (most queries survive a pick un-rewritten) are dict hits
+        csig = _match_signature(sub)
+        n_matches = 0
+        for q in queries:
+            mkey = (_match_signature(q.path), csig)
+            hit = match_memo.get(mkey)
+            if hit is None:
+                hit = match_view(q.path, sub) is not None
+                match_memo[mkey] = hit
+            n_matches += int(hit)
     if n_matches == 0:
         return None
     return Candidate(vdef=vdef, opt_eff=per_use_eff * n_matches,
@@ -149,10 +190,14 @@ def select_views(g, schema, read_queries: Sequence[str], k: int = 3,
                              for r in s.rels)]
     remaining = {_signature(s): s for s in candidates}
     live_queries = list(queries)
+    match_memo: Dict[tuple, bool] = {}
+    measure_memo: Dict[tuple, tuple] = {}
     for i in range(k):
         scored: List[Candidate] = []
         for sig, sub in remaining.items():
-            c = score_candidate(ex, sub, live_queries, name=f"AUTO_V{i}")
+            c = score_candidate(ex, sub, live_queries, name=f"AUTO_V{i}",
+                                match_memo=match_memo,
+                                measure_memo=measure_memo)
             if c is not None and c.opt_eff > 0:
                 scored.append(c)
         if not scored:

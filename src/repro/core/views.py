@@ -39,6 +39,7 @@ from repro.core.maintenance import (
 )
 from repro.core.parser import parse_query, parse_view
 from repro.core.pattern import PathPattern, Query, ViewDef
+from repro.core.plan import QueryPlanner
 from repro.core.schema import GraphSchema
 
 
@@ -104,6 +105,11 @@ class GraphSession:
         self.last_maintenance_metrics = Metrics()
         self.last_rewrite_seconds = 0.0
         self.engine = ExecEngine(g, schema, self.cfg)
+        # compiled-plan layer (core/plan.py): reads compile once per distinct
+        # query shape; the view-set generation is a plan/rewrite-cache
+        # invalidation key bumped by create_view/drop_view
+        self.planner = QueryPlanner(self.engine, schema, self.cfg)
+        self.view_set_generation = 0
         self._delta_cfg = ExecConfig(
             backend="segment", src_block=8,
             max_closure_iters=self.cfg.max_closure_iters,
@@ -197,6 +203,7 @@ class GraphSession:
             creation_seconds=time.perf_counter() - t0,
         )
         self.views[vdef.name] = view
+        self.view_set_generation += 1
         return view
 
     def drop_view(self, name: str) -> None:
@@ -208,6 +215,7 @@ class GraphSession:
                 f"view {name!r} does not exist; existing views: "
                 f"{sorted(self.views) or '(none)'}")
         view = self.views.pop(name)
+        self.view_set_generation += 1
         slots = np.fromiter(view.pair_slot.values(), np.int32,
                             len(view.pair_slot))
         if slots.size:
@@ -284,13 +292,16 @@ class GraphSession:
         kill_slots: List[int] = []
         upd_slots: List[int] = []
         upd_delta: List[int] = []
+        # host copies once per recompute (no mutation until after the loop)
+        e_alive = np.asarray(self.g.edge_alive)
+        e_weight = np.asarray(self.g.edge_weight)
         for key in list(view.pair_slot.keys()):
             ms = key[0] if view.vdef.forward else key[1]  # match-start node
             if ms not in src_set:
                 continue
             slot = view.pair_slot[key]
             want = desired.pop(key, 0)
-            have = int(self.g.edge_weight[slot]) if bool(self.g.edge_alive[slot]) else 0
+            have = int(e_weight[slot]) if e_alive[slot] else 0
             if want == 0:
                 kill_slots.append(slot)
                 view.pair_slot.pop(key)
@@ -561,14 +572,29 @@ class GraphSession:
         return BatchResult(created_slots, created_nodes)
 
     def _apply_union(self, view: MaterializedView, delta: DeltaPairs) -> None:
+        """Set-semantics create pass: add only pairs not already stored.
+
+        The keep-filter is a vectorized membership test — pairs encode as
+        ``src * node_cap + dst`` int64 keys (node ids < node_cap, so the
+        encoding is injective) and one ``np.isin`` replaces the per-pair
+        ``oriented()`` dict probes over the delta."""
         if delta.src.size == 0:
             return
-        keep = [i for i, (s, d) in enumerate(zip(delta.src, delta.dst))
-                if view.oriented(int(s), int(d)) not in view.pair_slot]
-        if not keep:
+        cap = np.int64(self.g.node_cap)
+        s = delta.src.astype(np.int64)
+        d = delta.dst.astype(np.int64)
+        cand = s * cap + d if view.vdef.forward else d * cap + s
+        if view.pair_slot:
+            stored = np.fromiter(
+                (k[0] * cap + k[1] for k in view.pair_slot),
+                np.int64, len(view.pair_slot))
+            keep = ~np.isin(cand, stored)
+        else:
+            keep = np.ones(cand.shape[0], bool)
+        if not keep.any():
             return
         sub = DeltaPairs(delta.src[keep], delta.dst[keep],
-                         np.ones(len(keep), np.int64))
+                         np.ones(int(keep.sum()), np.int64))
         self._apply_delta(view, sub, sign=+1)
 
     def _uses_label(self, view: MaterializedView, label: str) -> bool:
@@ -596,16 +622,17 @@ class GraphSession:
 
     def query(self, q: Union[str, Query], use_views: Optional[bool] = None
               ) -> ReachResult:
+        """Compile-once read path: fingerprint → memoized Algorithm-3 rewrite
+        → cached physical plan → one fused device program (core/plan.py).
+        ``last_rewrite_seconds`` is the rewrite time paid by *this* call —
+        0.0 whenever the plan or rewrite cache hits."""
         if isinstance(q, str):
             q = parse_query(q)
         use = self.auto_optimize if use_views is None else use_views
-        self.last_rewrite_seconds = 0.0
-        if use and self.views:
-            from repro.core.optimizer import optimize_query
-            t0 = time.perf_counter()
-            q = optimize_query(q, list(self.views.values()))
-            self.last_rewrite_seconds = time.perf_counter() - t0
-        return self._exec.run_query(q)
+        views = list(self.views.values()) if (use and self.views) else []
+        plan, self.last_rewrite_seconds = self.planner.plan(
+            q, views, self.view_set_generation)
+        return plan.execute()
 
     # ------------------------------------------------------------ integrity
 
@@ -621,10 +648,14 @@ class GraphSession:
         fresh: Dict[Tuple[int, int], int] = {}
         for s, d, c in zip(s_ids, d_ids, cnt):
             fresh[view.oriented(int(s), int(d))] = int(c)
+        # one host pull of the alive mask + weights, not one device
+        # round-trip per stored view row
+        alive = np.asarray(self.g.edge_alive)
+        weight = np.asarray(self.g.edge_weight)
         stored: Dict[Tuple[int, int], int] = {}
         for key, slot in view.pair_slot.items():
-            if bool(self.g.edge_alive[slot]):
-                stored[key] = int(self.g.edge_weight[slot]) if view.counting else 1
+            if alive[slot]:
+                stored[key] = int(weight[slot]) if view.counting else 1
         if view.counting:
             return fresh == stored
         return set(fresh.keys()) == set(stored.keys())

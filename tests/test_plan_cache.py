@@ -1,0 +1,286 @@
+"""Compiled-plan layer: fingerprinting, caching, invalidation, parity.
+
+Covers the plan cache's three invalidation obligations (a cached plan must
+recompile — not silently run stale — after ``drop_view``, after node-arena
+growth, and after a write that bumps one of its labels' epochs, asserted
+through the planner hit/miss counters), fingerprint canonicalization, and
+exact result/metric parity between the fused plan executor and the unfused
+per-hop :class:`PathExecutor` on the patterns ``test_executor.py`` uses.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExecConfig, GraphBuilder, GraphSchema, GraphSession, PathExecutor,
+    canonicalize_query,
+)
+from repro.core.parser import parse_query
+
+
+def _toy_session(**cfg_kw):
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    nodes = [b.add_node("A" if i % 2 == 0 else "B") for i in range(8)]
+    for i in range(7):
+        b.add_edge(nodes[i], nodes[i + 1], "x")
+    for i in range(0, 8, 2):
+        b.add_edge(nodes[i], nodes[(i + 3) % 8], "y")
+    return GraphSession(b.finalize(), schema,
+                        ExecConfig(**cfg_kw) if cfg_kw else None)
+
+
+QX = "MATCH (a:A)-[:x*1..2]->(b:B) RETURN a, b"
+VIEW_X = ("CREATE VIEW VX AS (CONSTRUCT (s)-[r:VX]->(d) "
+          "MATCH (s:A)-[:x*1..2]->(d:B))")
+VIEW_Y = ("CREATE VIEW VY AS (CONSTRUCT (s)-[r:VY]->(d) "
+          "MATCH (s:A)-[:y]->(d:B))")
+
+
+def _pairs(res):
+    s, d, c = res.pairs()
+    return sorted(zip(s.tolist(), d.tolist(), c.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# caching + fingerprinting
+# ---------------------------------------------------------------------------
+
+def test_repeat_query_hits_plan_cache():
+    sess = _toy_session()
+    r1 = sess.query(QX, use_views=False)
+    assert sess.planner.plan_misses == 1
+    for _ in range(3):
+        r = sess.query(QX, use_views=False)
+        assert _pairs(r) == _pairs(r1)
+    assert sess.planner.plan_misses == 1
+    assert sess.planner.plan_hits == 3
+
+
+def test_fingerprint_erases_var_spelling():
+    sess = _toy_session()
+    sess.query("MATCH (a:A)-[:x]->(b:B) RETURN a, b", use_views=False)
+    misses = sess.planner.plan_misses
+    # different var names, same referenced structure -> same fingerprint
+    sess.query("MATCH (foo:A)-[:x]->(bar:B) RETURN foo, bar", use_views=False)
+    assert sess.planner.plan_misses == misses
+    assert sess.planner.plan_hits >= 1
+
+
+def test_fingerprint_tracks_referenced_flags():
+    schema = GraphSchema()
+    q1 = parse_query("MATCH (a:A)-[:x]->(b:B)-[:y]->(c:A) RETURN a, c")
+    q2 = parse_query("MATCH (a:A)-[:x]->(b:B)-[:y]->(c:A) RETURN a, b, c")
+    _, fp1 = canonicalize_query(q1, schema)
+    _, fp2 = canonicalize_query(q2, schema)
+    assert fp1 != fp2          # referencing b forbids splicing it out
+    q3 = parse_query("MATCH (s:A)-[:x]->(t:B)-[:y]->(u:A) RETURN s, u")
+    _, fp3 = canonicalize_query(q3, schema)
+    assert fp1 == fp3          # var spelling does not
+
+
+def test_rewrite_memoized_per_view_generation():
+    sess = _toy_session()
+    sess.create_view(VIEW_X)
+    sess.query(QX, use_views=True)
+    assert sess.planner.rewrite_misses == 1
+    assert sess.last_rewrite_seconds > 0.0
+    sess.query(QX, use_views=True)
+    assert sess.planner.rewrite_misses == 1   # plan hit: no rewrite at all
+    assert sess.last_rewrite_seconds == 0.0
+
+
+# ---------------------------------------------------------------------------
+# invalidation: drop_view / node growth / label epochs
+# ---------------------------------------------------------------------------
+
+def test_plan_recompiles_after_drop_view():
+    sess = _toy_session()
+    sess.create_view(VIEW_X)
+    sess.create_view(VIEW_Y)
+    want = _pairs(sess.query(QX, use_views=False))
+    r_opt = sess.query(QX, use_views=True)    # rewritten through VX
+    assert _pairs(r_opt) == want
+    misses = sess.planner.plan_misses
+    sess.query(QX, use_views=True)
+    assert sess.planner.plan_misses == misses  # warm
+
+    sess.drop_view("VX")   # VX edges die; VY keeps the catalog non-empty
+    r_after = sess.query(QX, use_views=True)
+    assert sess.planner.plan_misses == misses + 1, \
+        "plan referencing a dropped view must recompile"
+    assert _pairs(r_after) == want, \
+        "stale plan executed against dead view edges"
+
+
+def test_plan_recompiles_after_node_arena_growth():
+    sess = _toy_session()
+    want = _pairs(sess.query(QX, use_views=False))
+    misses = sess.planner.plan_misses
+    cap0 = sess.g.node_cap
+    while sess.g.node_cap == cap0:            # force grow_node_arena
+        sess.create_node("C")
+    sess.query(QX, use_views=False)
+    assert sess.planner.plan_misses == misses + 1, \
+        "node-arena growth changes frontier shapes; plan must recompile"
+    assert _pairs(sess.query(QX, use_views=False)) == want
+
+
+def test_plan_recompiles_after_label_epoch_bump():
+    sess = _toy_session()
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    sess.query(QX, use_views=False)
+    misses = sess.planner.plan_misses
+
+    # unrelated label: y write leaves the x plan warm
+    sess.create_edge(int(nodes[0]), int(nodes[3]), "y")
+    sess.query(QX, use_views=False)
+    assert sess.planner.plan_misses == misses
+
+    # touched label: x write bumps the x epoch -> recompile
+    sess.create_edge(int(nodes[0]), int(nodes[3]), "x")
+    r = sess.query(QX, use_views=False)
+    assert sess.planner.plan_misses == misses + 1
+    # recompiled plan sees the new edge
+    ex = PathExecutor(engine=sess.engine, cfg=sess.cfg)
+    assert _pairs(r) == _pairs(ex.run_query(parse_query(QX)))
+
+
+def test_wildcard_plan_keys_off_base_generation():
+    sess = _toy_session()
+    wq = "MATCH (a:A)-[r]->(m) RETURN a, m"
+    sess.query(wq, use_views=False)
+    misses = sess.planner.plan_misses
+    sess.create_view(VIEW_X)                   # view-label churn only
+    sess.query(wq, use_views=False)
+    assert sess.planner.plan_misses == misses, \
+        "view creation must not invalidate base-only wildcard plans"
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    sess.create_edge(int(nodes[0]), int(nodes[3]), "y")   # base write
+    sess.query(wq, use_views=False)
+    assert sess.planner.plan_misses == misses + 1
+
+
+def test_epoch_only_recompile_reuses_jitted_program():
+    sess = _toy_session()
+    sess.query(QX, use_views=False)
+    fp_key = next(iter(sess.planner._plans))
+    old = sess.planner._plans[fp_key]
+    nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
+    sess.create_edge(int(nodes[0]), int(nodes[3]), "x")   # bumps x epoch
+    sess.query(QX, use_views=False)
+    new = sess.planner._plans[fp_key]
+    assert new is not old                      # plan recompiled...
+    assert new._fn is old._fn, \
+        "identical steps/config must adopt the warm jitted program"
+
+
+def test_cfg_mutation_invalidates_plans():
+    sess = _toy_session()
+    sess.query(QX, use_views=False)
+    misses = sess.planner.plan_misses
+    sess.cfg.max_closure_iters = 128   # trace-baked knob changed in place
+    sess.query(QX, use_views=False)
+    assert sess.planner.plan_misses == misses + 1
+
+
+def test_external_graph_swap_invalidates_plans():
+    from repro.core import graph as G
+    sess = _toy_session()
+    sess.query(QX, use_views=False)
+    misses = sess.planner.plan_misses
+    sess.g = G.delete_edge(sess.g, 0)   # unknown delta -> reset generation
+    r = sess.query(QX, use_views=False)
+    assert sess.planner.plan_misses == misses + 1
+    ex = PathExecutor(engine=sess.engine, cfg=sess.cfg)
+    assert _pairs(r) == _pairs(ex.run_query(parse_query(QX)))
+
+
+# ---------------------------------------------------------------------------
+# parity with the unfused per-hop executor (test_executor's patterns)
+# ---------------------------------------------------------------------------
+
+def _random_graph(rng, n=12, p=0.25):
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    for _ in range(n):
+        b.add_node(("A", "B")[rng.integers(2)])
+    for u in range(n):
+        for v in range(n):
+            if u != v and rng.random() < p:
+                b.add_edge(u, v, ("x", "y")[rng.integers(2)])
+    return b.finalize(), schema
+
+
+PARITY_QUERIES = [
+    "MATCH (a:A)-[:x*1..3]->(b:B) RETURN a, b",
+    "MATCH (a:A)-[:x*2..]->(b) RETURN a, b",
+    "MATCH (a:A)-[:x*1..2]->(b:B)-[:y]->(c:A) RETURN a, c",
+    "MATCH (p:A)<-[:x]-(q:A) RETURN p, q",
+    "MATCH (a:A)-[:x]-(b) RETURN a, b",
+    "MATCH (a:A)-[r]->(m) RETURN a, m",
+    "MATCH (a:A) RETURN a",
+]
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("plan_backend", ["auto", "dense"])
+def test_fused_plan_matches_unfused_executor(seed, plan_backend):
+    rng = np.random.default_rng(seed)
+    g, schema = _random_graph(rng)
+    sess = GraphSession(g, schema,
+                        ExecConfig(src_block=16, plan_backend=plan_backend))
+    unfused_backend = "dense" if plan_backend == "dense" else "segment"
+    ex = PathExecutor(g, schema,
+                      ExecConfig(backend=unfused_backend, src_block=16))
+    for q in PARITY_QUERIES:
+        res_p = sess.query(q, use_views=False)
+        res_u = ex.run_query(parse_query(q))
+        np.testing.assert_array_equal(res_p.reach, res_u.reach, err_msg=q)
+        assert res_p.counting == res_u.counting, q
+        assert res_p.metrics.db_hits == res_u.metrics.db_hits, q
+        assert res_p.metrics.rows == res_u.metrics.rows, q
+
+
+def test_legacy_backend_dense_forces_dense_plan():
+    from repro.core.plan import ExpandStep
+    sess = _toy_session(backend="dense")     # legacy global override
+    sess.query(QX, use_views=False)
+    plan = next(iter(sess.planner._plans.values()))
+    assert all(s.backend == "dense" for s in plan.steps
+               if isinstance(s, ExpandStep))
+    auto = _toy_session()                    # default: cost model -> segment
+    auto.query(QX, use_views=False)
+    plan = next(iter(auto.planner._plans.values()))
+    assert all(s.backend == "segment" for s in plan.steps
+               if isinstance(s, ExpandStep))
+
+
+def test_fused_plan_pallas_backend_parity():
+    rng = np.random.default_rng(1)
+    g, schema = _random_graph(rng, n=10, p=0.3)
+    sess = GraphSession(g, schema, ExecConfig(src_block=16,
+                                              plan_backend="pallas",
+                                              use_pallas=True))
+    ex = PathExecutor(g, schema, ExecConfig(backend="dense", use_pallas=True,
+                                            src_block=16))
+    for q in ["MATCH (a:A)-[:x*1..2]->(b:B) RETURN a, b",
+              "MATCH (a:A)-[:x*1..]->(b) RETURN a, b"]:
+        res_p = sess.query(q, use_views=False)
+        res_u = ex.run_query(parse_query(q))
+        np.testing.assert_array_equal(res_p.reach, res_u.reach, err_msg=q)
+        assert res_p.metrics.db_hits == res_u.metrics.db_hits, q
+        assert res_p.metrics.rows == res_u.metrics.rows, q
+
+
+def test_fused_plan_matches_unfused_after_rewrite():
+    sess = _toy_session()
+    sess.create_view(VIEW_X)
+    q = "MATCH (a:A)-[:x*1..2]->(b:B)-[:y]->(c:A) RETURN a, c"
+    res_p = sess.query(q, use_views=True)
+    from repro.core.optimizer import optimize_query
+    q_rw = optimize_query(parse_query(q), list(sess.views.values()))
+    assert any(r.label == "VX" for r in q_rw.path.rels)  # rewrite happened
+    res_u = PathExecutor(engine=sess.engine, cfg=sess.cfg).run_query(q_rw)
+    np.testing.assert_array_equal(res_p.reach, res_u.reach)
+    assert res_p.metrics.db_hits == res_u.metrics.db_hits
+    assert res_p.metrics.rows == res_u.metrics.rows
