@@ -2,10 +2,12 @@
 from repro.core.schema import GraphSchema, LabelRegistry, NO_LABEL
 from repro.core.graph import (
     PropertyGraph, GraphBuilder, LabelEpochs, WriteBatch, create_edge,
-    create_node, delete_edge, delete_node, find_node,
+    create_node, delete_edge, delete_node, edge_pred_mask, find_node,
+    node_pred_mask, set_edge_props, set_node_props,
 )
 from repro.core.pattern import (
-    Direction, NodePat, PathPattern, Query, QueryFingerprint, RelPat, ViewDef,
+    Direction, NodePat, PathPattern, PropPred, Query, QueryFingerprint,
+    RelPat, ViewDef, normalize_preds, preds_imply,
 )
 from repro.core.parser import (
     canonicalize_query, parse_query, parse_view, query_fingerprint,
@@ -24,8 +26,9 @@ __all__ = [
     "GraphSchema", "LabelRegistry", "NO_LABEL",
     "PropertyGraph", "GraphBuilder", "LabelEpochs", "WriteBatch",
     "create_edge", "create_node", "delete_edge", "delete_node", "find_node",
-    "Direction", "NodePat", "PathPattern", "Query", "QueryFingerprint",
-    "RelPat", "ViewDef",
+    "edge_pred_mask", "node_pred_mask", "set_edge_props", "set_node_props",
+    "Direction", "NodePat", "PathPattern", "PropPred", "Query",
+    "QueryFingerprint", "RelPat", "ViewDef", "normalize_preds", "preds_imply",
     "canonicalize_query", "parse_query", "parse_view", "query_fingerprint",
     "ExecConfig", "ExecEngine", "Metrics", "PathExecutor", "ReachResult",
     "CompiledPlan", "QueryPlanner",

@@ -29,8 +29,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import LabelEpochs, PropertyGraph
-from repro.core.pattern import Direction, PathPattern, Query, RelPat
+from repro.core.graph import (
+    LabelEpochs, PropertyGraph, edge_pred_mask, gathered_pred_mask,
+    node_pred_mask,
+)
+from repro.core.pattern import (
+    Direction, PathPattern, PropPred, Query, RelPat, normalize_preds,
+)
 from repro.core.schema import GraphSchema, NO_LABEL
 from repro.utils import INF_HOPS, round_up
 
@@ -167,8 +172,10 @@ class ExecEngine:
         self.cfg = cfg or ExecConfig()
         self.epochs = LabelEpochs()
         self._edge_cache: Dict[int, Tuple[int, Tuple]] = {}
-        self._deg_cache: Dict[Tuple[int, bool], Tuple[int, jax.Array]] = {}
-        self._adj_cache: Dict[Tuple[int, bool, bool], Tuple[int, jax.Array]] = {}
+        # predicate-filtered compact slices: (label_id, preds) -> masked slice
+        self._edge_pred_cache: Dict[Tuple, Tuple[int, Tuple]] = {}
+        self._deg_cache: Dict[Tuple, Tuple[int, jax.Array]] = {}
+        self._adj_cache: Dict[Tuple, Tuple[int, jax.Array]] = {}
         self._base_mask_cache: Optional[Tuple[Tuple[int, int], np.ndarray]] = None
         self._count_cache: Dict[int, Tuple[Tuple[int, int], int]] = {}
         self.hits = 0
@@ -193,6 +200,7 @@ class ExecEngine:
         if touched_edge_labels is None:
             self.epochs.bump_all()
             self._edge_cache.clear()
+            self._edge_pred_cache.clear()
             self._deg_cache.clear()
             self._adj_cache.clear()
             self._count_cache.clear()
@@ -206,6 +214,8 @@ class ExecEngine:
 
         for k in [k for k in self._edge_cache if stale(k)]:
             del self._edge_cache[k]
+        for k in [k for k in self._edge_pred_cache if stale(k[0])]:
+            del self._edge_pred_cache[k]
         for k in [k for k in self._deg_cache if stale(k[0])]:
             del self._deg_cache[k]
         for k in [k for k in self._adj_cache if stale(k[0])]:
@@ -224,6 +234,7 @@ class ExecEngine:
         eng = ExecEngine(self.g, self.schema, self.cfg)
         eng.epochs = self.epochs.snapshot()
         eng._edge_cache = dict(self._edge_cache)
+        eng._edge_pred_cache = dict(self._edge_pred_cache)
         eng._deg_cache = dict(self._deg_cache)
         eng._adj_cache = dict(self._adj_cache)
         eng._base_mask_cache = self._base_mask_cache
@@ -250,7 +261,8 @@ class ExecEngine:
         cache[key] = (ep, val)
         return val
 
-    def label_edges(self, label_id: int):
+    def label_edges(self, label_id: int,
+                    preds: Tuple[PropPred, ...] = ()):
         """Per-label edge index: compact (src, dst, weight, mask) arrays.
 
         A GDBMS scans only the label's adjacency; the mask-scan over the
@@ -259,9 +271,27 @@ class ExecEngine:
         hop O(E_label) (measured 2-6x on the paper workloads; see
         EXPERIMENTS.md §Perf).  ``NO_LABEL`` returns the all-base-edges
         index: every alive edge whose label is base (never view edges),
-        sorted into CSR order host-side."""
-        return self._lookup(self._edge_cache, label_id, label_id,
-                            lambda: self._build_label_edges(label_id))
+        sorted into CSR order host-side.
+
+        With ``preds`` (a normalized predicate conjunction) the returned mask
+        is additionally filtered to edges satisfying every predicate — the
+        predicate pushdown the compiled plans fuse into hop masks.  Pred
+        entries are cached per (label, preds) under the same label epoch as
+        the base slice, so a property write to the label rebuilds them."""
+        ent = self._lookup(self._edge_cache, label_id, label_id,
+                           lambda: self._build_label_edges(label_id))
+        if not preds:
+            return ent[:4]
+
+        def build_pred():
+            esrc, edst, ew, emask, eids = ent
+            m = gathered_pred_mask(self.g.edge_props, preds, eids)
+            pm = np.zeros(int(emask.shape[0]), bool)
+            pm[:eids.shape[0]] = m
+            return (esrc, edst, ew, emask & jnp.asarray(pm))
+
+        return self._lookup(self._edge_pred_cache, (label_id, preds),
+                            label_id, build_pred)
 
     @staticmethod
     def _pack_slices(src: np.ndarray, dst: np.ndarray, w: np.ndarray):
@@ -299,15 +329,17 @@ class ExecEngine:
         return mask
 
     def _build_label_edges(self, label_id: int):
+        """Compact slice + the arena edge ids behind it, in slice order (the
+        ids align property columns with the slice for predicate masks)."""
         from repro.graphops.csr import compact_coo
         if label_id == NO_LABEL:
             keep = self._base_keep_mask()
         else:
             keep = (np.asarray(self.g.edge_alive)
                     & (np.asarray(self.g.edge_label) == label_id))
-        src, dst, w = compact_coo(self.g.edge_src, self.g.edge_dst,
-                                  self.g.edge_weight, keep)
-        return self._pack_slices(src, dst, w)
+        src, dst, w, eids = compact_coo(self.g.edge_src, self.g.edge_dst,
+                                        self.g.edge_weight, keep)
+        return self._pack_slices(src, dst, w) + (eids,)
 
     def _edge_mask_for(self, label_id: int) -> jax.Array:
         """Arena-wide bool mask for ``label_id``; wildcard is base-only."""
@@ -335,18 +367,28 @@ class ExecEngine:
         self._count_cache[label_id] = (key, n)
         return n
 
-    def deg(self, label_id: int, reverse: bool) -> jax.Array:
+    def _pred_edge_mask(self, label_id: int,
+                        preds: Tuple[PropPred, ...]) -> jax.Array:
+        m = self._edge_mask_for(label_id)
+        if preds:
+            m = m & edge_pred_mask(self.g, preds)
+        return m
+
+    def deg(self, label_id: int, reverse: bool,
+            preds: Tuple[PropPred, ...] = ()) -> jax.Array:
         def build():
-            m = self._edge_mask_for(label_id).astype(jnp.int32)
+            m = self._pred_edge_mask(label_id, preds).astype(jnp.int32)
             col = self.g.edge_dst if reverse else self.g.edge_src
             return jnp.zeros(self.g.node_cap, jnp.int32).at[col].add(m)
-        return self._lookup(self._deg_cache, (label_id, reverse), label_id,
-                            build)
+        return self._lookup(self._deg_cache, (label_id, reverse, preds),
+                            label_id, build)
 
-    def adj(self, label_id: int, counting: bool, reverse: bool) -> jax.Array:
+    def adj(self, label_id: int, counting: bool, reverse: bool,
+            preds: Tuple[PropPred, ...] = ()) -> jax.Array:
         return self._lookup(
-            self._adj_cache, (label_id, counting, reverse), label_id,
-            lambda: _dense_adjacency(self.g, self._edge_mask_for(label_id),
+            self._adj_cache, (label_id, counting, reverse, preds), label_id,
+            lambda: _dense_adjacency(self.g,
+                                     self._pred_edge_mask(label_id, preds),
                                      counting, reverse))
 
 
@@ -385,19 +427,20 @@ class PathExecutor:
         """Swap in a mutated graph (unknown delta: drops all caches)."""
         self.engine.set_graph(g, None)
 
-    def _label_edges(self, label_id: int):
-        return self.engine.label_edges(label_id)
+    def _label_edges(self, label_id: int, preds=()):
+        return self.engine.label_edges(label_id, preds)
 
-    def _deg(self, label_id: int, reverse: bool) -> jax.Array:
-        return self.engine.deg(label_id, reverse)
+    def _deg(self, label_id: int, reverse: bool, preds=()) -> jax.Array:
+        return self.engine.deg(label_id, reverse, preds)
 
-    def _adj(self, label_id: int, counting: bool, reverse: bool) -> jax.Array:
-        return self.engine.adj(label_id, counting, reverse)
+    def _adj(self, label_id: int, counting: bool, reverse: bool,
+             preds=()) -> jax.Array:
+        return self.engine.adj(label_id, counting, reverse, preds)
 
     # -- primitive hop ----------------------------------------------------
 
     def _hop(self, F, rel_label_id: int, direction: Direction, counting: bool,
-             metrics: Metrics) -> jax.Array:
+             metrics: Metrics, preds: Tuple[PropPred, ...] = ()) -> jax.Array:
         dirs = ([False] if direction is Direction.OUT
                 else [True] if direction is Direction.IN
                 else [False, True])
@@ -405,9 +448,9 @@ class PathExecutor:
         for rev in dirs:
             if self.cfg.collect_metrics:
                 metrics.db_hits += int(_hop_cost(
-                    F, self._deg(rel_label_id, rev)))
+                    F, self._deg(rel_label_id, rev, preds)))
             if self.cfg.backend == "dense":
-                A = self._adj(rel_label_id, counting, rev)
+                A = self._adj(rel_label_id, counting, rev, preds)
                 if self.cfg.use_pallas:
                     from repro.kernels import ops as kops
                     nxt = kops.block_spmm(
@@ -417,7 +460,7 @@ class PathExecutor:
                 else:
                     nxt = _hop_dense(F, A, counting=counting)
             else:
-                esrc, edst, ew, emask = self._label_edges(rel_label_id)
+                esrc, edst, ew, emask = self._label_edges(rel_label_id, preds)
                 nxt = _hop_segment(F, esrc, edst, emask, ew,
                                    counting=counting, reverse=rev)
             out = nxt if out is None else (out + nxt if counting else out | nxt)
@@ -425,8 +468,11 @@ class PathExecutor:
             metrics.rows += int(_active_rows(out))
         return out
 
-    def _node_filter(self, F, label_id: int, key: Optional[int]):
+    def _node_filter(self, F, label_id: int, key: Optional[int],
+                     preds: Tuple[PropPred, ...] = ()):
         mask = self.g.node_mask(label_id, key)
+        if preds:
+            mask = mask & node_pred_mask(self.g, preds)
         if F.dtype == jnp.bool_:
             return F & mask[None, :]
         return jnp.where(mask[None, :], F, 0)
@@ -435,13 +481,15 @@ class PathExecutor:
 
     def _expand_rel(self, F, rel: RelPat, counting: bool, metrics: Metrics):
         lid = self.schema.edge_label_id(rel.label)
+        preds = normalize_preds(rel.preds)
         lo, hi = rel.min_hops, rel.max_hops
         if hi != INF_HOPS:
             # bounded: acc = sum/or over k in [lo, hi] (lo may be 0: identity)
             acc = F if lo == 0 else None
             cur = F
             for k in range(1, hi + 1):
-                cur = self._hop(cur, lid, rel.direction, counting, metrics)
+                cur = self._hop(cur, lid, rel.direction, counting, metrics,
+                                preds)
                 if k >= lo:
                     if acc is None:
                         acc = cur
@@ -455,13 +503,14 @@ class PathExecutor:
         assert not counting
         cur = F
         for _ in range(max(lo, 0)):
-            cur = self._hop(cur, lid, rel.direction, False, metrics)
+            cur = self._hop(cur, lid, rel.direction, False, metrics, preds)
         reach = cur
         frontier = cur
         for _ in range(self.cfg.max_closure_iters):
             if not bool(jnp.any(frontier)):
                 break
-            nxt = self._hop(frontier, lid, rel.direction, False, metrics)
+            nxt = self._hop(frontier, lid, rel.direction, False, metrics,
+                            preds)
             new = nxt & ~reach
             reach = reach | nxt
             frontier = new
@@ -471,9 +520,12 @@ class PathExecutor:
 
     # -- public API --------------------------------------------------------
 
-    def source_ids(self, label_id: int, key: Optional[int]) -> np.ndarray:
-        return np.flatnonzero(np.asarray(self.g.node_mask(label_id, key))
-                              ).astype(np.int32)
+    def source_ids(self, label_id: int, key: Optional[int],
+                   preds: Tuple[PropPred, ...] = ()) -> np.ndarray:
+        m = self.g.node_mask(label_id, key)
+        if preds:
+            m = m & node_pred_mask(self.g, preds)
+        return np.flatnonzero(np.asarray(m)).astype(np.int32)
 
     def run_path(self, path: PathPattern, counting: Optional[bool] = None,
                  sources: Optional[np.ndarray] = None) -> ReachResult:
@@ -486,7 +538,8 @@ class PathExecutor:
         start = path.start
         start_lid = self.schema.node_label_id(start.label)
         if sources is None:
-            sources = self.source_ids(start_lid, start.key)
+            sources = self.source_ids(start_lid, start.key,
+                                      normalize_preds(start.preds))
         sources = np.asarray(sources, np.int32)
         metrics = Metrics(db_hits=int(sources.shape[0]), rows=int(sources.shape[0]))
 
@@ -514,7 +567,8 @@ class PathExecutor:
                 F = self._expand_rel(F, rel, counting, metrics)
                 nxt = path.nodes[i + 1]
                 F = self._node_filter(
-                    F, self.schema.node_label_id(nxt.label), nxt.key)
+                    F, self.schema.node_label_id(nxt.label), nxt.key,
+                    normalize_preds(nxt.preds))
             out_rows.append(np.asarray(F))
         reach = np.concatenate(out_rows, axis=0)[:S].astype(np.int32)
         return ReachResult(src_ids=sources, reach=reach, counting=counting,

@@ -4,8 +4,15 @@ The paper's substrate is a graph DBMS (TuGraph / Neo4j).  Our TPU-native
 equivalent is a fixed-capacity *arena* of device arrays with alive masks:
 
 * node arrays:  ``label``, ``key`` (the primary-key property the paper's
-  templates reference as ``$K:$V``), ``alive``
-* edge arrays:  ``src``, ``dst``, ``label``, ``alive`` (COO)
+  templates reference as ``$K:$V``), ``alive``, plus one int32 arena column
+  per named node property (``node_props``)
+* edge arrays:  ``src``, ``dst``, ``label``, ``alive`` (COO), ``weight``,
+  plus one int32 arena column per named edge property (``edge_props``)
+
+Property columns are created lazily the first time a property name is set;
+elements that never had the property read as 0 (the integer-property default).
+Creating into a recycled slot zeroes every existing column for that slot, so
+stale values from deleted elements can never leak into predicate masks.
 
 All query-time filtering is mask algebra, so every step is shape-stable and
 ``jit``-compatible.  Mutation (create/delete node/edge) is a functional
@@ -22,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.pattern import _cmp
 from repro.core.schema import GraphSchema, NO_LABEL
 from repro.utils import round_up
 
@@ -107,27 +115,52 @@ class WriteBatch:
     edge_deletes: List[int] = field(default_factory=list)
     node_creates: List[Tuple[str, Optional[int]]] = field(default_factory=list)
     node_deletes: List[int] = field(default_factory=list)
+    # property updates (applied after all structural steps; see apply_writes):
+    # (node_id / edge_id, prop name, value)
+    node_prop_sets: List[Tuple[int, str, int]] = field(default_factory=list)
+    edge_prop_sets: List[Tuple[int, str, int]] = field(default_factory=list)
+    # props on elements created by THIS batch: (index into edge_creates /
+    # node_creates, prop name, value); resolved to arena ids at apply time
+    edge_create_props: List[Tuple[int, str, int]] = field(default_factory=list)
+    node_create_props: List[Tuple[int, str, int]] = field(default_factory=list)
 
     # -- builder-style helpers -------------------------------------------
-    def create_edge(self, src: int, dst: int, label: str) -> "WriteBatch":
+    def create_edge(self, src: int, dst: int, label: str,
+                    props: Optional[Dict[str, int]] = None) -> "WriteBatch":
+        idx = len(self.edge_creates)
         self.edge_creates.append((int(src), int(dst), label))
+        for k, v in (props or {}).items():
+            self.edge_create_props.append((idx, k, int(v)))
         return self
 
     def delete_edge(self, edge_id: int) -> "WriteBatch":
         self.edge_deletes.append(int(edge_id))
         return self
 
-    def create_node(self, label: str, key: Optional[int] = None) -> "WriteBatch":
+    def create_node(self, label: str, key: Optional[int] = None,
+                    props: Optional[Dict[str, int]] = None) -> "WriteBatch":
+        idx = len(self.node_creates)
         self.node_creates.append((label, key))
+        for k, v in (props or {}).items():
+            self.node_create_props.append((idx, k, int(v)))
         return self
 
     def delete_node(self, node_id: int) -> "WriteBatch":
         self.node_deletes.append(int(node_id))
         return self
 
+    def set_node_prop(self, node_id: int, prop: str, value: int) -> "WriteBatch":
+        self.node_prop_sets.append((int(node_id), prop, int(value)))
+        return self
+
+    def set_edge_prop(self, edge_id: int, prop: str, value: int) -> "WriteBatch":
+        self.edge_prop_sets.append((int(edge_id), prop, int(value)))
+        return self
+
     def __len__(self) -> int:
         return (len(self.edge_creates) + len(self.edge_deletes)
-                + len(self.node_creates) + len(self.node_deletes))
+                + len(self.node_creates) + len(self.node_deletes)
+                + len(self.node_prop_sets) + len(self.edge_prop_sets))
 
 
 @jax.tree_util.register_dataclass
@@ -143,6 +176,9 @@ class PropertyGraph:
     edge_label: jax.Array   # int32 [E_cap]
     edge_alive: jax.Array   # bool  [E_cap]
     edge_weight: jax.Array  # int32 [E_cap]; base edges 1, view edges = path count
+    # lazily-created named integer property columns (missing prop reads as 0)
+    node_props: Dict[str, jax.Array] = field(default_factory=dict)  # int32 [N_cap]
+    edge_props: Dict[str, jax.Array] = field(default_factory=dict)  # int32 [E_cap]
 
     @property
     def node_cap(self) -> int:
@@ -178,9 +214,53 @@ class PropertyGraph:
             m = m & (self.edge_label == label_id)
         return m
 
+    # ------------------------------------------------------------ properties
+
+    def node_prop_col(self, prop: str) -> jax.Array:
+        """int32 [N_cap] column for ``prop`` (all-zeros if never set)."""
+        col = self.node_props.get(prop)
+        return col if col is not None else jnp.zeros(self.node_cap, jnp.int32)
+
+    def edge_prop_col(self, prop: str) -> jax.Array:
+        col = self.edge_props.get(prop)
+        return col if col is not None else jnp.zeros(self.edge_cap, jnp.int32)
+
     # degree vectors live in ExecEngine.deg(): they depend on the schema's
     # base/view label partition (wildcard degrees count base edges only),
     # which the raw pytree has no access to.
+
+
+def node_pred_mask(g: PropertyGraph, preds) -> jax.Array:
+    """bool [N_cap]: nodes satisfying every predicate (device-side mask)."""
+    m = jnp.ones(g.node_cap, bool)
+    for p in preds:
+        m = m & _cmp(g.node_prop_col(p.prop), p.op, p.value)
+    return m
+
+
+def edge_pred_mask(g: PropertyGraph, preds) -> jax.Array:
+    """bool [E_cap]: edges satisfying every predicate (device-side mask)."""
+    m = jnp.ones(g.edge_cap, bool)
+    for p in preds:
+        m = m & _cmp(g.edge_prop_col(p.prop), p.op, p.value)
+    return m
+
+
+def gathered_pred_mask(props: Dict[str, jax.Array], preds,
+                       ids: np.ndarray) -> np.ndarray:
+    """Host bool mask over ``ids``: which elements satisfy every predicate.
+
+    The one place the gathered predicate semantics live — a missing property
+    column reads as 0 — shared by maintenance's Δ-edge/endpoint checks and
+    the engine's compact-slice predicate masks, so they can never diverge.
+    """
+    m = np.ones(ids.shape[0], bool)
+    for p in preds:
+        col = props.get(p.prop)
+        vals = (np.asarray(col)[ids] if col is not None
+                else np.zeros(ids.shape[0], np.int32))
+        m &= _cmp(vals, p.op, p.value)
+    return m
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +286,13 @@ def delete_edges(g: PropertyGraph, edge_ids) -> PropertyGraph:
     return replace(g, edge_alive=g.edge_alive.at[edge_ids].set(False))
 
 
+def _cleared(props: Dict[str, jax.Array], slots) -> Dict[str, jax.Array]:
+    """Zero every property column at ``slots`` (slot-recycling hygiene)."""
+    if not props:
+        return props
+    return {k: col.at[slots].set(0) for k, col in props.items()}
+
+
 def create_edge(g: PropertyGraph, slot, src, dst, label_id, weight=1) -> PropertyGraph:
     """Write an edge into a free slot (host finds the slot; see free_edge_slots)."""
     slot = jnp.asarray(slot, jnp.int32)
@@ -216,6 +303,7 @@ def create_edge(g: PropertyGraph, slot, src, dst, label_id, weight=1) -> Propert
         edge_label=g.edge_label.at[slot].set(jnp.asarray(label_id, jnp.int32)),
         edge_alive=g.edge_alive.at[slot].set(True),
         edge_weight=g.edge_weight.at[slot].set(jnp.asarray(weight, jnp.int32)),
+        edge_props=_cleared(g.edge_props, slot),
     )
 
 
@@ -229,7 +317,24 @@ def create_edges(g: PropertyGraph, slots, src, dst, label_id, weight) -> Propert
         edge_label=g.edge_label.at[slots].set(jnp.int32(label_id)),
         edge_alive=g.edge_alive.at[slots].set(True),
         edge_weight=g.edge_weight.at[slots].set(jnp.asarray(weight, jnp.int32)),
+        edge_props=_cleared(g.edge_props, slots),
     )
+
+
+def set_node_props(g: PropertyGraph, slots, prop: str, values) -> PropertyGraph:
+    """Set ``prop`` on the given node slots (creates the column lazily)."""
+    col = g.node_prop_col(prop)
+    col = col.at[jnp.asarray(slots, jnp.int32)].set(
+        jnp.asarray(values, jnp.int32))
+    return replace(g, node_props={**g.node_props, prop: col})
+
+
+def set_edge_props(g: PropertyGraph, slots, prop: str, values) -> PropertyGraph:
+    """Set ``prop`` on the given edge slots (creates the column lazily)."""
+    col = g.edge_prop_col(prop)
+    col = col.at[jnp.asarray(slots, jnp.int32)].set(
+        jnp.asarray(values, jnp.int32))
+    return replace(g, edge_props={**g.edge_props, prop: col})
 
 
 def add_edge_weight(g: PropertyGraph, slots, delta) -> PropertyGraph:
@@ -247,6 +352,7 @@ def create_node(g: PropertyGraph, slot, label_id, key) -> PropertyGraph:
         node_label=g.node_label.at[slot].set(jnp.asarray(label_id, jnp.int32)),
         node_key=g.node_key.at[slot].set(jnp.asarray(key, jnp.int32)),
         node_alive=g.node_alive.at[slot].set(True),
+        node_props=_cleared(g.node_props, slot),
     )
 
 
@@ -258,6 +364,7 @@ def create_nodes(g: PropertyGraph, slots, label_ids, keys) -> PropertyGraph:
         node_label=g.node_label.at[slots].set(jnp.asarray(label_ids, jnp.int32)),
         node_key=g.node_key.at[slots].set(jnp.asarray(keys, jnp.int32)),
         node_alive=g.node_alive.at[slots].set(True),
+        node_props=_cleared(g.node_props, slots),
     )
 
 
@@ -303,12 +410,15 @@ def grow_node_arena(g: PropertyGraph, new_cap: int) -> PropertyGraph:
     pad = new_cap - g.node_cap
     if pad == 0:
         return g
+    zi = jnp.zeros(pad, jnp.int32)
     return replace(
         g,
         node_label=jnp.concatenate([g.node_label,
                                     jnp.full(pad, DEAD, jnp.int32)]),
         node_key=jnp.concatenate([g.node_key, jnp.full(pad, DEAD, jnp.int32)]),
         node_alive=jnp.concatenate([g.node_alive, jnp.zeros(pad, bool)]),
+        node_props={k: jnp.concatenate([col, zi])
+                    for k, col in g.node_props.items()},
     )
 
 
@@ -326,6 +436,8 @@ def grow_edge_arena(g: PropertyGraph, new_cap: int) -> PropertyGraph:
         edge_label=jnp.concatenate([g.edge_label, jnp.full(pad, DEAD, jnp.int32)]),
         edge_alive=jnp.concatenate([g.edge_alive, jnp.zeros(pad, bool)]),
         edge_weight=jnp.concatenate([g.edge_weight, jnp.ones(pad, jnp.int32)]),
+        edge_props={k: jnp.concatenate([col, zi])
+                    for k, col in g.edge_props.items()},
     )
 
 
@@ -345,18 +457,27 @@ class GraphBuilder:
         self._esrc: list[int] = []
         self._edst: list[int] = []
         self._elabel: list[int] = []
+        # prop name -> {element index -> value} (sparse host accumulation)
+        self._nprops: Dict[str, Dict[int, int]] = {}
+        self._eprops: Dict[str, Dict[int, int]] = {}
 
-    def add_node(self, label: str, key: int | None = None) -> int:
+    def add_node(self, label: str, key: int | None = None,
+                 props: Optional[Dict[str, int]] = None) -> int:
         nid = len(self._nlabel)
         self._nlabel.append(self.schema.node_labels.intern(label))
         self._nkey.append(nid if key is None else int(key))
+        for k, v in (props or {}).items():
+            self._nprops.setdefault(k, {})[nid] = int(v)
         return nid
 
-    def add_edge(self, src: int, dst: int, label: str) -> int:
+    def add_edge(self, src: int, dst: int, label: str,
+                 props: Optional[Dict[str, int]] = None) -> int:
         eid = len(self._esrc)
         self._esrc.append(int(src))
         self._edst.append(int(dst))
         self._elabel.append(self.schema.edge_labels.intern(label))
+        for k, v in (props or {}).items():
+            self._eprops.setdefault(k, {})[eid] = int(v)
         return eid
 
     @property
@@ -390,6 +511,15 @@ class GraphBuilder:
             a[:nlive] = True
             return jnp.asarray(a)
 
+        def prop_cols(sparse, cap):
+            out = {}
+            for name, by_idx in sparse.items():
+                a = np.zeros(cap, np.int32)
+                for i, v in by_idx.items():
+                    a[i] = v
+                out[name] = jnp.asarray(a)
+            return out
+
         return PropertyGraph(
             node_label=pad_i32(self._nlabel, node_cap, DEAD),
             node_key=pad_i32(self._nkey, node_cap, DEAD),
@@ -399,6 +529,8 @@ class GraphBuilder:
             edge_label=pad_i32(self._elabel, edge_cap, DEAD),
             edge_alive=mask(e, edge_cap),
             edge_weight=jnp.asarray(np.ones(edge_cap, np.int32)),
+            node_props=prop_cols(self._nprops, node_cap),
+            edge_props=prop_cols(self._eprops, edge_cap),
         )
 
 

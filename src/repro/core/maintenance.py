@@ -32,8 +32,11 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.executor import ExecConfig, Metrics, PathExecutor
-from repro.core.graph import PropertyGraph
-from repro.core.pattern import Direction, NodePat, PathPattern, RelPat, ViewDef
+from repro.core.graph import PropertyGraph, gathered_pred_mask
+from repro.core.pattern import (
+    Direction, NodePat, PathPattern, PropPred, RelPat, ViewDef,
+    normalize_preds,
+)
 from repro.core.schema import GraphSchema, NO_LABEL
 from repro.utils import INF_HOPS
 
@@ -252,11 +255,16 @@ def _endpoint_ok(g: PropertyGraph, schema: GraphSchema, node: NodePat,
         return False
     if node.key is not None and int(g.node_key[node_id]) != node.key:
         return False
+    for p in node.preds:
+        col = g.node_props.get(p.prop)
+        if not p.holds(int(col[node_id]) if col is not None else 0):
+            return False
     return True
 
 
 def _node_pat_mask(schema: GraphSchema, node: NodePat, ids: np.ndarray,
-                   labels: np.ndarray, keys: np.ndarray) -> np.ndarray:
+                   labels: np.ndarray, keys: np.ndarray,
+                   g: PropertyGraph) -> np.ndarray:
     """Vectorized ``_endpoint_ok`` over host copies of the node arrays."""
     lid = schema.node_label_id(node.label)
     m = np.ones(ids.shape[0], bool)
@@ -264,7 +272,19 @@ def _node_pat_mask(schema: GraphSchema, node: NodePat, ids: np.ndarray,
         m &= labels[ids] == lid
     if node.key is not None:
         m &= keys[ids] == node.key
+    if node.preds:
+        m &= gathered_pred_mask(g.node_props, node.preds, ids)
     return m
+
+
+def _edge_pred_keep(g: PropertyGraph, preds: "tuple[PropPred, ...]",
+                    edge_ids: np.ndarray) -> np.ndarray:
+    """Host bool mask: which Δ edges satisfy a template rel's predicates.
+
+    A delta edge that fails the matched rel's predicate cannot extend any
+    path instance of the view, so it must contribute zero to the telescoped
+    delta — label matching alone is no longer sufficient with predicates."""
+    return gathered_pred_mask(g.edge_props, preds, edge_ids)
 
 
 @dataclass
@@ -338,13 +358,16 @@ def edge_delta_pairs(
     metrics: Metrics,
     ex_pre: PathExecutor | None = None,
     ex_suf: PathExecutor | None = None,
+    edge_id: Optional[int] = None,
 ) -> DeltaPairs:
     """Exact path-count delta for one created/deleted edge.
 
     ``g_prefix``/``g_suffix`` select the telescoping sides:
       create: (new, old);  delete: (old, new).
     For set semantics both sides are the new graph (create) — delete is
-    handled by affected-recompute instead (see views.py).
+    handled by affected-recompute instead (see views.py).  ``edge_id`` is
+    required when the view carries relationship predicates (property values
+    are read from ``g_prefix``, where the Δ edge is alive).
     """
     ex_pre = ex_pre or _delta_exec(g_prefix, schema, cfg)
     ex_suf = ex_suf or _delta_exec(g_suffix, schema, cfg)
@@ -354,6 +377,15 @@ def edge_delta_pairs(
         if not _tpl_matches_label(tpl, edge_label, delta_is_view):
             continue
         rel = vdef.match.rels[tpl.position]
+        rpreds = normalize_preds(rel.preds)
+        if rpreds:
+            if edge_id is None:
+                raise ValueError(
+                    f"view {vdef.name!r} has relationship predicates; "
+                    f"edge_delta_pairs needs edge_id to evaluate them")
+            if not _edge_pred_keep(g_prefix, rpreds,
+                                   np.asarray([edge_id], np.int32))[0]:
+                continue
         # orient Δ's endpoints to the path direction of the matched rel;
         # undirected rels match the edge in either orientation
         if rel.direction is Direction.IN:
@@ -404,6 +436,7 @@ def batch_edge_delta_pairs(
     metrics: Metrics,
     ex_pre: PathExecutor,
     ex_suf: PathExecutor,
+    edge_ids: Optional[np.ndarray] = None,
 ) -> DeltaPairs:
     """Exact path-count delta for a batch of created/deleted same-label edges.
 
@@ -412,6 +445,12 @@ def batch_edge_delta_pairs(
     mixed batch the caller telescopes both steps around a common mid graph.
     Duplicate edges in the batch contribute with multiplicity, matching
     Δ = Σ_j E_j.
+
+    ``edge_ids`` (arena slots, aligned with ``edge_srcs``/``edge_dsts``) are
+    required when the view carries relationship predicates: a Δ edge failing
+    the matched rel's predicate must contribute zero, and the property values
+    are read per edge from the ``ex_pre`` side (where the Δ edge is alive in
+    both telescoping regimes).
     """
     edge_srcs = np.asarray(edge_srcs, np.int32)
     edge_dsts = np.asarray(edge_dsts, np.int32)
@@ -424,12 +463,25 @@ def batch_edge_delta_pairs(
         if not _tpl_matches_label(tpl, edge_label, delta_is_view):
             continue
         rel = vdef.match.rels[tpl.position]
-        if rel.direction is Direction.IN:
-            orientations = [(edge_dsts, edge_srcs)]
-        elif rel.direction is Direction.OUT:
-            orientations = [(edge_srcs, edge_dsts)]
+        rpreds = normalize_preds(rel.preds)
+        if rpreds:
+            if edge_ids is None:
+                raise ValueError(
+                    f"view {vdef.name!r} has relationship predicates; "
+                    f"batch_edge_delta_pairs needs edge_ids to evaluate them")
+            ekeep = _edge_pred_keep(ex_pre.g, rpreds,
+                                    np.asarray(edge_ids, np.int32))
+            if not ekeep.any():
+                continue
+            srcs_t, dsts_t = edge_srcs[ekeep], edge_dsts[ekeep]
         else:
-            orientations = [(edge_srcs, edge_dsts), (edge_dsts, edge_srcs)]
+            srcs_t, dsts_t = edge_srcs, edge_dsts
+        if rel.direction is Direction.IN:
+            orientations = [(dsts_t, srcs_t)]
+        elif rel.direction is Direction.OUT:
+            orientations = [(srcs_t, dsts_t)]
+        else:
+            orientations = [(srcs_t, dsts_t), (dsts_t, srcs_t)]
         for U, V in orientations:
             if tpl.split is None:
                 if node_arrays is None:
@@ -439,10 +491,10 @@ def batch_edge_delta_pairs(
                                    np.asarray(ex_suf.g.node_key))
                 pre_nl, pre_nk, suf_nl, suf_nk = node_arrays
                 keep = (_node_pat_mask(schema, vdef.match.nodes[tpl.position],
-                                       U, pre_nl, pre_nk)
+                                       U, pre_nl, pre_nk, ex_pre.g)
                         & _node_pat_mask(schema,
                                          vdef.match.nodes[tpl.position + 1],
-                                         V, suf_nl, suf_nk))
+                                         V, suf_nl, suf_nk, ex_suf.g))
                 if not keep.any():
                     continue
                 U_k, V_k = U[keep], V[keep]
@@ -468,9 +520,18 @@ def affected_sources_edges(templates: ViewTemplates, vdef: ViewDef,
                            schema: GraphSchema,
                            edge_srcs: np.ndarray, edge_dsts: np.ndarray,
                            edge_label: str, metrics: Metrics,
-                           ex: PathExecutor) -> np.ndarray:
+                           ex: PathExecutor,
+                           edge_ids: Optional[np.ndarray] = None,
+                           check_preds: bool = True) -> np.ndarray:
     """Batched :func:`affected_sources_edge`: one multi-source prefix run per
-    template over every delta edge of the label."""
+    template over every delta edge of the label.
+
+    With ``check_preds`` (and ``edge_ids``) Δ edges failing a template rel's
+    predicates are skipped — they cannot carry any view path.  Property
+    *updates* pass ``check_preds=False``: the updated edge may satisfy the
+    predicate on either side of the update, so the affected-source sweep must
+    include it unconditionally (a superset is exact; recompute is
+    idempotent)."""
     edge_srcs = np.asarray(edge_srcs, np.int32)
     edge_dsts = np.asarray(edge_dsts, np.int32)
     hit = np.zeros(ex.g.node_cap, bool)
@@ -481,12 +542,21 @@ def affected_sources_edges(templates: ViewTemplates, vdef: ViewDef,
         if not _tpl_matches_label(tpl, edge_label, delta_is_view):
             continue
         rel = vdef.match.rels[tpl.position]
-        if rel.direction is Direction.IN:
-            starts = edge_dsts
-        elif rel.direction is Direction.OUT:
-            starts = edge_srcs
+        rpreds = normalize_preds(rel.preds) if check_preds else ()
+        if rpreds and edge_ids is not None:
+            ekeep = _edge_pred_keep(ex.g, rpreds,
+                                    np.asarray(edge_ids, np.int32))
+            if not ekeep.any():
+                continue
+            srcs_t, dsts_t = edge_srcs[ekeep], edge_dsts[ekeep]
         else:
-            starts = np.concatenate([edge_srcs, edge_dsts])
+            srcs_t, dsts_t = edge_srcs, edge_dsts
+        if rel.direction is Direction.IN:
+            starts = dsts_t
+        elif rel.direction is Direction.OUT:
+            starts = srcs_t
+        else:
+            starts = np.concatenate([srcs_t, dsts_t])
         starts = np.unique(starts)
         rows = _run_from(ex, tpl.prefix.reversed(), starts, counting=False,
                          metrics=metrics)

@@ -12,7 +12,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.core.pattern import NodePat, PathPattern, RelPat
+from repro.core.pattern import (
+    NodePat, PathPattern, RelPat, normalize_preds, preds_imply,
+)
 
 
 @dataclass(frozen=True)
@@ -23,29 +25,47 @@ class ViewMatch:
 
 
 def _node_can_match(qn: NodePat, vn: NodePat, interior: bool) -> bool:
-    """Paper's NodeCanMatch: labels equal; interior nodes unreferenced and
-    degree-2 (degree-2 is structural in a path; a key filter would be an
-    extra constraint the view does not preserve, so interior keys forbid)."""
+    """Paper's NodeCanMatch plus predicate subsumption.
+
+    Labels must be equal.  Interior nodes must be unreferenced and degree-2
+    (degree-2 is structural in a path; a key filter would be an extra
+    constraint the view does not preserve, so interior keys forbid) and their
+    predicates must be *equivalent* to the view's — the spliced view edge
+    erases the interior node, so no residual filter can reconcile a
+    difference in either direction.
+
+    Endpoints survive the splice, so the query's predicates stay on the
+    rewritten path as a residual filter; the match is legal iff the query
+    endpoint's region is *contained* in the view endpoint's
+    (``view_pred ⊇ query_pred``) — the view stores every row the stricter
+    query needs.  Incomparable or wider query predicates: no match."""
     if qn.label != vn.label:
         return False
     if interior:
         if qn.is_referenced or qn.key is not None:
             return False
+        if normalize_preds(qn.preds) != normalize_preds(vn.preds):
+            return False
     else:
-        # endpoints survive the splice; their extra constraints are fine, but
         # the view only covers sources satisfying ITS endpoint constraints:
         if vn.key is not None and qn.key != vn.key:
+            return False
+        if not preds_imply(normalize_preds(qn.preds),
+                           normalize_preds(vn.preds)):
             return False
     return True
 
 
 def _rel_can_match(qr: RelPat, vr: RelPat) -> bool:
     """Paper's RelpCanMatch: label, direction, min-hop, max-hop all equal and
-    the query rel must not be referenced elsewhere."""
+    the query rel must not be referenced elsewhere.  The rel disappears into
+    the view edge, so — like interior nodes — its predicates must be
+    equivalent to the view's, not merely comparable."""
     return (qr.label == vr.label
             and qr.direction == vr.direction
             and qr.min_hops == vr.min_hops
             and qr.max_hops == vr.max_hops
+            and normalize_preds(qr.preds) == normalize_preds(vr.preds)
             and not qr.is_referenced)
 
 

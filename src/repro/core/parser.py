@@ -10,17 +10,23 @@ its examples:
         MATCH (c:Comment)-[:replyOf*..]->(p:Post))
 
 Hop ranges: ``*`` = 1..inf, ``*n`` = n..n, ``*n..`` = n..inf, ``*..m`` = 1..m,
-``*n..m``.  One primary-key property filter per node (``{id: v}``) is
-supported, matching the paper's ``$L{$K:$V}`` templates.
+``*n..m``.
+
+Property filters: a ``{k: v}`` map on a node or relationship adds equality
+predicates — the reserved name ``id`` on a node addresses the primary key
+(the paper's ``$L{$K:$V}`` templates), every other name an integer property
+column.  A ``WHERE`` clause after the path adds comparison predicates
+(``WHERE n.age > 30 AND r.w <= 5``) on the named pattern elements; ops are
+``=, <, <=, >, >=`` and conjunction only (matching the predicate IR).
 """
 from __future__ import annotations
 
 import re
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.pattern import (
-    Direction, NodePat, PathPattern, Query, QueryFingerprint, RelPat, ViewDef,
-    mark_references,
+    Direction, NodePat, PathPattern, PRED_OPS, PropPred, Query,
+    QueryFingerprint, RelPat, ViewDef, mark_references, normalize_preds,
 )
 from repro.utils import INF_HOPS
 
@@ -32,6 +38,7 @@ _TOKEN_RE = re.compile(
   | (?P<arrow_r>->)
   | (?P<arrow_l><-)
   | (?P<dots>\.\.)
+  | (?P<cmp><=|>=|<|>)
   | (?P<punct>[()\[\]{}:,*\-=.])
     """,
     re.VERBOSE,
@@ -102,17 +109,51 @@ class _Cursor:
         return self.i >= len(self.toks)
 
 
-def _parse_props(c: _Cursor) -> Optional[int]:
-    """``{ name : int }`` -> the int key value (single-prop subset)."""
+def _parse_props(c: _Cursor, pk_name: Optional[str] = "id"
+                 ) -> Tuple[Optional[int], Tuple[PropPred, ...]]:
+    """``{ name : int, ... }`` -> (primary-key value, predicates).
+
+    On nodes the reserved prop name ``id`` (the paper's ``$K``) addresses the
+    primary-key column; every other ``name : int`` entry becomes an equality
+    predicate on a property column.  Relationships have no primary key
+    (``pk_name=None``), so every entry is a predicate there.  A comparison
+    entry ``name op int`` (ops ``=, <, <=, >, >=``) adds the corresponding
+    predicate — the form :meth:`NodePat.pretty` emits, so predicate patterns
+    round-trip through the parser.
+    """
     if not c.accept("{"):
-        return None
-    c.next()  # property name (e.g. 'id'); templates call it $K
-    c.expect(":")
-    val = c.next()
-    if not val.isdigit():
-        raise ParseError(f"only integer key values supported, got {val!r}")
+        return None, ()
+    key: Optional[int] = None
+    preds: List[PropPred] = []
+    while True:
+        name = c.next()
+        if c.accept(":"):
+            op = None           # plain map entry ('=', pk-aware)
+        else:
+            op = c.next()
+            if op not in PRED_OPS:
+                raise ParseError(f"expected ':' or comparison op in "
+                                 f"{PRED_OPS}, got {op!r}")
+        val = c.next()
+        if not val.isdigit():
+            raise ParseError(f"only integer property values supported, "
+                             f"got {val!r}")
+        if pk_name is not None and name == pk_name:
+            # the primary key is a dedicated column, not a property: a
+            # comparison other than equality cannot be expressed as a key
+            # filter and would otherwise silently probe a zero-filled
+            # property column named 'id'
+            if op not in (None, "="):
+                raise ParseError(
+                    f"{pk_name!r} is the primary key; only equality "
+                    f"({pk_name}: v) is supported, got {op!r}")
+            key = int(val)
+        else:
+            preds.append(PropPred(prop=name, op=op or "=", value=int(val)))
+        if not c.accept(","):
+            break
     c.expect("}")
-    return int(val)
+    return key, tuple(preds)
 
 
 def _parse_node(c: _Cursor) -> NodePat:
@@ -124,9 +165,9 @@ def _parse_node(c: _Cursor) -> NodePat:
         var = c.next()
     if c.accept(":"):
         label = c.next()
-    key = _parse_props(c)
+    key, preds = _parse_props(c)
     c.expect(")")
-    return NodePat(var=var, label=label, key=key)
+    return NodePat(var=var, label=label, key=key, preds=preds)
 
 
 def _parse_hops(c: _Cursor) -> Tuple[int, int]:
@@ -158,15 +199,18 @@ def _parse_rel(c: _Cursor) -> RelPat:
     var = None
     label = None
     lo, hi = 1, 1
+    preds: Tuple[PropPred, ...] = ()
     if c.accept("["):
         t = c.peek()
-        if t not in (":", "]", "*") and t is not None:
+        if t not in (":", "]", "*", "{") and t is not None:
             var = c.next()
         if c.accept(":"):
             label = c.next()
         if c.accept("*"):
             lo, hi = _parse_hops(c)
-        _parse_props(c)  # rel props: parsed and ignored (views are prop-free)
+        # rel props are honored as edge predicates (rels have no primary key);
+        # on a variable-length rel the predicate applies to every hop edge
+        _, preds = _parse_props(c, pk_name=None)
         c.expect("]")
     t = c.next()
     if left:
@@ -180,7 +224,7 @@ def _parse_rel(c: _Cursor) -> RelPat:
     else:
         raise ParseError(f"expected '->' or '-', got {t!r}")
     return RelPat(var=var, label=label, direction=direction,
-                  min_hops=lo, max_hops=hi)
+                  min_hops=lo, max_hops=hi, preds=preds)
 
 
 def _parse_path(c: _Cursor) -> PathPattern:
@@ -192,11 +236,66 @@ def _parse_path(c: _Cursor) -> PathPattern:
     return PathPattern(nodes=tuple(nodes), rels=tuple(rels))
 
 
+def _parse_where(c: _Cursor, path: PathPattern) -> PathPattern:
+    """``WHERE v.prop op int (AND ...)*`` — attach predicates to the named
+    pattern elements.  The var reference does not mark the element as
+    referenced: the predicate becomes part of the element's own constraints
+    (it survives rewrites the way labels do), not a projection of it."""
+    from dataclasses import replace as _replace
+    by_var: Dict[str, List[PropPred]] = {}
+    while True:
+        var = c.next()
+        c.expect(".")
+        prop = c.next()
+        op = c.next()
+        if op not in PRED_OPS:
+            raise ParseError(f"expected comparison op in {PRED_OPS}, "
+                             f"got {op!r}")
+        val = c.next()
+        if not val.isdigit():
+            raise ParseError(f"only integer predicate values supported, "
+                             f"got {val!r}")
+        by_var.setdefault(var, []).append(PropPred(prop, op, int(val)))
+        if not c.accept("AND"):
+            break
+    known = {n.var for n in path.nodes if n.var} \
+        | {r.var for r in path.rels if r.var}
+    unknown = set(by_var) - known
+    if unknown:
+        raise ParseError(f"WHERE references unknown vars {sorted(unknown)}; "
+                         f"pattern vars: {sorted(known)}")
+
+    def attach_node(n: NodePat) -> NodePat:
+        key = n.key
+        keep: List[PropPred] = []
+        for p in by_var.get(n.var, ()):
+            if p.prop == "id":
+                # 'id' names the primary-key column, never a property —
+                # WHERE n.id = v must behave exactly like {id: v}
+                if p.op != "=":
+                    raise ParseError(
+                        "'id' is the primary key; only equality "
+                        "(n.id = v) is supported in WHERE")
+                key = p.value
+            else:
+                keep.append(p)
+        return _replace(n, key=key, preds=n.preds + tuple(keep))
+
+    nodes = tuple(attach_node(n) if n.var in by_var else n
+                  for n in path.nodes)
+    rels = tuple(
+        _replace(r, preds=r.preds + tuple(by_var.get(r.var, ())))
+        if r.var in by_var else r for r in path.rels)
+    return PathPattern(nodes=nodes, rels=rels)
+
+
 def parse_query(text: str) -> Query:
-    """Parse ``MATCH <path> RETURN ...`` into a :class:`Query`."""
+    """Parse ``MATCH <path> [WHERE ...] RETURN ...`` into a :class:`Query`."""
     c = _Cursor(_tokenize(text))
     c.expect("MATCH")
     path = _parse_path(c)
+    if c.accept("WHERE"):
+        path = _parse_where(c, path)
     returns: List[str] = []
     count_only = False
     limit = None
@@ -230,10 +329,12 @@ def query_fingerprint(q: Query, schema) -> QueryFingerprint:
     """
     path = q.path
     return QueryFingerprint(
-        nodes=tuple((schema.node_label_id(n.label), n.key, n.is_referenced)
+        nodes=tuple((schema.node_label_id(n.label), n.key,
+                     normalize_preds(n.preds), n.is_referenced)
                     for n in path.nodes),
         rels=tuple((schema.edge_label_id(r.label), r.direction.value,
-                    r.min_hops, r.max_hops, r.is_referenced)
+                    r.min_hops, r.max_hops, normalize_preds(r.preds),
+                    r.is_referenced)
                    for r in path.rels),
         force_bool=q.force_bool,
     )
@@ -281,6 +382,8 @@ def parse_view(text: str) -> ViewDef:
         raise ParseError("CONSTRUCT edge must be directed ->")
     c.expect("MATCH")
     mpath = _parse_path(c)
+    if c.accept("WHERE"):
+        mpath = _parse_where(c, mpath)
     c.expect(")")
     if not c.done():
         raise ParseError(f"trailing tokens: {c.toks[c.i:]}")

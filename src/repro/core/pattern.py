@@ -29,19 +29,135 @@ class Direction(enum.Enum):
         return Direction.BOTH
 
 
+# ---------------------------------------------------------------------------
+# Property predicates
+# ---------------------------------------------------------------------------
+
+PRED_OPS = ("=", "<", "<=", ">", ">=")
+
+
+def _cmp(vals, op: str, value: int):
+    """Elementwise predicate comparison — the single comparator every layer
+    shares: host scalars (`PropPred.holds`), numpy masks (maintenance), and
+    traced jnp masks (executor/plans) all route through it."""
+    if op == "=":
+        return vals == value
+    if op == "<":
+        return vals < value
+    if op == "<=":
+        return vals <= value
+    if op == ">":
+        return vals > value
+    if op == ">=":
+        return vals >= value
+    raise ValueError(f"unknown predicate op {op!r}; supported: {PRED_OPS}")
+
+
+@dataclass(frozen=True, order=True)
+class PropPred:
+    """One atomic property comparison ``prop op value`` (integer domain).
+
+    A pattern element carries a *conjunction* of these (its ``preds`` tuple).
+    On a variable-length relationship the predicate applies to **every** edge
+    of the traversed walk (the per-hop edge mask is predicate-filtered).
+    """
+
+    prop: str
+    op: str            # one of PRED_OPS
+    value: int
+
+    def pretty(self) -> str:
+        return f"{self.prop} {self.op} {self.value}"
+
+    def holds(self, v: int) -> bool:
+        return bool(_cmp(v, self.op, self.value))
+
+
+def _pred_intervals(preds: Tuple[PropPred, ...]) -> "dict[str, Tuple[int, int]]":
+    """Conjunction -> per-prop closed interval [lo, hi] over the int domain.
+
+    ``None`` bounds are represented by +-inf sentinels so interval algebra is
+    plain integer comparison.  An unsatisfiable conjunction yields an empty
+    interval (lo > hi)."""
+    INF = 1 << 62
+    out: dict = {}
+    for p in preds:
+        lo, hi = out.get(p.prop, (-INF, INF))
+        if p.op == "=":
+            lo, hi = max(lo, p.value), min(hi, p.value)
+        elif p.op == ">":
+            lo = max(lo, p.value + 1)
+        elif p.op == ">=":
+            lo = max(lo, p.value)
+        elif p.op == "<":
+            hi = min(hi, p.value - 1)
+        else:  # <=
+            hi = min(hi, p.value)
+        out[p.prop] = (lo, hi)
+    return out
+
+
+def normalize_preds(preds: Tuple[PropPred, ...]) -> Tuple[PropPred, ...]:
+    """Canonical form of a predicate conjunction.
+
+    Per prop the conjunction collapses to one closed interval: a point becomes
+    a single ``=`` atom, finite bounds become ``>=``/``<=`` atoms, and an
+    unsatisfiable conjunction becomes the fixed pair ``>= 1, <= 0``.  Two
+    conjunctions with the same satisfying set normalize identically, so the
+    normalized tuple is a sound cache/fingerprint key and equality test."""
+    if not preds:
+        return ()
+    INF = 1 << 62
+    out: List[PropPred] = []
+    iv = _pred_intervals(preds)
+    for prop in sorted(iv):
+        lo, hi = iv[prop]
+        if lo > hi:
+            out += [PropPred(prop, ">=", 1), PropPred(prop, "<=", 0)]
+        elif lo == hi:
+            out.append(PropPred(prop, "=", lo))
+        else:
+            if lo > -INF:
+                out.append(PropPred(prop, ">=", lo))
+            if hi < INF:
+                out.append(PropPred(prop, "<=", hi))
+    return tuple(out)
+
+
+def preds_imply(stronger: Tuple[PropPred, ...],
+                weaker: Tuple[PropPred, ...]) -> bool:
+    """True iff every assignment satisfying ``stronger`` satisfies ``weaker``
+    (region containment; the matcher's subsumption test).  Vacuously true when
+    ``weaker`` is empty; an unsatisfiable ``stronger`` implies anything."""
+    a = _pred_intervals(stronger)
+    b = _pred_intervals(weaker)
+    if any(lo > hi for lo, hi in a.values()):
+        return True
+    for prop, (blo, bhi) in b.items():
+        if prop not in a:
+            return False
+        alo, ahi = a[prop]
+        if alo < blo or ahi > bhi:
+            return False
+    return True
+
+
 @dataclass(frozen=True)
 class NodePat:
     var: Optional[str] = None
     label: Optional[str] = None
     key: Optional[int] = None          # {<pk>: key} filter ($K:$V)
     is_referenced: bool = False        # referenced outside the MATCH path?
+    preds: Tuple[PropPred, ...] = ()   # property predicate conjunction
 
     def pretty(self) -> str:
         s = self.var or ""
         if self.label:
             s += f":{self.label}"
-        if self.key is not None:
-            s += f"{{id:{self.key}}}"
+        items = ([f"id: {self.key}"] if self.key is not None else []) \
+            + [p.pretty() for p in self.preds]
+        if items:
+            s += "{" + ", ".join(items) + "}"
         return f"({s})"
 
 
@@ -53,6 +169,7 @@ class RelPat:
     min_hops: int = 1
     max_hops: int = 1                  # INF_HOPS for unbounded
     is_referenced: bool = False
+    preds: Tuple[PropPred, ...] = ()   # applies to every edge of the walk
 
     @property
     def is_varlen(self) -> bool:
@@ -72,6 +189,8 @@ class RelPat:
         if self.is_varlen:
             hi = "" if self.unbounded else str(self.max_hops)
             inner += f"*{self.min_hops}..{hi}"
+        if self.preds:
+            inner += "{" + ", ".join(p.pretty() for p in self.preds) + "}"
         body = f"[{inner}]"
         if self.direction is Direction.OUT:
             return f"-{body}->"
@@ -196,10 +315,11 @@ class QueryFingerprint:
     ``RETURN count(*)`` over paths with the same referenced set share a plan.
     """
 
-    nodes: Tuple[Tuple[int, Optional[int], bool], ...]
-    # per node: (label_id, key, is_referenced)
-    rels: Tuple[Tuple[int, str, int, int, bool], ...]
-    # per rel: (label_id, direction value, min_hops, max_hops, is_referenced)
+    nodes: Tuple[Tuple[int, Optional[int], Tuple[PropPred, ...], bool], ...]
+    # per node: (label_id, key, normalized preds, is_referenced)
+    rels: Tuple[Tuple[int, str, int, int, Tuple[PropPred, ...], bool], ...]
+    # per rel: (label_id, direction value, min_hops, max_hops,
+    #           normalized preds, is_referenced)
     force_bool: bool = False
 
 

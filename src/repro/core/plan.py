@@ -79,8 +79,12 @@ from repro.core.executor import (
     ExecConfig, ExecEngine, Metrics, ReachResult, _active_rows, _hop_cost,
     _hop_dense, _hop_segment,
 )
+from repro.core.graph import node_pred_mask
 from repro.core.parser import query_fingerprint
-from repro.core.pattern import Direction, PathPattern, Query, QueryFingerprint
+from repro.core.pattern import (
+    Direction, PathPattern, PropPred, Query, QueryFingerprint, _cmp,
+    normalize_preds,
+)
 from repro.core.schema import GraphSchema, NO_LABEL
 from repro.utils import INF_HOPS, round_up
 
@@ -91,21 +95,34 @@ from repro.utils import INF_HOPS, round_up
 
 @dataclass(frozen=True)
 class ExpandStep:
-    """One relationship expansion: hop range over one edge label."""
+    """One relationship expansion: hop range over one edge label.
+
+    ``preds`` is the rel's normalized property-predicate conjunction; it is
+    compiled away into the hop's edge mask / adjacency (the engine caches the
+    predicate-filtered operands per (label, preds)), so the traced program is
+    identical to the predicate-free one — predicates change operands, not
+    structure."""
 
     label_id: int
     reverses: Tuple[bool, ...]      # per-direction reverse flags (BOTH = 2)
     min_hops: int
     max_hops: int                   # INF_HOPS for unbounded closure
     backend: str                    # "segment" | "dense" | "pallas"
+    preds: Tuple[PropPred, ...] = ()
 
 
 @dataclass(frozen=True)
 class FilterStep:
-    """Node label/key mask applied after an expansion."""
+    """Node label/key/predicate mask applied after an expansion.
+
+    Node predicates are fused *into the trace* (masks over the node property
+    columns passed as operands): node props have no engine-side epoch
+    tracking, so baking values into cached state would go stale on property
+    writes — operands are re-fetched per execution instead."""
 
     label_id: int
     key: Optional[int]
+    preds: Tuple[PropPred, ...] = ()
 
 
 def _choose_backend(engine: ExecEngine, cfg: ExecConfig, label_id: int) -> str:
@@ -172,6 +189,7 @@ class CompiledPlan:
         start = path.start
         self.start_label_id = schema.node_label_id(start.label)
         self.start_key = start.key
+        self.start_preds = normalize_preds(start.preds)
         self.steps: List[object] = []
         for i, rel in enumerate(path.rels):
             lid = schema.edge_label_id(rel.label)
@@ -181,10 +199,18 @@ class CompiledPlan:
             self.steps.append(ExpandStep(
                 label_id=lid, reverses=revs, min_hops=rel.min_hops,
                 max_hops=rel.max_hops,
-                backend=_choose_backend(engine, cfg, lid)))
+                backend=_choose_backend(engine, cfg, lid),
+                preds=normalize_preds(rel.preds)))
             nxt = path.nodes[i + 1]
             self.steps.append(FilterStep(
-                label_id=schema.node_label_id(nxt.label), key=nxt.key))
+                label_id=schema.node_label_id(nxt.label), key=nxt.key,
+                preds=normalize_preds(nxt.preds)))
+        # node property columns the trace reads (FilterStep predicates),
+        # in a fixed order baked into the trace; operand arrays are fetched
+        # per execution so property writes take effect without recompiling
+        self._nprop_names: Tuple[str, ...] = tuple(sorted(
+            {p.prop for s in self.steps if isinstance(s, FilterStep)
+             for p in s.preds}))
         # validity snapshot (same machinery the engine's caches key off)
         self.label_epochs: Dict[int, int] = {
             s.label_id: engine.epochs.of(s.label_id)
@@ -221,11 +247,14 @@ class CompiledPlan:
 
     # -- fused program -----------------------------------------------------
 
-    def _program(self, ids, node_label, node_key, node_alive, operands):
+    def _program(self, ids, node_label, node_key, node_alive, nprops,
+                 operands):
         """The whole query for one source block, as a single traced program.
 
-        ``ids`` is the padded [blk] source-id block (-1 = padding); operands
-        is a tuple (one entry per expand step) of per-direction array tuples.
+        ``ids`` is the padded [blk] source-id block (-1 = padding); ``nprops``
+        carries the node property columns FilterStep predicates read (ordered
+        as ``self._nprop_names``); operands is a tuple (one entry per expand
+        step) of per-direction array tuples.
         Returns (F, db_hits, rows, converged).
         """
         counting = self.counting
@@ -278,6 +307,9 @@ class CompiledPlan:
                     m = m & (node_label == step.label_id)
                 if step.key is not None:
                     m = m & (node_key == step.key)
+                for p in step.preds:   # fused device-side predicate mask
+                    m = m & _cmp(nprops[self._nprop_names.index(p.prop)],
+                                 p.op, p.value)
                 F = F & m[None, :] if not counting else jnp.where(m[None, :],
                                                                  F, 0)
                 continue
@@ -335,13 +367,14 @@ class CompiledPlan:
                 continue
             per_dir = []
             for rev in step.reverses:
-                deg = eng.deg(step.label_id, rev)
+                deg = eng.deg(step.label_id, rev, step.preds)
                 if step.backend == "segment":
-                    esrc, edst, ew, emask = eng.label_edges(step.label_id)
+                    esrc, edst, ew, emask = eng.label_edges(step.label_id,
+                                                            step.preds)
                     per_dir.append((esrc, edst, ew, emask, deg))
                 else:
                     per_dir.append((eng.adj(step.label_id, self.counting,
-                                            rev), deg))
+                                            rev, step.preds), deg))
             out.append(tuple(per_dir))
         return tuple(out)
 
@@ -350,21 +383,23 @@ class CompiledPlan:
     def execute(self) -> ReachResult:
         """Run the fused program over blocked sources; one metric sync."""
         g = self.engine.g
-        sources = np.flatnonzero(
-            np.asarray(g.node_mask(self.start_label_id, self.start_key))
-        ).astype(np.int32)
+        src_mask = g.node_mask(self.start_label_id, self.start_key)
+        if self.start_preds:
+            src_mask = src_mask & node_pred_mask(g, self.start_preds)
+        sources = np.flatnonzero(np.asarray(src_mask)).astype(np.int32)
         S = sources.shape[0]
         blk = self.cfg.src_block
         S_pad = max(round_up(S, blk), blk)
         padded = np.full(S_pad, -1, np.int32)
         padded[:S] = sources
         operands = self._gather_operands()
+        nprops = tuple(g.node_prop_col(name) for name in self._nprop_names)
 
         out_rows, db_parts, row_parts, ok_parts = [], [], [], []
         for b0 in range(0, S_pad, blk):
             F, db, rows, ok = self._fn(
                 jnp.asarray(padded[b0:b0 + blk]), g.node_label, g.node_key,
-                g.node_alive, operands)
+                g.node_alive, nprops, operands)
             out_rows.append(F)
             db_parts.append(db)
             row_parts.append(rows)

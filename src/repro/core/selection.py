@@ -25,13 +25,16 @@ from repro.core.executor import ExecConfig, ExecEngine, PathExecutor
 from repro.core.matcher import match_view
 from repro.core.optimizer import change_pg
 from repro.core.parser import parse_query
-from repro.core.pattern import NodePat, PathPattern, Query, ViewDef
+from repro.core.pattern import (
+    NodePat, PathPattern, Query, ViewDef, normalize_preds,
+)
 
 
 def _signature(path: PathPattern) -> tuple:
     return (
-        tuple((n.label, n.key) for n in path.nodes),
-        tuple((r.label, r.direction, r.min_hops, r.max_hops)
+        tuple((n.label, n.key, normalize_preds(n.preds)) for n in path.nodes),
+        tuple((r.label, r.direction, r.min_hops, r.max_hops,
+               normalize_preds(r.preds))
               for r in path.rels),
     )
 
@@ -44,8 +47,10 @@ def _match_signature(path: PathPattern) -> tuple:
     for memoizing match probes — the same canonicalization idea the planner's
     :class:`~repro.core.pattern.QueryFingerprint` applies to plans."""
     return (
-        tuple((n.label, n.key, n.is_referenced) for n in path.nodes),
-        tuple((r.label, r.direction, r.min_hops, r.max_hops, r.is_referenced)
+        tuple((n.label, n.key, normalize_preds(n.preds), n.is_referenced)
+              for n in path.nodes),
+        tuple((r.label, r.direction, r.min_hops, r.max_hops,
+               normalize_preds(r.preds), r.is_referenced)
               for r in path.rels),
     )
 
@@ -111,15 +116,16 @@ def score_candidate(ex: PathExecutor, sub: PathPattern, queries: Sequence[Query]
                     measure_memo: Optional[Dict[tuple, tuple]] = None
                     ) -> Optional[Candidate]:
     """Measure Eq. 1 for one candidate against the current graph."""
-    # strip interior references for the view definition
+    # strip interior references for the view definition (replace() keeps
+    # every other constraint — key AND property predicates)
+    from dataclasses import replace as _replace
     s_var = sub.start.var or "s"
     d_var = sub.end.var or "d"
     nodes = list(sub.nodes)
     if nodes[0].var is None:
-        nodes[0] = NodePat(var=s_var, label=nodes[0].label, key=nodes[0].key)
+        nodes[0] = _replace(nodes[0], var=s_var)
     if nodes[-1].var is None:
-        nodes[-1] = NodePat(var=d_var, label=nodes[-1].label,
-                            key=nodes[-1].key)
+        nodes[-1] = _replace(nodes[-1], var=d_var)
     sub = PathPattern(nodes=tuple(nodes), rels=sub.rels)
     vdef = ViewDef(name=name, src_var=nodes[0].var, dst_var=nodes[-1].var,
                    match=sub)

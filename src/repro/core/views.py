@@ -282,8 +282,20 @@ class GraphSession:
         desired: Dict[Tuple[int, int], int] = {}
         if sources.size:
             ex = ex or self._delta
+            # explicit-source runs skip start-node filtering, so enforce the
+            # match's start constraints (label/key/predicates/alive) here — a
+            # property update may have moved a source out of the view's
+            # predicate region, in which case its rows must all die
+            start = view.vdef.match.start
+            m = self.g.node_mask(
+                self.schema.node_label_id(start.label), start.key)
+            if start.preds:
+                m = m & G.node_pred_mask(self.g, start.preds)
+            m_host = np.asarray(m)
+            run_sources = sources[m_host[sources]]
+        if sources.size and run_sources.size:
             res = ex.run_path(view.vdef.match, counting=view.counting,
-                              sources=sources)
+                              sources=run_sources)
             metrics += res.metrics
             s_ids, d_ids, cnt = res.pairs()
             for s, d, c in zip(s_ids, d_ids, cnt):
@@ -329,10 +341,11 @@ class GraphSession:
 
     # ----------------------------------------------------------- write ops
 
-    def create_edge(self, src: int, dst: int, label: str) -> int:
+    def create_edge(self, src: int, dst: int, label: str,
+                    props: Optional[Dict[str, int]] = None) -> int:
         """Create a base edge; incrementally maintain every view."""
         res = self.apply_writes(
-            G.WriteBatch(edge_creates=[(int(src), int(dst), label)]))
+            G.WriteBatch().create_edge(int(src), int(dst), label, props))
         return int(res.edge_slots[0])
 
     def delete_edge(self, edge_id: int) -> None:
@@ -352,6 +365,16 @@ class GraphSession:
         # full engine invalidation; otherwise node writes touch no edge label
         self.engine.set_graph(g, None if grew else set())
         return slot
+
+    def set_node_prop(self, node_id: int, prop: str, value: int) -> None:
+        """Set an integer node property; maintains predicate views."""
+        self.apply_writes(G.WriteBatch(
+            node_prop_sets=[(int(node_id), prop, int(value))]))
+
+    def set_edge_prop(self, edge_id: int, prop: str, value: int) -> None:
+        """Set an integer edge property; maintains predicate views."""
+        self.apply_writes(G.WriteBatch(
+            edge_prop_sets=[(int(edge_id), prop, int(value))]))
 
     # ----------------------------------------------------- batched write path
 
@@ -384,8 +407,20 @@ class GraphSession:
         e_src0 = np.asarray(g0.edge_src)
         e_dst0 = np.asarray(g0.edge_dst)
         e_lab0 = np.asarray(g0.edge_label)
+
+        # view-edge property sets are rejected: view edges are derived state
+        # whose only legitimate mutation path is view maintenance.  (Deletes
+        # of view edges by arena id stay allowed — the established
+        # view-label-only-write escape hatch with zero maintenance work.)
+        for eid, prop, _ in batch.edge_prop_sets:
+            eid = int(eid)
+            if bool(e_alive0[eid]) \
+                    and self.schema.is_view_edge_label_id(int(e_lab0[eid])):
+                raise ValueError(
+                    f"cannot set property {prop!r} on edge {eid}: it is a "
+                    f"materialized view edge (maintained state)")
         del_ids: List[int] = []
-        del_by_label: Dict[int, List[Tuple[int, int]]] = {}
+        del_by_label: Dict[int, List[Tuple[int, int, int]]] = {}
         seen = set()
         for eid in batch.edge_deletes:
             eid = int(eid)
@@ -394,7 +429,7 @@ class GraphSession:
             seen.add(eid)
             del_ids.append(eid)
             del_by_label.setdefault(int(e_lab0[eid]), []).append(
-                (int(e_src0[eid]), int(e_dst0[eid])))
+                (int(e_src0[eid]), int(e_dst0[eid]), eid))
 
         # -- step 1: edge deletes  g0 -> g1
         g1 = (G.delete_edges(g0, np.asarray(del_ids, np.int32))
@@ -452,8 +487,11 @@ class GraphSession:
             g3 = G.delete_nodes(g2n, node_del)
 
         if g3 is g0 and not batch.node_creates:
+            # no structural change; property updates may still apply
+            self._apply_prop_updates(batch, created_slots, created_nodes,
+                                     metrics)
             self.last_maintenance_metrics = metrics
-            return BatchResult(created_slots, created_nodes)  # nothing happened
+            return BatchResult(created_slots, created_nodes)
 
         # -- engine bookkeeping: snapshot the old side BEFORE swapping, then
         # invalidate only the touched labels on the persistent engine
@@ -493,17 +531,19 @@ class GraphSession:
             return DeltaPairs(delta.src[keep], delta.dst[keep],
                               delta.count[keep])
 
-        # (label name, srcs, dsts) per delta group, shared across views
+        # (label name, srcs, dsts, eids) per delta group, shared across views
         name_of = self.schema.edge_labels.name_of
         del_groups = [
             (name_of(lid),
              np.asarray([p[0] for p in pairs], np.int32),
-             np.asarray([p[1] for p in pairs], np.int32))
+             np.asarray([p[1] for p in pairs], np.int32),
+             np.asarray([p[2] for p in pairs], np.int32))
             for lid, pairs in del_by_label.items()]
         create_groups = [
             (name_of(lid),
              np.asarray([batch.edge_creates[j][0] for j in idxs], np.int32),
-             np.asarray([batch.edge_creates[j][1] for j in idxs], np.int32))
+             np.asarray([batch.edge_creates[j][1] for j in idxs], np.int32),
+             created_slots[idxs])
             for lid, idxs in create_by_label.items()]
 
         # -- per-view maintenance: one grouped pass per (view, label)
@@ -514,31 +554,34 @@ class GraphSession:
                     view.pair_slot.pop(key)
             affected = np.zeros(0, np.int32)
             if view.counting:
-                for name, srcs, dsts in del_groups:
+                for name, srcs, dsts, eids in del_groups:
                     if not self._uses_label(view, name):
                         continue
                     delta = batch_edge_delta_pairs(
                         view.templates, view.vdef, self.schema, srcs, dsts,
                         name, counting=True, metrics=metrics,
-                        ex_pre=self._old_exec, ex_suf=self._mid_exec)
+                        ex_pre=self._old_exec, ex_suf=self._mid_exec,
+                        edge_ids=eids)
                     self._apply_delta(view, endpoints_alive(delta), sign=-1)
-                for name, srcs, dsts in create_groups:
+                for name, srcs, dsts, eids in create_groups:
                     if not self._uses_label(view, name):
                         continue
                     delta = batch_edge_delta_pairs(
                         view.templates, view.vdef, self.schema, srcs, dsts,
                         name, counting=True, metrics=metrics,
-                        ex_pre=self._aux_exec, ex_suf=self._mid_exec)
+                        ex_pre=self._aux_exec, ex_suf=self._mid_exec,
+                        edge_ids=eids)
                     self._apply_delta(view, endpoints_alive(delta), sign=+1)
             else:
                 # set semantics: deletes delimit affected sources on the old
                 # graph; rows re-derive on the final graph below
-                for name, srcs, dsts in del_groups:
+                for name, srcs, dsts, eids in del_groups:
                     if not self._uses_label(view, name):
                         continue
                     aff = affected_sources_edges(
                         view.templates, view.vdef, self.schema, srcs, dsts,
-                        name, metrics=metrics, ex=self._old_exec)
+                        name, metrics=metrics, ex=self._old_exec,
+                        edge_ids=eids)
                     affected = np.union1d(affected, aff).astype(np.int32)
             if node_del.size:
                 aff = affected_sources_nodes(
@@ -553,15 +596,19 @@ class GraphSession:
             if not view.counting:
                 # creates under set semantics: union-add pairs reachable
                 # through the new edges, evaluated on the final graph
-                for name, srcs, dsts in create_groups:
+                for name, srcs, dsts, eids in create_groups:
                     if not self._uses_label(view, name):
                         continue
                     delta = batch_edge_delta_pairs(
                         view.templates, view.vdef, self.schema, srcs, dsts,
                         name, counting=False, metrics=metrics,
-                        ex_pre=self._delta, ex_suf=self._delta)
+                        ex_pre=self._delta, ex_suf=self._delta,
+                        edge_ids=eids)
                     self._apply_union(view, endpoints_alive(delta))
             view.stats.e_vl = len(view.pair_slot)
+
+        # -- step 5: property updates  g3 -> g4 (the prop-update write kind)
+        self._apply_prop_updates(batch, created_slots, created_nodes, metrics)
 
         # the snapshots are per-batch; point the wrappers back at the live
         # engine so stale graphs cannot leak into the next operation
@@ -570,6 +617,110 @@ class GraphSession:
         self._aux_exec.engine = self.engine
         self.last_maintenance_metrics = metrics
         return BatchResult(created_slots, created_nodes)
+
+    # ------------------------------------------------- property-update pass
+
+    def _apply_prop_updates(self, batch: G.WriteBatch,
+                            edge_slots: np.ndarray, node_slots: np.ndarray,
+                            metrics: Metrics) -> None:
+        """Apply the batch's property sets and maintain predicate views.
+
+        Property updates are the last step of the batch contract (after all
+        structural steps), so sets may target both pre-existing elements and
+        elements created by this batch (via ``edge_create_props`` /
+        ``node_create_props``, resolved against the assigned slots).  A
+        property update is equivalent to deleting and re-creating the touched
+        element for every view whose predicates *read* the touched property;
+        maintenance is one batched affected-source sweep per such view — on
+        the pre-update and post-update graphs, since the element may satisfy
+        the predicate on either side of the transition — followed by an
+        affected-source recompute on the final graph.  Views that read none
+        of the touched properties are provably unaffected and skipped.
+        """
+        e_sets = list(batch.edge_prop_sets) + [
+            (int(edge_slots[i]), p, int(v))
+            for i, p, v in batch.edge_create_props]
+        n_sets = list(batch.node_prop_sets) + [
+            (int(node_slots[i]), p, int(v))
+            for i, p, v in batch.node_create_props]
+        if not e_sets and not n_sets:
+            return
+        g = self.g
+        e_alive = np.asarray(g.edge_alive)
+        n_alive = np.asarray(g.node_alive)
+        e_lab = np.asarray(g.edge_label)
+        # dead targets are no-ops (the delete convention); view edges are
+        # skipped defensively (pre-mutation validation already raised for
+        # the cases visible at batch entry)
+        e_sets = [(int(i), p, int(v)) for i, p, v in e_sets
+                  if bool(e_alive[int(i)])
+                  and not self.schema.is_view_edge_label_id(int(e_lab[int(i)]))]
+        n_sets = [(int(i), p, int(v)) for i, p, v in n_sets
+                  if bool(n_alive[int(i)])]
+        if not e_sets and not n_sets:
+            return
+
+        old_eng = self.engine.snapshot()
+        # last-write-wins per (element, prop): one grouped device set per prop
+        by_prop_e: Dict[str, Dict[int, int]] = {}
+        for i, p, v in e_sets:
+            by_prop_e.setdefault(p, {})[i] = v
+        by_prop_n: Dict[str, Dict[int, int]] = {}
+        for i, p, v in n_sets:
+            by_prop_n.setdefault(p, {})[i] = v
+        for p, by_slot in by_prop_e.items():
+            g = G.set_edge_props(g, list(by_slot), p, list(by_slot.values()))
+        for p, by_slot in by_prop_n.items():
+            g = G.set_node_props(g, list(by_slot), p, list(by_slot.values()))
+        # an edge-prop write changes that label's predicate-filtered slices/
+        # degrees/adjacency — bump exactly the touched labels (plan-cache
+        # invalidation rides the same epochs); node props live outside the
+        # engine's caches (they are per-execution operands), so node-only
+        # updates touch no label
+        touched_labels = {int(e_lab[i]) for i, _, _ in e_sets}
+        self._set_graph(g, touched_labels)
+        self._old_exec.engine = old_eng
+
+        e_src = np.asarray(g.edge_src)
+        e_dst = np.asarray(g.edge_dst)
+        name_of = self.schema.edge_labels.name_of
+        for view in self.views.values():
+            node_read = {p.prop for n in view.vdef.match.nodes
+                         for p in n.preds}
+            rel_read = {p.prop for r in view.vdef.match.rels
+                        for p in r.preds}
+            affected = np.zeros(0, np.int32)
+            if rel_read:
+                by_label: Dict[str, List[int]] = {}
+                for i, p, _ in e_sets:
+                    if p in rel_read:
+                        by_label.setdefault(name_of(int(e_lab[i])),
+                                            []).append(i)
+                for name, eids in by_label.items():
+                    if not self._uses_label(view, name):
+                        continue
+                    eids_np = np.unique(np.asarray(eids, np.int32))
+                    srcs, dsts = e_src[eids_np], e_dst[eids_np]
+                    for ex in (self._old_exec, self._delta):
+                        aff = affected_sources_edges(
+                            view.templates, view.vdef, self.schema,
+                            srcs, dsts, name, metrics=metrics, ex=ex,
+                            edge_ids=eids_np, check_preds=False)
+                        affected = np.union1d(affected, aff).astype(np.int32)
+            if node_read:
+                nids = np.unique(np.asarray(
+                    [i for i, p, _ in n_sets if p in node_read], np.int32))
+                if nids.size:
+                    for ex in (self._old_exec, self._delta):
+                        aff = affected_sources_nodes(
+                            view.templates, view.vdef, self.schema, nids,
+                            metrics=metrics, ex=ex)
+                        affected = np.union1d(affected, aff).astype(np.int32)
+            if affected.size:
+                self._recompute_sources(view, affected, metrics,
+                                        ex=self._delta)
+            view.stats.e_vl = len(view.pair_slot)
+        self._old_exec.engine = self.engine
 
     def _apply_union(self, view: MaterializedView, delta: DeltaPairs) -> None:
         """Set-semantics create pass: add only pairs not already stored.

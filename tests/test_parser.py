@@ -1,7 +1,7 @@
 import pytest
 
 from repro.core.parser import ParseError, parse_query, parse_view
-from repro.core.pattern import Direction
+from repro.core.pattern import Direction, PropPred
 from repro.utils import INF_HOPS
 
 
@@ -110,3 +110,99 @@ def test_pretty_round_trip():
     q1 = parse_query(text)
     q2 = parse_query(q1.pretty())
     assert q1.path == q2.path
+
+
+# ---------------------------------------------------------------------------
+# property predicates: {k: v} maps, WHERE clauses, rel props honored
+# ---------------------------------------------------------------------------
+
+def test_rel_props_are_honored_as_predicates():
+    """Relationship props used to be parsed and silently discarded; they are
+    now equality predicates on the rel (rels have no primary key)."""
+    q = parse_query("MATCH (a:A)-[e:x {w: 3}]->(b) RETURN a, b")
+    r = q.path.rels[0]
+    assert r.preds == (PropPred("w", "=", 3),)
+    # multi-entry maps conjoin
+    q2 = parse_query("MATCH (a)-[e:x {w: 3, k: 1}]->(b) RETURN a")
+    assert set(q2.path.rels[0].preds) == {PropPred("w", "=", 3),
+                                          PropPred("k", "=", 1)}
+
+
+def test_rel_props_filter_execution():
+    """Executor behavior of the fixed rel-prop parse: the predicate actually
+    filters the expanded edges (it is not dropped downstream either)."""
+    from repro.core import GraphBuilder, GraphSchema, GraphSession
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    n = [b.add_node("A") for _ in range(3)]
+    b.add_edge(n[0], n[1], "x", props={"w": 3})
+    b.add_edge(n[1], n[2], "x", props={"w": 1})
+    sess = GraphSession(b.finalize(), schema)
+    res = sess.query("MATCH (a:A)-[e:x {w: 3}]->(b) RETURN a, b",
+                     use_views=False)
+    s, d, _ = res.pairs()
+    assert list(zip(s.tolist(), d.tolist())) == [(0, 1)]
+    res_all = sess.query("MATCH (a:A)-[e:x]->(b) RETURN a, b",
+                         use_views=False)
+    assert res_all.num_pairs() == 2
+
+
+def test_node_map_id_is_primary_key_other_names_are_preds():
+    q = parse_query("MATCH (n:A {id: 5, age: 30})-[:x]->(m) RETURN n")
+    assert q.path.start.key == 5
+    assert q.path.start.preds == (PropPred("age", "=", 30),)
+
+
+def test_where_clause_attaches_preds_by_var():
+    q = parse_query("MATCH (n:A)-[r:x]->(m:B) "
+                    "WHERE n.age > 30 AND r.w <= 5 AND m.age >= 1 "
+                    "RETURN n, m")
+    assert q.path.start.preds == (PropPred("age", ">", 30),)
+    assert q.path.rels[0].preds == (PropPred("w", "<=", 5),)
+    assert q.path.end.preds == (PropPred("age", ">=", 1),)
+    # WHERE vars alone do not mark elements as referenced
+    q2 = parse_query("MATCH (n:A)-[r:x]->(m:B) WHERE m.age = 2 RETURN n")
+    assert not q2.path.end.is_referenced
+
+
+def test_view_statement_accepts_where():
+    v = parse_view("CREATE VIEW VP AS (CONSTRUCT (s)-[r:VP]->(d) "
+                   "MATCH (s:A)-[e:x]->(d:B) WHERE e.w >= 2 AND s.age < 9)")
+    assert v.match.rels[0].preds == (PropPred("w", ">=", 2),)
+    assert v.match.start.preds == (PropPred("age", "<", 9),)
+
+
+@pytest.mark.parametrize("bad", [
+    "MATCH (a)-[:x]->(b) WHERE q.w > 3 RETURN a",       # unknown var
+    "MATCH (a)-[:x]->(b) WHERE a.w ! 3 RETURN a",       # bad operator
+    "MATCH (a)-[:x]->(b) WHERE a.w > b RETURN a",       # non-integer value
+    "MATCH (a {id: x})-[:x]->(b) RETURN a",             # non-integer map val
+    "MATCH (a {id > 3})-[:x]->(b) RETURN a",            # pk is equality-only
+    "MATCH (a)-[:x]->(b) WHERE a.id >= 3 RETURN a",     # pk is equality-only
+])
+def test_predicate_parse_errors(bad):
+    with pytest.raises(ParseError):
+        parse_query(bad)
+
+
+def test_where_id_equality_is_the_primary_key():
+    """``WHERE n.id = v`` must behave exactly like ``{id: v}`` — 'id' names
+    the key column, never a (zero-filled) property column."""
+    q1 = parse_query("MATCH (n:A) WHERE n.id = 5 RETURN n")
+    q2 = parse_query("MATCH (n:A {id: 5}) RETURN n")
+    assert q1.path.start.key == 5 and q1.path.start.preds == ()
+    assert q1.path.start.key == q2.path.start.key
+
+
+def test_predicate_pretty_round_trip():
+    text = ("MATCH (n:A)-[e:x*1..3]->(m:B) WHERE n.age >= 3 AND e.w < 5 "
+            "RETURN n, m")
+    q1 = parse_query(text)
+    q2 = parse_query(q1.pretty())
+    # pretty() renders preds as map-style constraints on the elements; the
+    # round trip must preserve the predicate sets up to normalization
+    from repro.core.pattern import normalize_preds
+    for a, b in zip(q1.path.nodes, q2.path.nodes):
+        assert normalize_preds(a.preds) == normalize_preds(b.preds)
+    for a, b in zip(q1.path.rels, q2.path.rels):
+        assert normalize_preds(a.preds) == normalize_preds(b.preds)

@@ -203,11 +203,13 @@ def _random_graph(rng, n=12, p=0.25):
     schema = GraphSchema()
     b = GraphBuilder(schema)
     for _ in range(n):
-        b.add_node(("A", "B")[rng.integers(2)])
+        b.add_node(("A", "B")[rng.integers(2)],
+                   props={"age": int(rng.integers(0, 8))})
     for u in range(n):
         for v in range(n):
             if u != v and rng.random() < p:
-                b.add_edge(u, v, ("x", "y")[rng.integers(2)])
+                b.add_edge(u, v, ("x", "y")[rng.integers(2)],
+                           props={"w": int(rng.integers(0, 5))})
     return b.finalize(), schema
 
 
@@ -219,6 +221,14 @@ PARITY_QUERIES = [
     "MATCH (a:A)-[:x]-(b) RETURN a, b",
     "MATCH (a:A)-[r]->(m) RETURN a, m",
     "MATCH (a:A) RETURN a",
+    # property predicates: rel/node, map-equality and WHERE, varlen pushdown
+    "MATCH (a:A)-[e:x]->(b:B) WHERE e.w >= 2 RETURN a, b",
+    "MATCH (a:A)-[e:x {w: 3}]->(b) RETURN a, b",
+    "MATCH (a:A)-[e:x*1..3]->(b:B) WHERE e.w > 1 RETURN a, b",
+    "MATCH (a:A)-[e:x*1..]->(b:B) WHERE e.w >= 1 AND b.age <= 5 RETURN a, b",
+    "MATCH (a:A)-[:x]->(m:B)-[f:y]->(c) WHERE a.age >= 3 AND m.age < 6 "
+    "AND f.w <= 3 RETURN a, c",
+    "MATCH (a:A)-[e:x]-(b) WHERE e.w = 2 RETURN a, b",
 ]
 
 
@@ -284,3 +294,120 @@ def test_fused_plan_matches_unfused_after_rewrite():
     np.testing.assert_array_equal(res_p.reach, res_u.reach)
     assert res_p.metrics.db_hits == res_u.metrics.db_hits
     assert res_p.metrics.rows == res_u.metrics.rows
+
+
+# ---------------------------------------------------------------------------
+# property predicates: fingerprinting, parity, invalidation on prop writes
+# ---------------------------------------------------------------------------
+
+def _prop_session(**cfg_kw):
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    nodes = [b.add_node("A" if i % 2 == 0 else "B",
+                        props={"age": i}) for i in range(8)]
+    for i in range(7):
+        b.add_edge(nodes[i], nodes[i + 1], "x", props={"w": i % 4})
+    return GraphSession(b.finalize(), schema,
+                        ExecConfig(**cfg_kw) if cfg_kw else None)
+
+
+QW = "MATCH (a:A)-[e:x]->(b:B) WHERE e.w >= 2 RETURN a, b"
+
+
+def test_fingerprint_distinguishes_predicates():
+    schema = GraphSchema()
+    fps = [canonicalize_query(parse_query(q), schema)[1] for q in [
+        "MATCH (a:A)-[e:x]->(b:B) WHERE e.w >= 2 RETURN a, b",
+        "MATCH (a:A)-[e:x]->(b:B) WHERE e.w >= 3 RETURN a, b",
+        "MATCH (a:A)-[e:x]->(b:B) RETURN a, b",
+    ]]
+    assert len(set(fps)) == 3, "predicate value/presence must split plans"
+    # map equality and WHERE equality canonicalize to the same fingerprint,
+    # as do redundant conjuncts (normalization collapses the interval)
+    _, fp_map = canonicalize_query(
+        parse_query("MATCH (a:A)-[e:x {w: 3}]->(b:B) RETURN a, b"), schema)
+    _, fp_where = canonicalize_query(
+        parse_query("MATCH (a:A)-[e:x]->(b:B) WHERE e.w = 3 RETURN a, b"),
+        schema)
+    _, fp_redund = canonicalize_query(
+        parse_query("MATCH (a:A)-[e:x]->(b:B) WHERE e.w >= 3 AND e.w <= 3 "
+                    "RETURN a, b"), schema)
+    assert fp_map == fp_where == fp_redund
+
+
+def test_predicate_query_hits_plan_cache():
+    sess = _prop_session()
+    r1 = sess.query(QW, use_views=False)
+    misses = sess.planner.plan_misses
+    r2 = sess.query(QW, use_views=False)
+    assert sess.planner.plan_misses == misses
+    assert _pairs(r1) == _pairs(r2)
+
+
+def test_plan_invalidates_when_prop_write_bumps_label_epoch():
+    """An edge-property write is a maintenance-relevant mutation of its
+    label: the cached predicate-filtered operands (and thus the plan) must
+    recompile, and the recompiled plan must see the new property value."""
+    sess = _prop_session()
+    before = _pairs(sess.query(QW, use_views=False))
+    misses = sess.planner.plan_misses
+    # edge 0 has w=0 (excluded); flipping it into the predicate region must
+    # invalidate the x-label plan and change the result
+    sess.set_edge_prop(0, "w", 2)
+    r = sess.query(QW, use_views=False)
+    assert sess.planner.plan_misses == misses + 1, \
+        "edge-prop write must bump the label epoch and recompile the plan"
+    assert _pairs(r) != before
+    ex = PathExecutor(engine=sess.engine, cfg=sess.cfg)
+    assert _pairs(r) == _pairs(ex.run_query(parse_query(QW)))
+
+
+def test_node_prop_write_leaves_plan_warm_but_current():
+    """Node props are per-execution operands (no engine cache depends on
+    them): a node-prop write must NOT recompile the plan, yet the very next
+    execution must see the new value."""
+    sess = _prop_session()
+    q = "MATCH (a:A)-[e:x]->(b:B) WHERE b.age <= 5 RETURN a, b"
+    before = _pairs(sess.query(q, use_views=False))
+    misses = sess.planner.plan_misses
+    sess.set_node_prop(1, "age", 9)       # node 1 (B, age=1) leaves region
+    r = sess.query(q, use_views=False)
+    assert sess.planner.plan_misses == misses, \
+        "node props are operands, not plan state"
+    assert _pairs(r) != before
+    ex = PathExecutor(engine=sess.engine, cfg=sess.cfg)
+    assert _pairs(r) == _pairs(ex.run_query(parse_query(q)))
+
+
+@pytest.mark.parametrize("plan_backend", ["auto", "dense"])
+def test_fused_predicate_plan_matches_unfused_executor(plan_backend):
+    rng = np.random.default_rng(7)
+    g, schema = _random_graph(rng)
+    sess = GraphSession(g, schema,
+                        ExecConfig(src_block=16, plan_backend=plan_backend))
+    unfused_backend = "dense" if plan_backend == "dense" else "segment"
+    ex = PathExecutor(g, schema,
+                      ExecConfig(backend=unfused_backend, src_block=16))
+    for q in PARITY_QUERIES:
+        res_p = sess.query(q, use_views=False)
+        res_u = ex.run_query(parse_query(q))
+        np.testing.assert_array_equal(res_p.reach, res_u.reach, err_msg=q)
+        assert res_p.metrics.db_hits == res_u.metrics.db_hits, q
+        assert res_p.metrics.rows == res_u.metrics.rows, q
+
+
+def test_predicate_view_rewrite_parity_through_plan():
+    """A predicate query answered via a predicate view returns exactly the
+    base-execution rows (the acceptance-criteria identity, deterministic)."""
+    sess = _prop_session()
+    sess.create_view(
+        "CREATE VIEW VW AS (CONSTRUCT (s)-[r:VW]->(d) "
+        "MATCH (s:A)-[e:x]->(m:B)-[f:x]->(d:A) WHERE e.w >= 1)")
+    q = ("MATCH (s:A)-[e:x]->(m:B)-[f:x]->(d:A) WHERE e.w >= 1 "
+         "RETURN s, d")
+    from repro.core.optimizer import optimize_query
+    q_rw = optimize_query(parse_query(q), list(sess.views.values()))
+    assert any(r.label == "VW" for r in q_rw.path.rels), \
+        "equal-predicate query must rewrite through the predicate view"
+    assert (_pairs(sess.query(q, use_views=True))
+            == _pairs(sess.query(q, use_views=False)))
