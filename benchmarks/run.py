@@ -19,10 +19,18 @@ Prints ``name,us_per_call,derived`` CSV rows.
                predicate-defined view answering the predicate query
   roofline_* — dry-run roofline table (results/dryrun_all.json, if present)
 
+  serve_*    — cross-query batched serving: a >= 32-strong same-fingerprint
+               group through the ServeEngine vs sequential per-query calls,
+               plus the mixed read/write serving replay (qps + occupancy)
+
 Each benchmark additionally writes its rows as machine-readable
 ``BENCH_<name>.json`` under ``--json-dir`` (default ``results/``), so CI runs
-accumulate a perf trajectory.  ``--smoke`` is the CI-friendly subset:
-``--small`` sizes, maintenance + wildcard + plan_cache only.
+accumulate a perf trajectory, and ``benchmarks/check_regression.py`` gates CI
+on the headline metrics against the committed baselines.  ``--smoke`` is the
+CI-friendly subset: ``--small`` sizes, maintenance + wildcard + plan_cache +
+predicate + serve only.  ``--seed`` seeds every workload RNG (default 0) so
+smoke numbers are reproducible run-to-run — the committed baselines under
+``results/`` are seed-0 runs.
 """
 from __future__ import annotations
 
@@ -43,26 +51,25 @@ def _row(name: str, us: float, derived: str = "") -> None:
                        "derived": derived})
 
 
-def bench_workloads(small: bool) -> None:
+def bench_workloads(mode: str, seed: int) -> None:
     from benchmarks.workload_driver import run_workload
     from repro.configs.mv4pg import WORKLOADS
     from repro.data.synthetic import finbench_like, snb_like
 
-    scale = {"small": 0.25, "default": 0.4, "large": 1.0}[
-        small if isinstance(small, str) else ("small" if small else "default")]
+    scale = {"small": 0.25, "default": 0.4, "large": 1.0}[mode]
     datasets = {
-        "snb": snb_like(seed=0, n_person=int(2000 * scale),
+        "snb": snb_like(seed=seed, n_person=int(2000 * scale),
                         n_post=int(1500 * scale),
                         n_comment=int(12000 * scale),
                         n_place=60, n_tag=300),
-        "finbench": finbench_like(seed=0, n_account=int(4000 * scale),
+        "finbench": finbench_like(seed=seed, n_account=int(4000 * scale),
                                   n_person=int(1500 * scale),
                                   n_company=int(500 * scale),
                                   n_loan=int(800 * scale)),
     }
     for name, (g, schema, _) in datasets.items():
         rep = run_workload(g, schema, WORKLOADS[name],
-                           repeats=2 if small else 3)
+                           repeats=2 if mode == "small" else 3, seed=seed)
         for vname, secs in rep.view_creation_s.items():
             _row(f"table3_view_creation_{name}_{vname}", secs * 1e6,
                  f"seconds={secs:.3f}")
@@ -82,7 +89,7 @@ def bench_workloads(small: bool) -> None:
              f"rewrite_amortized_us={rep.rewrite_amortized_s*1e6:.2f}")
 
 
-def bench_maintenance_scaling(small: bool) -> None:
+def bench_maintenance_scaling(mode: str, seed: int) -> None:
     """Fig. 19: maintenance cost vs number of deleted edges, looped
     single-edge maintenance vs one batched ``apply_writes`` call."""
     import jax
@@ -92,26 +99,24 @@ def bench_maintenance_scaling(small: bool) -> None:
     from repro.core import graph as G
     from repro.data.synthetic import snb_like
 
-    n_comment = {"small": 3000, "default": 4000, "large": 8000}[
-        small if isinstance(small, str) else ("small" if small else "default")]
+    n_comment = {"small": 3000, "default": 4000, "large": 8000}[mode]
 
     def fresh_session():
-        g, schema, _ = snb_like(seed=1, n_person=500, n_post=400,
+        g, schema, _ = snb_like(seed=seed + 1, n_person=500, n_post=400,
                                 n_comment=n_comment)
         sess = GraphSession(g, schema)
         sess.create_view(WORKLOADS["snb"].views[0])   # ROOT_POST (unbounded)
         return sess
 
     # the setup scan needs only the raw graph + schema, not a full session
-    g0, schema0, _ = snb_like(seed=1, n_person=500, n_post=400,
+    g0, schema0, _ = snb_like(seed=seed + 1, n_person=500, n_post=400,
                               n_comment=n_comment)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     lid = schema0.edge_labels.id_of("replyOf")
     alive = np.flatnonzero(np.asarray(g0.edge_alive)
                            & (np.asarray(g0.edge_label) == lid))
     rng.shuffle(alive)
-    powers = [1, 10, 100] if small == "small" or small is True \
-        else [1, 10, 100, 1000]
+    powers = [1, 10, 100] if mode == "small" else [1, 10, 100, 1000]
     for n in powers:
         batch = alive[:n]
         # looped single-edge maintenance (the paper's write path)
@@ -128,7 +133,7 @@ def bench_maintenance_scaling(small: bool) -> None:
         t_batch = time.perf_counter() - t0
         assert sess.check_consistency("ROOT_POST")
         # plain deletion cost (no views) on a fresh copy of the graph
-        g2, _, _ = snb_like(seed=1, n_person=500, n_post=400,
+        g2, _, _ = snb_like(seed=seed + 1, n_person=500, n_post=400,
                             n_comment=n_comment)
         t0 = time.perf_counter()
         for eid in batch:
@@ -143,14 +148,14 @@ def bench_maintenance_scaling(small: bool) -> None:
              f"batch_s={t_batch:.3f};loop_s={t_loop:.3f}")
 
 
-def bench_profile(small: bool) -> None:
+def bench_profile(mode: str, seed: int) -> None:
     """Figs 17-18: DBHit/Rows with and without the view for one query."""
     from repro.configs.mv4pg import WORKLOADS
     from repro.core import GraphSession
     from repro.data.synthetic import snb_like
 
-    g, schema, _ = snb_like(seed=0, n_person=500, n_post=400,
-                            n_comment=3000 if small else 5000)
+    g, schema, _ = snb_like(seed=seed, n_person=500, n_post=400,
+                            n_comment=3000 if mode == "small" else 5000)
     sess = GraphSession(g, schema)
     q = "MATCH (c:Comment)-[:replyOf*..]->(p:Post)-[:hasTag]->(t:Tag) RETURN c, t"
     r_ori = sess.query(q, use_views=False)
@@ -163,7 +168,7 @@ def bench_profile(small: bool) -> None:
          f"dbhit_ratio={r_ori.metrics.db_hits/max(r_opt.metrics.db_hits,1):.1f}")
 
 
-def bench_wildcard(small) -> None:
+def bench_wildcard(mode: str, seed: int) -> None:
     """Wildcard 1-hop microbench (fig17-style): the compact all-base-edges
     index vs the full-arena masked scan it replaces, on an SNB-like graph
     with materialized views inflating the arena (the phantom-edge regime).
@@ -179,13 +184,12 @@ def bench_wildcard(small) -> None:
     from repro.core.schema import NO_LABEL
     from repro.data.synthetic import snb_like
 
-    mode = small if isinstance(small, str) else ("small" if small else "default")
     n_person, n_post, n_comment = {
         "small": (500, 400, 3000),
         "default": (1000, 800, 6000),
         "large": (2000, 1500, 12000),
     }[mode]
-    g, schema, _ = snb_like(seed=0, n_person=n_person, n_post=n_post,
+    g, schema, _ = snb_like(seed=seed, n_person=n_person, n_post=n_post,
                             n_comment=n_comment)
     sess = GraphSession(g, schema)
     wq = "MATCH (n:Person)-[r]->(m) RETURN n, m"
@@ -232,7 +236,7 @@ def bench_wildcard(small) -> None:
          f"pairs={res.num_pairs()};views={len(sess.views)}")
 
 
-def bench_plan_cache(small) -> None:
+def bench_plan_cache(mode: str, seed: int) -> None:
     """Repeated-query microbench (the compiled-plan headline number).
 
     A 3-hop rewritten query on an SNB-like graph with the workload's views
@@ -247,13 +251,12 @@ def bench_plan_cache(small) -> None:
     from repro.core.parser import parse_query
     from repro.data.synthetic import snb_like
 
-    mode = small if isinstance(small, str) else ("small" if small else "default")
     n_person, n_post, n_comment = {
         "small": (500, 400, 3000),
         "default": (1000, 800, 6000),
         "large": (2000, 1500, 12000),
     }[mode]
-    g, schema, _ = snb_like(seed=0, n_person=n_person, n_post=n_post,
+    g, schema, _ = snb_like(seed=seed, n_person=n_person, n_post=n_post,
                             n_comment=n_comment)
     sess = GraphSession(g, schema)
     for stmt in WORKLOADS["snb"].views:
@@ -311,7 +314,7 @@ def bench_plan_cache(small) -> None:
          f"plan_misses={sess.planner.plan_misses}")
 
 
-def bench_predicate(small) -> None:
+def bench_predicate(mode: str, seed: int) -> None:
     """Property-predicate microbench (the first-class-predicates headline).
 
     Three comparisons on a random two-hop property graph:
@@ -331,9 +334,8 @@ def bench_predicate(small) -> None:
 
     from repro.core import ExecConfig, GraphBuilder, GraphSchema, GraphSession
 
-    mode = small if isinstance(small, str) else ("small" if small else "default")
     n = {"small": 1200, "default": 2400, "large": 4800}[mode]
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     schema = GraphSchema()
     b = GraphBuilder(schema)
     for i in range(n):
@@ -414,15 +416,133 @@ def bench_predicate(small) -> None:
          f"dbhit_ratio={r_b.metrics.db_hits/max(r_v.metrics.db_hits,1):.1f}")
 
 
-def bench_kernels(small: bool) -> None:
+def bench_serve(mode: str, seed: int) -> None:
+    """Cross-query batched serving (the ServeEngine headline numbers).
+
+    Two group microbenches on an SNB-like graph with the workload's views
+    materialized, plus the mixed read/write serving replay:
+
+    * ``serve_point_group`` — B >= 32 same-fingerprint *point* clients
+      (each bound to its own Comment source) batched through the engine vs
+      the same B requests as sequential ``sess.query(q, sources=...)``
+      calls.  Sequential execution pads every client to a full
+      ``src_block`` frontier and launches its own program; the engine packs
+      all clients into shared blocks.  The acceptance bar (>= 3x) is
+      asserted here.
+    * ``serve_identical_group`` — 32 identical unbound reads: the engine
+      dedupes them to one plan execution.
+    * ``serve_mixed_workload`` — the paper workload replayed as a serving
+      stream with write fences (qps, occupancy, window stats).
+
+    Row/metric parity between the two paths is asserted per ticket in
+    ``tests/test_serve.py``; the mixed replay also self-checks cardinality
+    and DBHit/Rows per read.
+    """
+    from benchmarks.workload_driver import run_serve_workload
+    from repro.configs.mv4pg import WORKLOADS
+    from repro.core import GraphSession
+    from repro.data.synthetic import snb_like
+
+    n_person, n_post, n_comment = {
+        "small": (500, 400, 3000),
+        "default": (1000, 800, 6000),
+        "large": (2000, 1500, 12000),
+    }[mode]
+    g, schema, _ = snb_like(seed=seed, n_person=n_person, n_post=n_post,
+                            n_comment=n_comment)
+    sess = GraphSession(g, schema)
+    for stmt in WORKLOADS["snb"].views:
+        sess.create_view(stmt)
+    q = ("MATCH (c:Comment)-[:replyOf*..]->(p:Post)-[:hasTag]->(t:Tag) "
+         "RETURN c, t")
+    rng = np.random.default_rng(seed)
+    comments = np.flatnonzero(
+        np.asarray(sess.g.node_mask(schema.node_label_id("Comment"))))
+    B = 64
+    clients = [np.asarray([int(c)], np.int32)
+               for c in rng.choice(comments, size=B, replace=False)]
+
+    def timeit(fn, reps=3):
+        fn()   # warm: plan cache + XLA executables on both paths
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    # -- point-client group ----------------------------------------------
+    def seq_points():
+        for c in clients:
+            sess.query(q, sources=c)
+
+    def batch_points():
+        eng = sess.serve()
+        for c in clients:
+            eng.submit(q, sources=c)
+        return eng.run()
+
+    t_seq = timeit(seq_points)
+    t_batch = timeit(batch_points)
+    stats = batch_points()
+    speedup = t_seq / max(t_batch, 1e-12)
+    assert speedup >= 3.0, (
+        f"batched serving only {speedup:.2f}x over sequential for a "
+        f"{B}-query same-fingerprint group (bar: 3x)")
+    _row("serve_point_group", t_batch / B * 1e6,
+         f"qps={B/max(t_batch,1e-12):.0f};"
+         f"speedup_vs_sequential={speedup:.2f};B={B};"
+         f"seq_qps={B/max(t_seq,1e-12):.0f};"
+         f"blocks={stats.blocks};occupancy={stats.occupancy:.2f}")
+
+    # -- identical-query group -------------------------------------------
+    n_same = 32
+
+    def seq_same():
+        for _ in range(n_same):
+            sess.query(q)
+
+    def batch_same():
+        eng = sess.serve()
+        for _ in range(n_same):
+            eng.submit(q)
+        return eng.run()
+
+    t_seq2 = timeit(seq_same)
+    t_batch2 = timeit(batch_same)
+    stats2 = batch_same()
+    speedup2 = t_seq2 / max(t_batch2, 1e-12)
+    assert speedup2 >= 3.0, (
+        f"identical-query dedup only {speedup2:.2f}x (bar: 3x)")
+    _row("serve_identical_group", t_batch2 / n_same * 1e6,
+         f"qps={n_same/max(t_batch2,1e-12):.0f};"
+         f"speedup_vs_sequential={speedup2:.2f};B={n_same};"
+         f"executions={stats2.executions}")
+
+    # -- mixed read/write serving replay ---------------------------------
+    def make():
+        return snb_like(seed=seed, n_person=n_person, n_post=n_post,
+                        n_comment=n_comment)
+
+    rep = run_serve_workload(make, WORKLOADS["snb"],
+                             clients=8 if mode == "small" else 16,
+                             rounds=2 if mode == "small" else 3, seed=seed)
+    _row("serve_mixed_workload", rep.serve_s / max(rep.queries, 1) * 1e6,
+         f"qps={rep.qps:.0f};speedup_vs_sequential={rep.speedup:.2f};"
+         f"queries={rep.queries};windows={rep.windows};"
+         f"mean_group={rep.mean_group_size:.1f};"
+         f"occupancy={rep.occupancy:.2f}")
+
+
+def bench_kernels(mode: str, seed: int) -> None:
     """Microbenchmarks of the Pallas kernels vs their jnp oracles
     (interpret mode on CPU: correctness-path timing, not TPU perf)."""
     import jax
     import jax.numpy as jnp
     from repro.kernels import ops, ref
 
-    rng = np.random.default_rng(0)
-    S = 256 if small else 384
+    rng = np.random.default_rng(seed)
+    S = 256 if mode == "small" else 384
     F = jnp.asarray(rng.random((S, S)), jnp.float32)
     A = jnp.asarray((rng.random((S, S)) < 0.1).astype(np.float32))
 
@@ -443,7 +563,7 @@ def bench_kernels(small: bool) -> None:
     _row("kernel_flash_attention_interp", t_k * 1e6, f"ref_us={t_ref*1e6:.1f}")
 
 
-def bench_roofline(small: bool) -> None:
+def bench_roofline(mode: str, seed: int) -> None:
     path = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun_final.json")
     if not os.path.exists(path):
@@ -471,11 +591,13 @@ BENCHES = {
     "wildcard": bench_wildcard,
     "plan_cache": bench_plan_cache,
     "predicate": bench_predicate,
+    "serve": bench_serve,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }
 
-SMOKE_BENCHES = ("maintenance", "wildcard", "plan_cache", "predicate")
+SMOKE_BENCHES = ("maintenance", "wildcard", "plan_cache", "predicate",
+                 "serve")
 
 
 def main() -> None:
@@ -488,6 +610,9 @@ def main() -> None:
                     help="CI smoke run: --small sizes, "
                          f"{'+'.join(SMOKE_BENCHES)} only")
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed threaded through every target; "
+                         "committed baselines are seed-0 runs")
     ap.add_argument("--json-dir", type=str, default="results",
                     help="directory for machine-readable BENCH_<name>.json")
     args = ap.parse_args()
@@ -502,14 +627,12 @@ def main() -> None:
             continue
         t0 = time.time()
         first_row = len(_JSON_ROWS)
-        fn(mode if name in ("workloads", "maintenance", "wildcard",
-                            "plan_cache", "predicate")
-           else small)
+        fn(mode, args.seed)
         elapsed = time.time() - t0
         print(f"# {name} done in {elapsed:.1f}s", file=sys.stderr)
         with open(os.path.join(args.json_dir, f"BENCH_{name}.json"),
                   "w") as f:
-            json.dump({"bench": name, "mode": mode,
+            json.dump({"bench": name, "mode": mode, "seed": args.seed,
                        "elapsed_s": round(elapsed, 3),
                        "rows": _JSON_ROWS[first_row:]}, f, indent=2)
             f.write("\n")

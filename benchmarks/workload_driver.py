@@ -4,12 +4,21 @@ Per dataset: 7 read statements + 3 write statements (create edge / delete
 edge / delete node, each followed by a recover statement restoring the
 database), executed with and without materialized views.  Reads average over
 ``repeats`` runs (paper: 5); maintenance metrics come from the session.
+
+``--serve`` replays the same mixed read/write workload as a *serving
+stream* through :class:`~repro.serve.engine.ServeEngine` — many logical
+clients per read statement, write fences between rounds — and reports
+throughput (queries/s) plus group-occupancy stats::
+
+    PYTHONPATH=src python -m benchmarks.workload_driver --serve \
+        --dataset snb --small --clients 32 --rounds 3 --seed 0
 """
 from __future__ import annotations
 
+import argparse
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import numpy as np
@@ -71,7 +80,8 @@ def _write_targets(sess: GraphSession, rng):
     labels = np.asarray(sess.g.edge_label)[alive]
     base = alive[~np.isin(labels, list(view_lids))] if view_lids else alive
     eid = int(rng.choice(base))
-    src = int(sess.g.edge_src[eid]); dst = int(sess.g.edge_dst[eid])
+    src = int(sess.g.edge_src[eid])
+    dst = int(sess.g.edge_dst[eid])
     elabel = sess.schema.edge_labels.name_of(int(sess.g.edge_label[eid]))
     nodes = np.flatnonzero(np.asarray(sess.g.node_alive))
     nid = int(rng.choice(nodes))
@@ -146,7 +156,8 @@ def run_workload(g, schema, wl: WorkloadConfig, repeats: int = 3,
                    (np.asarray(sess.g.edge_src) == nid)
                    | (np.asarray(sess.g.edge_dst) == nid))
                if bool(sess.g.edge_alive[e])]
-        nlabel = int(sess.g.node_label[nid]); nkey = int(sess.g.node_key[nid])
+        nlabel = int(sess.g.node_label[nid])
+        nkey = int(sess.g.node_key[nid])
         t0 = time.perf_counter()
         sess.delete_node(nid)
         t_with = time.perf_counter() - t0
@@ -190,3 +201,200 @@ def run_workload(g, schema, wl: WorkloadConfig, repeats: int = 3,
     for vname in list(sess.views):
         assert sess.check_consistency(vname), f"{vname} inconsistent!"
     return report
+
+
+# ---------------------------------------------------------------------------
+# serving replay (--serve): the same workload as a many-client stream
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServeReport:
+    """Throughput + batching stats of one serving replay."""
+
+    dataset: str
+    queries: int               # read tickets served
+    windows: int
+    write_batches: int
+    serve_s: float             # wall time of the batched serve run
+    seq_s: float               # wall time of the per-query sequential replay
+    qps: float                 # queries / serve_s
+    speedup: float             # seq_s / serve_s (reads + writes)
+    mean_group_size: float
+    occupancy: float
+    executions: int            # unique bindings evaluated (after dedup)
+
+    def summary(self) -> str:
+        return (f"{self.dataset}: {self.queries} queries in "
+                f"{self.serve_s:.3f}s = {self.qps:.0f} q/s "
+                f"({self.speedup:.2f}x vs sequential {self.seq_s:.3f}s); "
+                f"windows={self.windows} writes={self.write_batches} "
+                f"mean_group={self.mean_group_size:.1f} "
+                f"occupancy={self.occupancy:.2f} "
+                f"executions={self.executions}")
+
+
+def _serve_script(sess: GraphSession, wl: WorkloadConfig, clients: int,
+                  rounds: int, rng) -> List[Tuple]:
+    """Ordered op stream: per round, every read statement is issued once
+    unbound plus once per client bound to a random start-label node; one
+    write fence (delete + re-create a base edge) closes each round.  All
+    targets are resolved against the *initial* graph, so the same script
+    replays identically on a twin session."""
+    from repro.core.parser import parse_query
+
+    n_alive = np.flatnonzero(np.asarray(sess.g.node_alive))
+    label_sources: Dict[str, np.ndarray] = {}
+    for q in wl.reads:
+        lbl = parse_query(q).path.start.label
+        if lbl not in label_sources:
+            lid = sess.schema.node_label_id(lbl)
+            ids = np.flatnonzero(np.asarray(sess.g.node_mask(lid)))
+            label_sources[lbl] = ids if ids.size else n_alive
+    # fences target base edges only: view edges are maintained state
+    alive_e = np.flatnonzero(np.asarray(sess.g.edge_alive))
+    lab = np.asarray(sess.g.edge_label)[alive_e]
+    view_lids = [v.label_id for v in sess.views.values()]
+    base_e = alive_e[~np.isin(lab, view_lids)] if view_lids else alive_e
+    fence_eids = rng.choice(base_e, size=rounds, replace=False)
+
+    # pre-parse once: both replay paths receive Query objects, so the
+    # serve-vs-sequential comparison times execution, not string parsing
+    parsed = {q: parse_query(q) for q in wl.reads}
+    ops: List[Tuple] = []
+    for r in range(rounds):
+        for q in wl.reads:
+            ops.append(("read", parsed[q], None))
+            pool = label_sources[parsed[q].path.start.label]
+            for _ in range(clients):
+                src = np.asarray([int(rng.choice(pool))], np.int32)
+                ops.append(("read", parsed[q], src))
+        eid = int(fence_eids[r])
+        u = int(sess.g.edge_src[eid])
+        v = int(sess.g.edge_dst[eid])
+        lbl = sess.schema.edge_labels.name_of(int(sess.g.edge_label[eid]))
+        # delete + logically re-create: the graph stays near its initial
+        # state while every fence still triggers real view maintenance
+        ops.append(("write", G.WriteBatch(edge_deletes=[eid])
+                    .create_edge(u, v, lbl), None))
+    return ops
+
+
+def run_serve_workload(make_dataset: Callable[[], Tuple], wl: WorkloadConfig,
+                       clients: int = 32, rounds: int = 3, seed: int = 0,
+                       cfg: ExecConfig | None = None) -> ServeReport:
+    """Replay the workload through the serve engine and sequentially on a
+    twin session; returns throughput and batching stats.
+
+    ``make_dataset`` must build identical ``(graph, schema, ...)`` twins on
+    every call (deterministic seed) — the sequential replay needs its own
+    session so write fences land on equal state.  Row parity is spot-checked
+    on result cardinality + DBHit/Rows per read (the exact row-for-row
+    oracle lives in ``tests/test_serve.py``).
+    """
+    rng = np.random.default_rng(seed)
+    ds = make_dataset()
+    sess = GraphSession(ds[0], ds[1], cfg or ExecConfig())
+    for vtext in wl.views:
+        sess.create_view(vtext)
+    ops = _serve_script(sess, wl, clients, rounds, rng)
+
+    # ---- batched serve run (timer covers submission + drain, so the
+    # two paths pay symmetric per-request overhead) ----------------------
+    eng = sess.serve()
+    tickets = []
+    t0 = time.perf_counter()
+    for kind, payload, src in ops:
+        tickets.append(eng.submit(payload, sources=src) if kind == "read"
+                       else eng.submit_writes(payload))
+    stats = eng.run()
+    serve_s = time.perf_counter() - t0
+
+    # ---- sequential replay on the twin ---------------------------------
+    ds2 = make_dataset()
+    sess2 = GraphSession(ds2[0], ds2[1], cfg or ExecConfig())
+    for vtext in wl.views:
+        sess2.create_view(vtext)
+    t0 = time.perf_counter()
+    seq = []
+    for kind, payload, src in ops:
+        if kind == "read":
+            r = sess2.query(payload, sources=src)
+            seq.append((r.num_results(), r.metrics.db_hits, r.metrics.rows))
+        else:
+            sess2.apply_writes(payload)
+            seq.append(None)
+    seq_s = time.perf_counter() - t0
+
+    for t, want in zip(tickets, seq):
+        if want is None:
+            continue
+        got = (t.result.num_results(), t.result.metrics.db_hits,
+               t.result.metrics.rows)
+        assert got == want, (
+            f"serve replay diverged from sequential on uid={t.uid}: "
+            f"{got} != {want}")
+    for vname in list(sess.views):
+        assert sess.check_consistency(vname), f"{vname} inconsistent!"
+
+    return ServeReport(
+        dataset=wl.name, queries=stats.queries, windows=stats.windows,
+        write_batches=stats.write_batches, serve_s=serve_s, seq_s=seq_s,
+        qps=stats.queries / serve_s if serve_s else 0.0,
+        speedup=seq_s / serve_s if serve_s else 0.0,
+        mean_group_size=stats.mean_group_size, occupancy=stats.occupancy,
+        executions=stats.executions)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    from repro.configs.mv4pg import WORKLOADS
+    from repro.data.synthetic import finbench_like, snb_like
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--serve", action="store_true",
+                    help="replay the workload through the ServeEngine")
+    ap.add_argument("--dataset", default="snb", choices=("snb", "finbench"))
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--clients", type=int, default=32,
+                    help="point clients per read statement per round")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="read windows (each closed by a write fence)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    scale = 0.25 if args.small else 0.4
+    if args.dataset == "snb":
+        def make():
+            return snb_like(seed=args.seed, n_person=int(2000 * scale),
+                            n_post=int(1500 * scale),
+                            n_comment=int(12000 * scale),
+                            n_place=60, n_tag=300)
+    else:
+        def make():
+            return finbench_like(seed=args.seed,
+                                 n_account=int(4000 * scale),
+                                 n_person=int(1500 * scale),
+                                 n_company=int(500 * scale),
+                                 n_loan=int(800 * scale))
+
+    wl = WORKLOADS[args.dataset]
+    if args.serve:
+        rep = run_serve_workload(make, wl, clients=args.clients,
+                                 rounds=args.rounds, seed=args.seed)
+        print(rep.summary())
+        return
+    g, schema, _ = make()
+    rep = run_workload(g, schema, wl, repeats=args.repeats, seed=args.seed)
+    for q in rep.queries:
+        print(f"{q.name}: ori={q.ori_s*1e3:.2f}ms opt={q.opt_s*1e3:.2f}ms "
+              f"speedup={q.speedup:.2f}")
+    print(f"workload: W_ori/W_opt={rep.workload_speedup:.2f} "
+          f"plan_hits={rep.plan_hits} plan_misses={rep.plan_misses}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,7 @@ evaluation: 3 views per dataset, 7 read + 3 write statements (CE/DE/DV).
 Benchmarks consume these; see benchmarks/bench_workload.py."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List
 
 

@@ -1,8 +1,8 @@
 """Assigned input-shape sets, one per architecture family (the 40 cells)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Tuple
 
 
 @dataclass(frozen=True)

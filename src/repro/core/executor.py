@@ -23,7 +23,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -123,9 +123,28 @@ def _hop_cost(F, deg):
 
 
 @jax.jit
+def _hop_cost_per_source(F, deg):
+    """Per-frontier-row DBHit vector: ``_hop_cost`` split over the block.
+
+    Rows of a serving batch belong to different queries, so the compiled
+    plans accumulate a ``[blk]`` cost vector device-side and attribute it
+    per query after the sync; summing the vector reproduces ``_hop_cost``
+    exactly (same int32 dot products, summed in a different order)."""
+    active = (F > 0).astype(jnp.int32) if F.dtype != jnp.bool_ else F.astype(jnp.int32)
+    return 2 * (active @ deg.astype(jnp.int32))
+
+
+@jax.jit
 def _active_rows(F):
     active = F > 0 if F.dtype != jnp.bool_ else F
     return jnp.sum(active.astype(jnp.int32))
+
+
+@jax.jit
+def _active_rows_per_source(F):
+    """Per-frontier-row Rows vector (`_active_rows` split over the block)."""
+    active = F > 0 if F.dtype != jnp.bool_ else F
+    return jnp.sum(active.astype(jnp.int32), axis=1)
 
 
 def _dense_adjacency(g: PropertyGraph, m: jax.Array, counting: bool,
@@ -205,7 +224,7 @@ class ExecEngine:
             self._adj_cache.clear()
             self._count_cache.clear()
             return
-        touched = {int(l) for l in touched_edge_labels}
+        touched = {int(lid) for lid in touched_edge_labels}
         touches_base = bool(touched - self.schema.view_edge_ids)
         self.epochs.bump(touched, touches_base=touches_base)
 
@@ -299,9 +318,13 @@ class ExecEngine:
         n = src.shape[0]
         cap = max(round_up(n, 512), 512)
         pad = np.zeros(cap, np.int32)
-        src_p = pad.copy(); dst_p = pad.copy(); w_p = pad.copy()
+        src_p = pad.copy()
+        dst_p = pad.copy()
+        w_p = pad.copy()
         mask = np.zeros(cap, bool)
-        src_p[:n] = src; dst_p[:n] = dst; w_p[:n] = w
+        src_p[:n] = src
+        dst_p[:n] = dst
+        w_p[:n] = w
         mask[:n] = True
         return (jnp.asarray(src_p), jnp.asarray(dst_p), jnp.asarray(w_p),
                 jnp.asarray(mask))

@@ -10,7 +10,7 @@ clause references them.
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import List, Optional, Tuple
 
 from repro.utils import INF_HOPS

@@ -76,8 +76,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import (
-    ExecConfig, ExecEngine, Metrics, ReachResult, _active_rows, _hop_cost,
-    _hop_dense, _hop_segment,
+    ExecConfig, ExecEngine, Metrics, ReachResult, _active_rows_per_source,
+    _hop_cost_per_source, _hop_dense, _hop_segment,
 )
 from repro.core.graph import node_pred_mask
 from repro.core.parser import query_fingerprint
@@ -255,7 +255,12 @@ class CompiledPlan:
         carries the node property columns FilterStep predicates read (ordered
         as ``self._nprop_names``); operands is a tuple (one entry per expand
         step) of per-direction array tuples.
-        Returns (F, db_hits, rows, converged).
+        Returns (F, db_hits[blk], rows[blk], converged): metrics accumulate
+        as **per-row** int32 vectors so a serving batch that packs rows from
+        many queries into one block can attribute DBHit/Rows per query after
+        the sync; summing a row range reproduces the scalar accumulation of
+        the unfused executor exactly (padding and foreign rows contribute
+        independently, and every hop kernel is row-local).
         """
         counting = self.counting
         collect = self.cfg.collect_metrics
@@ -269,8 +274,8 @@ class CompiledPlan:
         else:
             F = jnp.zeros((blk, N), bool).at[
                 jnp.arange(blk), cols].max(valid)
-        db = jnp.int32(0)
-        rows = jnp.int32(0)
+        db = jnp.zeros(blk, jnp.int32)
+        rows = jnp.zeros(blk, jnp.int32)
         ok = jnp.bool_(True)
 
         def hop(Fc, step_ops, backend, reverses, db, rows):
@@ -278,7 +283,8 @@ class CompiledPlan:
             out = None
             for rev, arrs in zip(reverses, step_ops):
                 if collect:
-                    db = db + _hop_cost(Fc, arrs[-1])   # deg is last operand
+                    # deg is the last operand of every backend's tuple
+                    db = db + _hop_cost_per_source(Fc, arrs[-1])
                 if backend == "segment":
                     esrc, edst, ew, emask, _ = arrs
                     nxt = _hop_segment(Fc, esrc, edst, emask, ew,
@@ -296,7 +302,7 @@ class CompiledPlan:
                 out = nxt if out is None else (
                     out + nxt if counting else out | nxt)
             if collect:
-                rows = rows + _active_rows(out)
+                rows = rows + _active_rows_per_source(out)
             return out, db, rows
 
         op_i = 0
@@ -380,23 +386,53 @@ class CompiledPlan:
 
     # -- execution ---------------------------------------------------------
 
-    def execute(self) -> ReachResult:
-        """Run the fused program over blocked sources; one metric sync."""
+    def default_sources(self) -> np.ndarray:
+        """Source node ids selected by the plan's start constraints
+        (label, primary key, predicates) on the *current* graph."""
         g = self.engine.g
         src_mask = g.node_mask(self.start_label_id, self.start_key)
         if self.start_preds:
             src_mask = src_mask & node_pred_mask(g, self.start_preds)
-        sources = np.flatnonzero(np.asarray(src_mask)).astype(np.int32)
-        S = sources.shape[0]
+        return np.flatnonzero(np.asarray(src_mask)).astype(np.int32)
+
+    def execute(self, sources: Optional[np.ndarray] = None) -> ReachResult:
+        """Run the fused program over blocked sources; one metric sync.
+
+        ``sources`` overrides start-node selection with an explicit id array
+        (the :meth:`~repro.core.executor.PathExecutor.run_path` contract:
+        caller-owned sources skip the start label/key/predicate filter)."""
+        if sources is None:
+            sources = self.default_sources()
+        return self.execute_batch([np.asarray(sources, np.int32)])[0]
+
+    def execute_batch(self, source_lists: Sequence[np.ndarray]
+                      ) -> List[ReachResult]:
+        """Run *many* same-plan queries as one stacked frontier batch.
+
+        Each entry of ``source_lists`` is one logical query's source-id
+        array; all rows are packed back-to-back into shared ``[blk, N]``
+        frontier blocks (instead of padding every query to its own block)
+        and the fused program runs once per *shared* block — the serving
+        engine's cross-query batching.  Per-row DBHit/Rows vectors come back
+        from the device, so each query's :class:`Metrics` is exactly what a
+        solo :meth:`execute` would have reported: every kernel in the trace
+        is row-local, and padding rows contribute zero to both counters.
+        One host sync per batch.
+        """
+        g = self.engine.g
+        counts = [int(np.asarray(s).shape[0]) for s in source_lists]
+        R = sum(counts)
         blk = self.cfg.src_block
-        S_pad = max(round_up(S, blk), blk)
-        padded = np.full(S_pad, -1, np.int32)
-        padded[:S] = sources
+        R_pad = max(round_up(R, blk), blk)
+        padded = np.full(R_pad, -1, np.int32)
+        if R:
+            padded[:R] = np.concatenate(
+                [np.asarray(s, np.int32) for s in source_lists])
         operands = self._gather_operands()
         nprops = tuple(g.node_prop_col(name) for name in self._nprop_names)
 
         out_rows, db_parts, row_parts, ok_parts = [], [], [], []
-        for b0 in range(0, S_pad, blk):
+        for b0 in range(0, R_pad, blk):
             F, db, rows, ok = self._fn(
                 jnp.asarray(padded[b0:b0 + blk]), g.node_label, g.node_key,
                 g.node_alive, nprops, operands)
@@ -405,15 +441,24 @@ class CompiledPlan:
             row_parts.append(rows)
             ok_parts.append(ok)
         reach = np.concatenate(
-            [np.asarray(F) for F in out_rows], axis=0)[:S].astype(np.int32)
+            [np.asarray(F) for F in out_rows], axis=0)[:R].astype(np.int32)
+        db_vec = np.concatenate([np.asarray(d) for d in db_parts])[:R]
+        rows_vec = np.concatenate([np.asarray(r) for r in row_parts])[:R]
         if not all(bool(np.asarray(o)) for o in ok_parts):
             raise RuntimeError(
                 "closure did not converge within max_closure_iters")
-        metrics = Metrics(
-            db_hits=S + int(np.asarray(sum(db_parts))),
-            rows=S + int(np.asarray(sum(row_parts))))
-        return ReachResult(src_ids=sources, reach=reach,
-                           counting=self.counting, metrics=metrics)
+        results: List[ReachResult] = []
+        off = 0
+        for srcs, S in zip(source_lists, counts):
+            metrics = Metrics(
+                db_hits=S + int(db_vec[off:off + S].sum()),
+                rows=S + int(rows_vec[off:off + S].sum()))
+            results.append(ReachResult(
+                src_ids=np.asarray(srcs, np.int32),
+                reach=reach[off:off + S], counting=self.counting,
+                metrics=metrics))
+            off += S
+        return results
 
 
 # ---------------------------------------------------------------------------

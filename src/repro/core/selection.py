@@ -19,7 +19,7 @@ cost model:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.executor import ExecConfig, ExecEngine, PathExecutor
 from repro.core.matcher import match_view

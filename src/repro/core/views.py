@@ -38,7 +38,7 @@ from repro.core.maintenance import (
     batch_edge_delta_pairs,
 )
 from repro.core.parser import parse_query, parse_view
-from repro.core.pattern import PathPattern, Query, ViewDef
+from repro.core.pattern import Query, ViewDef
 from repro.core.plan import QueryPlanner
 from repro.core.schema import GraphSchema
 
@@ -248,9 +248,12 @@ class GraphSession:
                 upd_slots.append(slot)
                 upd_delta.append(w)
             elif w > 0:
-                slot = int(free[free_i]); free_i += 1
+                slot = int(free[free_i])
+                free_i += 1
                 add_slots.append(slot)
-                add_src.append(key[0]); add_dst.append(key[1]); add_w.append(w)
+                add_src.append(key[0])
+                add_dst.append(key[1])
+                add_w.append(w)
                 view.pair_slot[key] = slot
             # w<0 on a missing pair is only reachable in batches where a node
             # delete already killed the pair's arena edge; skipping is exact
@@ -270,7 +273,8 @@ class GraphSession:
             w = np.asarray(self.g.edge_weight)[np.asarray(upd_slots)]
             for slot, wv in zip(upd_slots, w):
                 if wv <= 0:
-                    s = int(self.g.edge_src[slot]); d = int(self.g.edge_dst[slot])
+                    s = int(self.g.edge_src[slot])
+                    d = int(self.g.edge_dst[slot])
                     view.pair_slot.pop((s, d), None)
         view.stats.e_vl = len(view.pair_slot)
 
@@ -463,8 +467,8 @@ class GraphSession:
                 g2, len(batch.node_creates))
             g2n = G.create_nodes(
                 g2, created_nodes,
-                np.asarray([self.schema.node_labels.intern(l)
-                            for l, _ in batch.node_creates], np.int32),
+                np.asarray([self.schema.node_labels.intern(lbl)
+                            for lbl, _ in batch.node_creates], np.int32),
                 np.asarray([int(created_nodes[i]) if k is None else int(k)
                             for i, (_, k) in enumerate(batch.node_creates)],
                            np.int32))
@@ -483,7 +487,7 @@ class GraphSession:
             inc = e_alive2 & (dead[np.asarray(g2n.edge_src)]
                               | dead[np.asarray(g2n.edge_dst)])
             incident_labels = set(
-                int(l) for l in np.unique(np.asarray(g2n.edge_label)[inc]))
+                int(lid) for lid in np.unique(np.asarray(g2n.edge_label)[inc]))
             g3 = G.delete_nodes(g2n, node_del)
 
         if g3 is g0 and not batch.node_creates:
@@ -771,19 +775,33 @@ class GraphSession:
 
     # -------------------------------------------------------------- queries
 
-    def query(self, q: Union[str, Query], use_views: Optional[bool] = None
-              ) -> ReachResult:
+    def query(self, q: Union[str, Query], use_views: Optional[bool] = None,
+              sources: Optional[np.ndarray] = None) -> ReachResult:
         """Compile-once read path: fingerprint → memoized Algorithm-3 rewrite
         → cached physical plan → one fused device program (core/plan.py).
         ``last_rewrite_seconds`` is the rewrite time paid by *this* call —
-        0.0 whenever the plan or rewrite cache hits."""
+        0.0 whenever the plan or rewrite cache hits.
+
+        ``sources`` restricts evaluation to an explicit source-id array (the
+        per-client binding a serving workload carries); like
+        :meth:`~repro.core.executor.PathExecutor.run_path`, explicit sources
+        skip the start node's label/key/predicate filter — the caller owns
+        the binding."""
         if isinstance(q, str):
             q = parse_query(q)
         use = self.auto_optimize if use_views is None else use_views
         views = list(self.views.values()) if (use and self.views) else []
         plan, self.last_rewrite_seconds = self.planner.plan(
             q, views, self.view_set_generation)
-        return plan.execute()
+        return plan.execute(sources=sources)
+
+    # ------------------------------------------------------------- serving
+
+    def serve(self):
+        """A :class:`~repro.serve.engine.ServeEngine` bound to this session:
+        cross-query batched reads with epoch-fenced writes (DESIGN.md §9)."""
+        from repro.serve.engine import ServeEngine
+        return ServeEngine(self)
 
     # ------------------------------------------------------------ integrity
 

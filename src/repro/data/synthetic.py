@@ -13,7 +13,6 @@ reply trees, clustered transfer rings).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Tuple
 
 import numpy as np

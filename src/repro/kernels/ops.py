@@ -1,7 +1,6 @@
 """jit'd public wrappers around the Pallas kernels (+ layout preparation)."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models.transformer import init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.llm import Request, ServeEngine
 
 
 def main() -> None:

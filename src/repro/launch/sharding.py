@@ -9,7 +9,7 @@ replicated across pods; gradients reduce over DCN once per step).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

@@ -7,7 +7,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -283,10 +283,8 @@ def _gnn_model_flops(arch_id: str, cfg, N: int, E: int, T: int = 0) -> float:
 
 def gnn_cell(arch_id: str, shape: GNNShape, shape_name: str, mesh: Mesh
              ) -> LoweringCell:
-    spec = get_arch(arch_id)
     pad = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     pad = max(pad, 512)
-    geometric = arch_id in ("nequip", "mace", "dimenet")
     ocfg = opt.AdamWConfig()
 
     if arch_id == "pna":
@@ -406,7 +404,6 @@ def recsys_cell(arch_id: str, shape: RecsysShape, shape_name: str, mesh: Mesh
                                                     cfg))
     pshard = _shard_like(params_sds, mesh)
     L = cfg.hist_len
-    flops_base = 2.0 * cfg.embed_dim * cfg.n_interests
 
     if shape.kind == "train":
         import dataclasses

@@ -68,7 +68,6 @@ def forward(params: Params, gb: GraphBatch, cfg: DimeNetConfig,
     """triplets: (t_in, t_out, t_mask) from build_triplets; required."""
     assert gb.positions is not None, "DimeNet needs positions"
     t_in, t_out, t_mask = triplets
-    n = gb.n_nodes
     src, dst = gb.edge_src, gb.edge_dst
     pos = gb.positions.astype(cfg.dtype)
     d_vec = pos[dst] - pos[src]

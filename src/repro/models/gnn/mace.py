@@ -9,7 +9,7 @@ many-body terms that deep 2-body nets need depth for.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,12 +10,12 @@ rotation-invariant; forces (-dE/dpos) are exactly equivariant (tested).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import Params, dense, dense_init, mlp, mlp_init
+from repro.models.common import Params, mlp, mlp_init
 from repro.models.gnn.graphdata import GraphBatch
 from repro.models.gnn.irreps import (
     IrrepFeat, gate, irrep_linear, irrep_linear_init, norm_squared,

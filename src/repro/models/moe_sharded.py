@@ -22,7 +22,7 @@ transposes, so the backward pass emits the mirrored collective schedule.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,7 +87,6 @@ def moe_apply_sharded(p: Params, x: jax.Array, cfg: MoEConfig, mesh,
         dp *= mesh.shape[a]
     mp = mesh.shape[model_axis]
     assert E % mp == 0, (E, mp)
-    E_l = E // mp
     T_l = (B // dp) * S
     assert T_l % mp == 0, (T_l, mp)
     T_loc = T_l // mp

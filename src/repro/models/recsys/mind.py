@@ -11,7 +11,7 @@ maintained by the MV4PG engine — see configs/mind.py and the views demo.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

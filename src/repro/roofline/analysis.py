@@ -16,7 +16,7 @@ ICI (per the assignment).
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 HW = {

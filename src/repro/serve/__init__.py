@@ -1,1 +1,7 @@
-"""Serving runtime: continuous-batching decode engine + KV cache manager."""
+"""Serving runtime.
+
+``repro.serve.engine`` — the graph-query serving engine: cross-query
+batched reads grouped by plan fingerprint, with epoch-fenced writes
+(DESIGN.md §9).  ``repro.serve.llm`` — the continuous-batching decode
+engine + KV cache manager for the transformer stack.
+"""

@@ -1,108 +1,230 @@
-"""Batched serving engine: prefill + continuous-batching decode.
+"""Cross-query batched serving engine for graph reads (DESIGN.md §9).
 
-Fixed B decode slots; finished sequences (EOS or max length) are evicted and
-their slots refilled from the pending queue without stalling the other
-slots — a continuous-batching loop in the vLLM sense, expressed with
-shape-stable jitted steps (slot refill is a masked cache write, not a
-reshape).  The long_500k shape uses the sequence-sharded cache + split-KV
-combine from models/attention.py at the distribution layer.
+A production deployment of MV4PG serves *many logical clients at once*:
+thousands of concurrent ``MATCH`` requests that hash to a handful of plan
+fingerprints (the same amortization bet the paper makes about data work and
+``core/plan.py`` makes about compilation).  The per-query read path still
+executes each request alone — every call pads its sources to a full
+``src_block`` frontier and launches its own device program.  The
+:class:`ServeEngine` closes that gap:
+
+* **Fingerprint grouping** — submitted reads are grouped by their
+  :class:`~repro.core.pattern.QueryFingerprint` (+ the effective use-views
+  flag), so every group shares one :class:`~repro.core.plan.CompiledPlan`.
+* **Stacked execution** — each group runs as **one** jitted program over a
+  stacked ``[blk, node_cap]`` source-frontier batch
+  (:meth:`CompiledPlan.execute_batch`): the rows of all the group's queries
+  pack back-to-back into shared blocks instead of each query padding its
+  own.  Per-row DBHit/Rows vectors accumulate device-side and are
+  attributed per query after **one sync per group**, so every ticket's
+  result is row-for-row and metric-exact what a solo
+  :meth:`GraphSession.query` call returns.
+* **Request dedup** — tickets in a group with the same source binding
+  (including the default "all qualifying start nodes" binding) share a
+  single execution; 32 identical dashboard queries cost one program run.
+* **Epoch-fenced writes** — the submission queue is processed in order as
+  alternating *batch windows* (maximal runs of reads) and *write fences*
+  (:class:`~repro.core.graph.WriteBatch` es).  All reads of a window
+  evaluate against one engine snapshot — no write lands mid-window, so
+  view maintenance and label-epoch invalidation (``apply_writes``) keep
+  their single-writer contract under interleaved traffic; a read submitted
+  after a write is guaranteed to observe it.  ``epoch`` counts applied
+  fences; plans revalidate per window through the session plan cache's
+  existing epoch machinery (node-arena growth between windows forces the
+  usual full invalidation and recompile).
 """
 from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Tuple, Union
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models import transformer as tfm
+from repro.core import graph as G
+from repro.core.executor import ReachResult
+from repro.core.parser import parse_query, query_fingerprint
+from repro.core.pattern import Query, QueryFingerprint
+from repro.utils import round_up
+
+if TYPE_CHECKING:  # pragma: no cover - typing only (avoids an import cycle)
+    from repro.core.views import BatchResult, GraphSession
 
 
 @dataclass
-class Request:
+class ServeTicket:
+    """One submitted request; filled in when its window executes."""
+
     uid: int
-    prompt: np.ndarray               # [L] int32
-    max_new_tokens: int = 32
-    output: List[int] = field(default_factory=list)
-    done: bool = False
+    kind: str                                  # "read" | "write"
+    query: Optional[Query] = None
+    use_views: Optional[bool] = None           # None: session auto_optimize
+    sources: Optional[np.ndarray] = None       # explicit source binding
+    batch: Optional[G.WriteBatch] = None       # write fences only
+    result: Optional[ReachResult] = None
+    write_result: Optional["BatchResult"] = None
+    window: int = -1                           # epoch the ticket ran in
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None or self.write_result is not None
+
+
+@dataclass
+class ServeStats:
+    """Cumulative serving counters (the workload driver reports these)."""
+
+    windows: int = 0           # batch windows executed
+    write_batches: int = 0     # fences applied
+    queries: int = 0           # read tickets answered
+    groups: int = 0            # (fingerprint, use_views) groups executed
+    executions: int = 0        # unique source bindings actually evaluated
+    rows: int = 0              # frontier rows packed into shared blocks
+    blocks: int = 0            # fused device-program invocations
+    block_capacity: int = 0    # blocks * src_block (row slots available)
+    group_sizes: List[int] = field(default_factory=list)
+
+    @property
+    def mean_group_size(self) -> float:
+        """Queries per group — the cross-query amortization factor."""
+        return self.queries / self.groups if self.groups else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Packed-row fraction of the launched frontier blocks."""
+        return self.rows / self.block_capacity if self.block_capacity else 0.0
+
+    def summary(self) -> str:
+        return (f"windows={self.windows} queries={self.queries} "
+                f"groups={self.groups} executions={self.executions} "
+                f"mean_group={self.mean_group_size:.1f} "
+                f"occupancy={self.occupancy:.2f} blocks={self.blocks} "
+                f"writes={self.write_batches}")
 
 
 class ServeEngine:
-    """Greedy-decoding engine with slot-based continuous batching."""
+    """Batched read serving + epoch-fenced writes over one
+    :class:`~repro.core.views.GraphSession`.
 
-    def __init__(self, params, cfg: tfm.TransformerConfig, batch_slots: int,
-                 max_len: int, eos_id: int = 0):
-        self.params = params
-        self.cfg = cfg
-        self.B = batch_slots
-        self.max_len = max_len
-        self.eos = eos_id
-        self.cache = tfm.init_kv_cache(cfg, batch_slots, max_len)
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
-        self.slot_budget = np.zeros(batch_slots, np.int64)
-        self.pending: collections.deque[Request] = collections.deque()
-        self._decode = jax.jit(
-            lambda p, t, c: tfm.decode_step(p, t, c, cfg))
-        self._prefill1 = jax.jit(
-            lambda p, t: tfm.prefill(p, t, cfg, max_len))
+    Usage::
 
-    # ------------------------------------------------------------- plumbing
+        eng = sess.serve()
+        tickets = [eng.submit(q, sources=np.array([c])) for c in clients]
+        eng.submit_writes(WriteBatch().create_edge(u, v, "knows"))
+        after = eng.submit(q)        # sees the write: later window
+        eng.run()                    # drain; tickets now carry results
+    """
 
-    def submit(self, req: Request) -> None:
-        self.pending.append(req)
+    def __init__(self, session: "GraphSession"):
+        self.sess = session
+        self.epoch = 0                     # completed write fences
+        self.stats = ServeStats()
+        self._queue: Deque[ServeTicket] = collections.deque()
+        self._uid = 0
 
-    def _fill_slots(self) -> None:
-        for s in range(self.B):
-            if self.slot_req[s] is not None or not self.pending:
-                continue
-            req = self.pending.popleft()
-            logits, cache1 = self._prefill1(self.params,
-                                            req.prompt[None, :])
-            # splice the single-sequence cache into slot s
-            for key in ("k", "v"):
-                self.cache[key] = self.cache[key].at[:, s].set(cache1[key][:, 0])
-            self.cache["len"] = self.cache["len"].at[s].set(
-                int(cache1["len"][0]))
-            tok = int(jnp.argmax(logits[0]))
-            req.output.append(tok)
-            self.slot_req[s] = req
-            self.slot_budget[s] = req.max_new_tokens - 1
+    # -------------------------------------------------------------- submit
 
-    def _evict_finished(self) -> None:
-        for s, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            if (req.output and req.output[-1] == self.eos) \
-                    or self.slot_budget[s] <= 0 \
-                    or int(self.cache["len"][s]) >= self.max_len - 1:
-                req.done = True
-                self.slot_req[s] = None
-                self.cache["len"] = self.cache["len"].at[s].set(0)
+    def submit(self, q: Union[str, Query], use_views: Optional[bool] = None,
+               sources: Optional[np.ndarray] = None) -> ServeTicket:
+        """Enqueue one read; returns its ticket (result filled by ``run``).
+
+        ``sources`` is the per-client binding: an explicit source-id array
+        evaluated under the :meth:`GraphSession.query` ``sources=`` contract
+        (caller-owned; skips the start-node filter)."""
+        if isinstance(q, str):
+            q = parse_query(q)
+        t = ServeTicket(
+            uid=self._next_uid(), kind="read", query=q, use_views=use_views,
+            sources=None if sources is None
+            else np.asarray(sources, np.int32))
+        self._queue.append(t)
+        return t
+
+    def submit_writes(self, batch: G.WriteBatch) -> ServeTicket:
+        """Enqueue a write fence: every read submitted before it runs
+        against the pre-write snapshot, every read after it sees the write
+        (and the view maintenance it triggered)."""
+        t = ServeTicket(uid=self._next_uid(), kind="write", batch=batch)
+        self._queue.append(t)
+        return t
+
+    def _next_uid(self) -> int:
+        self._uid += 1
+        return self._uid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
 
     # ----------------------------------------------------------------- run
 
-    def step(self) -> int:
-        """One engine iteration; returns number of active slots."""
-        self._evict_finished()
-        self._fill_slots()
-        active = [s for s, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return 0
-        tokens = np.zeros(self.B, np.int32)
-        for s in active:
-            tokens[s] = self.slot_req[s].output[-1]
-        logits, self.cache = self._decode(self.params,
-                                          jnp.asarray(tokens), self.cache)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for s in active:
-            self.slot_req[s].output.append(int(nxt[s]))
-            self.slot_budget[s] -= 1
-        return len(active)
+    def run(self) -> ServeStats:
+        """Drain the queue: alternate batch windows and write fences in
+        submission order.  Returns the engine's cumulative stats."""
+        while self._queue:
+            reads: List[ServeTicket] = []
+            while self._queue and self._queue[0].kind == "read":
+                reads.append(self._queue.popleft())
+            if reads:
+                self._run_window(reads)
+            if self._queue and self._queue[0].kind == "write":
+                t = self._queue.popleft()
+                t.write_result = self.sess.apply_writes(t.batch)
+                t.window = self.epoch
+                self.epoch += 1
+                self.stats.write_batches += 1
+        return self.stats
 
-    def run_to_completion(self, max_iters: int = 10_000) -> None:
-        for _ in range(max_iters):
-            if self.step() == 0 and not self.pending:
-                return
-        raise RuntimeError("serve loop did not drain")
+    # -------------------------------------------------------------- window
+
+    def _group_key(self, t: ServeTicket) -> Tuple[QueryFingerprint, bool]:
+        """Plan identity of a read *at window time* (the view catalog may
+        have changed since submission, so use-views resolves here)."""
+        use = (self.sess.auto_optimize if t.use_views is None
+               else t.use_views)
+        return (query_fingerprint(t.query, self.sess.schema),
+                bool(use and self.sess.views))
+
+    def _run_window(self, reads: List[ServeTicket]) -> None:
+        """Execute one batch window against the current engine snapshot."""
+        sess = self.sess
+        st = self.stats
+        g_before = sess.g
+        groups: Dict[Tuple[QueryFingerprint, bool], List[ServeTicket]] = {}
+        for t in reads:
+            groups.setdefault(self._group_key(t), []).append(t)
+        for (_, use), tickets in groups.items():
+            views = list(sess.views.values()) if use else []
+            plan, _ = sess.planner.plan(tickets[0].query, views,
+                                        sess.view_set_generation)
+            # dedupe tickets by source binding: None = the plan's default
+            # start-constraint selection, shared by every unbound ticket
+            spec_idx: Dict[Optional[bytes], int] = {}
+            spec_sources: List[np.ndarray] = []
+            ticket_spec: List[int] = []
+            for t in tickets:
+                key = None if t.sources is None else t.sources.tobytes()
+                idx = spec_idx.get(key)
+                if idx is None:
+                    idx = len(spec_sources)
+                    spec_idx[key] = idx
+                    spec_sources.append(plan.default_sources()
+                                        if t.sources is None else t.sources)
+                ticket_spec.append(idx)
+            results = plan.execute_batch(spec_sources)
+            for t, idx in zip(tickets, ticket_spec):
+                t.result = results[idx]
+                t.window = self.epoch
+            rows = sum(int(s.shape[0]) for s in spec_sources)
+            blk = plan.cfg.src_block
+            rows_pad = max(round_up(rows, blk), blk)
+            st.groups += 1
+            st.queries += len(tickets)
+            st.executions += len(spec_sources)
+            st.rows += rows
+            st.blocks += rows_pad // blk
+            st.block_capacity += rows_pad
+            st.group_sizes.append(len(tickets))
+        # reads are pure: the window ran against one engine snapshot
+        assert sess.g is g_before, "a read mutated the session graph"
+        st.windows += 1

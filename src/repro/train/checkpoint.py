@@ -14,8 +14,7 @@ import json
 import os
 import shutil
 import threading
-import time
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np

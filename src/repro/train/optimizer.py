@@ -8,10 +8,8 @@ memory reduction; used for the 235B-param MoE cell (see EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,6 @@ reduction in shard_map with int8 + error feedback.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

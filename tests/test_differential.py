@@ -10,9 +10,15 @@ re-derivation after every batch.
 
 Deterministic numpy randomization (no hypothesis dependency — the optional
 hypothesis variant of the maintenance property lives in
-``test_maintenance_property.py``); the three seeds below drive >= 200
+``test_maintenance_property.py``); the default three seeds drive >= 200
 workload steps total, the acceptance bar for this oracle.
+
+``DIFF_SEEDS`` / ``DIFF_STEPS`` environment knobs scale the oracle up for
+the scheduled CI deep lane (e.g. ``DIFF_SEEDS=10 DIFF_STEPS=210`` is 10x
+the PR-CI work) without slowing every pull-request run.
 """
+import os
+
 import numpy as np
 import pytest
 
@@ -44,7 +50,9 @@ QUERIES = [
 ]
 
 N_NODES = 9
-STEPS = 70          # x 3 seeds = 210 differential steps (bar: >= 200)
+N_SEEDS = int(os.environ.get("DIFF_SEEDS", "3"))
+STEPS = int(os.environ.get("DIFF_STEPS", "70"))
+# defaults: 3 seeds x 70 steps = 210 differential steps (bar: >= 200)
 
 
 def _pairs(res):
@@ -102,7 +110,7 @@ def _random_batch(rng, alive_nodes, alive_edges):
     return batch
 
 
-@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("seed", range(N_SEEDS))
 def test_differential_workload_oracle(seed):
     rng = np.random.default_rng(seed)
     g, schema, base_eids = _build(rng)
@@ -150,5 +158,6 @@ def test_differential_workload_oracle(seed):
 
 
 def test_differential_covers_required_step_count():
-    """210 = 3 seeds x 70 steps; the oracle's acceptance bar is >= 200."""
-    assert 3 * STEPS >= 200
+    """Default 210 = 3 seeds x 70 steps; the oracle's bar is >= 200.  The
+    env knobs may only scale the oracle *up* (the deep-lane contract)."""
+    assert N_SEEDS * STEPS >= 200

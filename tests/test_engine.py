@@ -134,7 +134,6 @@ def test_apply_writes_mixed_creates_deletes_consistent():
 
 
 def test_apply_writes_equivalent_to_looped_single_ops():
-    batch = None
     results = {}
     for mode in ("looped", "batched"):
         sess = _toy_session()
@@ -151,8 +150,8 @@ def test_apply_writes_equivalent_to_looped_single_ops():
             # batch order contract: deletes first, then creates
             for eid in deletes:
                 sess.delete_edge(eid)
-            for s, d, l in creates:
-                sess.create_edge(s, d, l)
+            for s, d, lbl in creates:
+                sess.create_edge(s, d, lbl)
         else:
             sess.apply_writes(WriteBatch(edge_creates=creates,
                                          edge_deletes=deletes))
@@ -216,7 +215,8 @@ def test_create_edge_grows_full_arena():
     """Micro-fix: session create_edge grows the arena instead of raising."""
     schema = GraphSchema()
     b = GraphBuilder(schema)
-    a = b.add_node("A"); c = b.add_node("B")
+    a = b.add_node("A")
+    c = b.add_node("B")
     for _ in range(128):
         b.add_edge(a, c, "x")
     sess = GraphSession(b.finalize(edge_cap=128), schema)

@@ -4,7 +4,6 @@ import pytest
 
 from repro.core import ExecConfig, GraphBuilder, GraphSchema, PathExecutor
 from repro.core.parser import parse_query
-from repro.utils import INF_HOPS
 
 
 def random_graph(rng, n=12, p=0.25, nlabels=("A", "B"), elabels=("x", "y")):
@@ -70,7 +69,6 @@ def oracle_reach_unbounded(A, sources, lo, n, iters=64):
 def test_bounded_counts_match_oracle(seed, backend):
     rng = np.random.default_rng(seed)
     g, schema, labels, edges = random_graph(rng)
-    n = len(labels)
     ex = PathExecutor(g, schema, ExecConfig(backend=backend, src_block=16))
     q = parse_query("MATCH (a:A)-[:x*1..3]->(b:B) RETURN a, b")
     res = ex.run_query(q)
@@ -115,7 +113,9 @@ def test_multi_segment_counts(seed):
 def test_reverse_direction():
     schema = GraphSchema()
     b = GraphBuilder(schema)
-    a0 = b.add_node("A"); a1 = b.add_node("A"); a2 = b.add_node("A")
+    a0 = b.add_node("A")
+    a1 = b.add_node("A")
+    a2 = b.add_node("A")
     b.add_edge(a0, a1, "x")
     b.add_edge(a2, a1, "x")
     g = b.finalize()

@@ -70,7 +70,8 @@ def test_multi_segment_templates():
 def test_create_node_is_noop():
     schema = GraphSchema()
     b = GraphBuilder(schema)
-    a = b.add_node("A"); c = b.add_node("B")
+    a = b.add_node("A")
+    c = b.add_node("B")
     b.add_edge(a, c, "x")
     sess = GraphSession(b.finalize(), schema)
     view = sess.create_view(

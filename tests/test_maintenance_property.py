@@ -9,7 +9,6 @@ skips cleanly without it.  A deterministic randomized variant of the same
 property lives in ``test_engine.py`` so CI without hypothesis still covers
 the maintenance path.
 """
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")

@@ -1,6 +1,5 @@
 """Algorithm 3/4: view matching, ChangePG splicing, ordering, result parity."""
 import numpy as np
-import pytest
 
 from repro.core import GraphBuilder, GraphSchema, GraphSession
 from repro.core.matcher import match_view

@@ -5,14 +5,13 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.tokens import token_batch
 from repro.models import transformer as tfm
 from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt
 from repro.train.fault import FaultConfig, FaultTolerantLoop
-from repro.train.trainer import TrainState, init_train_state, make_train_step
+from repro.train.trainer import init_train_state, make_train_step
 
 CFG = tfm.TransformerConfig(name="tiny", n_layers=2, d_model=32, n_heads=4,
                             n_kv_heads=2, d_ff=64, vocab=61, head_dim=8,
@@ -118,7 +117,7 @@ def test_compressed_psum_single_device():
 
 
 def test_serve_engine_continuous_batching():
-    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.llm import Request, ServeEngine
     params = tfm.init_params(jax.random.PRNGKey(0), CFG)
     eng = ServeEngine(params, CFG, batch_slots=2, max_len=48, eos_id=-1)
     reqs = [Request(uid=i,
@@ -133,7 +132,8 @@ def test_serve_engine_continuous_batching():
     # greedy decode is deterministic: same prompt twice -> same output
     r1 = Request(uid=10, prompt=np.arange(5, dtype=np.int32), max_new_tokens=6)
     r2 = Request(uid=11, prompt=np.arange(5, dtype=np.int32), max_new_tokens=6)
-    eng.submit(r1); eng.submit(r2)
+    eng.submit(r1)
+    eng.submit(r2)
     eng.run_to_completion()
     assert r1.output == r2.output
 

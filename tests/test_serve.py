@@ -1,0 +1,217 @@
+"""Serve-engine differential tests: batched == sequential, row for row.
+
+The serving contract (DESIGN.md §9): a mixed read/write workload pushed
+through :class:`~repro.serve.engine.ServeEngine` — reads grouped by plan
+fingerprint and executed as stacked frontier batches, writes applied as
+epoch fences between batch windows — returns for every ticket *exactly*
+(rows and DBHit/Rows metrics) what the same request sequence returns through
+per-query ``GraphSession.query`` / ``apply_writes`` calls.  Includes a write
+fence landing mid-window and a node-arena growth forcing full invalidation
+between windows.
+"""
+import numpy as np
+
+from repro.core import GraphBuilder, GraphSchema, GraphSession, WriteBatch
+
+QUERIES = [
+    "MATCH (a:A)-[e:x]->(m:B)-[f:y]->(c) RETURN a, c",
+    "MATCH (a:A)-[e:x*1..2]->(d:B) WHERE a.age >= 3 RETURN a, d",
+    "MATCH (a:A)-[e:x*1..]->(d:B) RETURN a, d",      # unbounded: set semantics
+    "MATCH (s:B)-[e:y]->(d) WHERE e.w >= 2 RETURN s, d",
+]
+
+VIEW = ("CREATE VIEW V0 AS (CONSTRUCT (s)-[r:V0]->(d) "
+        "MATCH (s:A)-[e:x]->(m:B)-[f:y]->(d))")
+
+
+def _build(seed=0, n=14):
+    """Deterministic random graph; called twice to get identical twins."""
+    rng = np.random.default_rng(seed)
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    for i in range(n):
+        b.add_node(("A", "B")[i % 2], props={"age": int(rng.integers(0, 8))})
+    for u in range(n):
+        for v in range(n):
+            if u != v and rng.random() < 0.22:
+                b.add_edge(u, v, ("x", "y")[int(rng.integers(2))],
+                           props={"w": int(rng.integers(0, 5))})
+    return GraphSession(b.finalize(edge_cap=512), schema)
+
+
+def _assert_same(got, want, ctx=""):
+    assert np.array_equal(got.src_ids, want.src_ids), f"src_ids differ {ctx}"
+    assert np.array_equal(got.reach, want.reach), f"rows differ {ctx}"
+    assert got.metrics.db_hits == want.metrics.db_hits, f"DBHit differs {ctx}"
+    assert got.metrics.rows == want.metrics.rows, f"Rows differ {ctx}"
+
+
+def _mixed_script(rng, n_nodes):
+    """An ordered op list: reads (full + per-client bindings) and fences."""
+    ops = []
+    for round_ in range(3):
+        for qi, q in enumerate(QUERIES):
+            ops.append(("read", q, None))
+            for _ in range(3):  # point clients sharing the fingerprint
+                src = np.asarray([int(rng.integers(n_nodes))], np.int32)
+                ops.append(("read", q, src))
+        u, v = int(rng.integers(n_nodes)), int(rng.integers(n_nodes))
+        fence = WriteBatch().create_edge(u, max((u + 1) % n_nodes, 0), "x",
+                                         props={"w": int(rng.integers(5))})
+        fence.set_node_prop(v, "age", int(rng.integers(8)))
+        ops.append(("write", fence, None))
+    ops.append(("read", QUERIES[0], None))
+    return ops
+
+
+def test_mixed_workload_batched_equals_sequential():
+    """The headline differential: one serve run vs per-query replay."""
+    rng = np.random.default_rng(7)
+    serve_sess = _build()
+    seq_sess = _build()
+    serve_sess.create_view(VIEW)
+    seq_sess.create_view(VIEW)
+
+    ops = _mixed_script(rng, n_nodes=14)
+    eng = serve_sess.serve()
+    tickets = []
+    for kind, payload, src in ops:
+        if kind == "read":
+            tickets.append(eng.submit(payload, sources=src))
+        else:
+            tickets.append(eng.submit_writes(payload))
+    stats = eng.run()
+
+    # sequential replay on the twin session, same order
+    for t, (kind, payload, src) in zip(tickets, ops):
+        if kind == "read":
+            want = seq_sess.query(payload, sources=src)
+            _assert_same(t.result, want, ctx=f"uid={t.uid}")
+        else:
+            seq_sess.apply_writes(payload)
+    for v in list(serve_sess.views):
+        assert serve_sess.check_consistency(v)
+
+    # the batching actually batched: every window packs 4 fingerprint
+    # groups of 4 tickets (1 full + 3 clients), dedup leaves <= 4 bindings
+    assert stats.windows == 4 and stats.write_batches == 3
+    assert stats.queries == sum(1 for k, _, _ in ops if k == "read")
+    assert stats.mean_group_size > 1.0
+    assert stats.executions < stats.queries
+
+
+def test_write_fence_lands_between_windows():
+    """Reads around a fence: pre-window sees old graph, post-window sees the
+    write — matching a sequential query/write/query interleaving."""
+    serve_sess = _build(seed=3)
+    seq_sess = _build(seed=3)
+    q = QUERIES[0]
+
+    # pick endpoints that change the answer: a fresh A-x->B-y->? chain
+    fence = (WriteBatch().create_edge(0, 1, "x", props={"w": 4})
+             .create_edge(1, 2, "y", props={"w": 4}))
+    fence_twin = (WriteBatch().create_edge(0, 1, "x", props={"w": 4})
+                  .create_edge(1, 2, "y", props={"w": 4}))
+
+    eng = serve_sess.serve()
+    before = [eng.submit(q) for _ in range(8)]
+    eng.submit_writes(fence)
+    after = [eng.submit(q) for _ in range(8)]
+    eng.run()
+
+    want_before = seq_sess.query(q)
+    seq_sess.apply_writes(fence_twin)
+    want_after = seq_sess.query(q)
+    for t in before:
+        _assert_same(t.result, want_before, "pre-fence")
+        assert t.window == 0
+    for t in after:
+        _assert_same(t.result, want_after, "post-fence")
+        assert t.window == 1
+    # the fence changed the result set, so the windows saw different graphs
+    assert not np.array_equal(want_before.reach, want_after.reach)
+
+
+def test_node_arena_growth_invalidates_between_windows():
+    """A fence that grows the node arena changes node_cap — every compiled
+    plan and engine cache entry is shape-stale.  The next window must
+    recompile via the reset-generation machinery and still match sequential
+    execution on the grown graph."""
+    serve_sess = _build(seed=5)
+    seq_sess = _build(seed=5)
+    q = QUERIES[0]
+    cap0 = serve_sess.g.node_cap
+    free = int((~np.asarray(serve_sess.g.node_alive)).sum())
+    grow = WriteBatch()
+    grow_twin = WriteBatch()
+    for i in range(free + 8):   # exceed the free slots: forces growth
+        grow.create_node(("A", "B")[i % 2], props={"age": i % 8})
+        grow_twin.create_node(("A", "B")[i % 2], props={"age": i % 8})
+
+    eng = serve_sess.serve()
+    t_before = eng.submit(q)
+    eng.submit_writes(grow)
+    t_after = [eng.submit(q) for _ in range(4)]
+    reset0 = serve_sess.engine.epochs.reset_generation
+    misses0 = serve_sess.planner.plan_misses
+    eng.run()
+
+    assert serve_sess.g.node_cap > cap0, "arena did not grow"
+    assert serve_sess.engine.epochs.reset_generation > reset0, \
+        "growth must force a full (reset-generation) invalidation"
+    assert serve_sess.planner.plan_misses > misses0, \
+        "post-growth window must recompile its plan"
+
+    want_before = seq_sess.query(q)
+    seq_sess.apply_writes(grow_twin)
+    want_after = seq_sess.query(q)
+    _assert_same(t_before.result, want_before, "pre-growth")
+    for t in t_after:
+        _assert_same(t.result, want_after, "post-growth")
+
+
+def test_same_fingerprint_group_executes_once():
+    """32 identical unbound reads dedupe to a single plan execution whose
+    result every ticket shares — and it is the sequential result."""
+    serve_sess = _build(seed=1)
+    q = QUERIES[0]
+    eng = serve_sess.serve()
+    tickets = [eng.submit(q) for _ in range(32)]
+    stats = eng.run()
+    assert stats.queries == 32 and stats.groups == 1
+    assert stats.executions == 1
+    want = serve_sess.query(q)
+    for t in tickets:
+        _assert_same(t.result, want)
+
+
+def test_point_clients_pack_into_shared_blocks():
+    """B single-source clients pack into ceil(B/src_block) shared frontier
+    blocks instead of B full blocks; per-client rows/metrics stay exact."""
+    serve_sess = _build(seed=2)
+    q = QUERIES[1]
+    clients = [np.asarray([i], np.int32) for i in range(0, 14, 2)]
+    eng = serve_sess.serve()
+    tickets = [eng.submit(q, sources=c) for c in clients]
+    stats = eng.run()
+    assert stats.groups == 1 and stats.executions == len(clients)
+    assert stats.blocks == 1, "point clients must share one frontier block"
+    for t, c in zip(tickets, clients):
+        _assert_same(t.result, serve_sess.query(q, sources=c))
+
+
+def test_views_on_and_off_are_separate_groups():
+    """The same fingerprint with and without view rewriting must not share
+    a plan group (their physical plans differ)."""
+    serve_sess = _build(seed=4)
+    serve_sess.create_view(VIEW)
+    q = QUERIES[0]
+    eng = serve_sess.serve()
+    t_on = eng.submit(q, use_views=True)
+    t_off = eng.submit(q, use_views=False)
+    stats = eng.run()
+    assert stats.groups == 2
+    _assert_same(t_on.result, serve_sess.query(q, use_views=True))
+    _assert_same(t_off.result, serve_sess.query(q, use_views=False))
+    # view-answered and base rows agree (the §VI-C invariant)
+    assert np.array_equal(t_on.result.reach, t_off.result.reach)
