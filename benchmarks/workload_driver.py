@@ -222,6 +222,12 @@ class ServeReport:
     mean_group_size: float
     occupancy: float
     executions: int            # unique bindings evaluated (after dedup)
+    mean_window_size: float = 0.0   # tickets per executed window
+    deadline_misses: int = 0   # tickets admitted past their deadline
+    share_rate: float = 0.0    # groups served via shared structural programs
+    memo_hits: int = 0         # tickets answered from the cross-window memo
+    gathers: int = 0           # tickets answered by row-subsumption gather
+    hoisted: int = 0           # tickets served ahead of a pending fence
 
     def summary(self) -> str:
         return (f"{self.dataset}: {self.queries} queries in "
@@ -229,8 +235,12 @@ class ServeReport:
                 f"({self.speedup:.2f}x vs sequential {self.seq_s:.3f}s); "
                 f"windows={self.windows} writes={self.write_batches} "
                 f"mean_group={self.mean_group_size:.1f} "
+                f"mean_window={self.mean_window_size:.1f} "
                 f"occupancy={self.occupancy:.2f} "
-                f"executions={self.executions}")
+                f"executions={self.executions} memo={self.memo_hits} "
+                f"gathers={self.gathers} hoisted={self.hoisted} "
+                f"share_rate={self.share_rate:.2f} "
+                f"deadline_misses={self.deadline_misses}")
 
 
 def _serve_script(sess: GraphSession, wl: WorkloadConfig, clients: int,
@@ -342,7 +352,11 @@ def run_serve_workload(make_dataset: Callable[[], Tuple], wl: WorkloadConfig,
         qps=stats.queries / serve_s if serve_s else 0.0,
         speedup=seq_s / serve_s if serve_s else 0.0,
         mean_group_size=stats.mean_group_size, occupancy=stats.occupancy,
-        executions=stats.executions)
+        executions=stats.executions,
+        mean_window_size=stats.mean_window_size,
+        deadline_misses=stats.deadline_misses,
+        share_rate=stats.share_rate, memo_hits=stats.memo_hits,
+        gathers=stats.gathers, hoisted=stats.hoisted)
 
 
 # ---------------------------------------------------------------------------

@@ -115,6 +115,35 @@ def _hop_dense(F, A, *, counting: bool):
     return (F.astype(jnp.int32) @ A.astype(jnp.int32)) > 0
 
 
+@partial(jax.jit, static_argnames=("counting",))
+def _hop_segment_rows(F, esrc, edst, emask, eweight, *, counting: bool):
+    """Row-parameterized segment hop: every frontier row carries its *own*
+    edge operands (``[blk, E]`` instead of ``[E]``), so rows belonging to
+    different plans of one structural equivalence class share a single trace
+    (core/plan.py ``SharedProgram``).  Direction is folded into the operands
+    (callers pre-swap src/dst for reverse hops).  For rows whose operand
+    slices repeat one plan's arrays this computes exactly ``_hop_segment``:
+    the gather/scatter targets and integer addends are identical per row."""
+    rows = jnp.arange(F.shape[0])[:, None]
+    if counting:
+        msg = jnp.where(emask, jnp.take_along_axis(F, esrc, axis=1) * eweight,
+                        0)
+        return jnp.zeros_like(F).at[rows, edst].add(msg)
+    msg = jnp.where(emask, jnp.take_along_axis(F, esrc, axis=1), False)
+    return jnp.zeros_like(F).at[rows, edst].max(msg)
+
+
+@jax.jit
+def _hop_cost_rows(F, deg_rows):
+    """Per-row DBHit vector with a per-row degree table (``[blk, N]``):
+    ``_hop_cost_per_source`` for row-parameterized operands.  The elementwise
+    multiply-sum reproduces the matvec exactly — int32 products summed in a
+    different order are the same integers."""
+    active = (F > 0).astype(jnp.int32) if F.dtype != jnp.bool_ \
+        else F.astype(jnp.int32)
+    return 2 * jnp.sum(active * deg_rows.astype(jnp.int32), axis=1)
+
+
 @jax.jit
 def _hop_cost(F, deg):
     """DBHits of expanding this frontier: 2 storage touches per expanded edge."""

@@ -77,7 +77,8 @@ import numpy as np
 
 from repro.core.executor import (
     ExecConfig, ExecEngine, Metrics, ReachResult, _active_rows_per_source,
-    _hop_cost_per_source, _hop_dense, _hop_segment,
+    _hop_cost_per_source, _hop_cost_rows, _hop_dense, _hop_segment,
+    _hop_segment_rows,
 )
 from repro.core.graph import node_pred_mask
 from repro.core.parser import query_fingerprint
@@ -159,6 +160,71 @@ def _cfg_snapshot(cfg: ExecConfig) -> tuple:
     return (cfg.plan_backend, cfg.backend, cfg.use_pallas, cfg.interpret,
             cfg.collect_metrics, cfg.max_closure_iters, cfg.src_block,
             cfg.dense_node_limit, cfg.dense_density)
+
+
+def block_sizes(rows: int, blk: int, adaptive: bool) -> List[int]:
+    """Frontier-block launch plan for ``rows`` packed source rows.
+
+    Fixed mode (the per-query read path) pads to whole ``blk`` blocks, at
+    least one — the historical behavior every existing baseline was measured
+    under.  Adaptive mode (the serve packing path) sizes a sub-block batch to
+    the next power of two >= rows (min 8, capped at ``blk``), so a point-
+    client group of 8 rows launches an 8-slot block instead of padding to
+    256; batches larger than one block keep full ``blk`` blocks.  The
+    power-of-two ladder bounds jit re-specialization to <= 6 small shapes.
+    """
+    if not adaptive or rows >= blk:
+        r_pad = max(round_up(max(rows, 1), blk), blk)
+        return [blk] * (r_pad // blk)
+    b = 8
+    while b < rows:
+        b *= 2
+    return [min(b, blk)]
+
+
+@dataclass
+class RowResult:
+    """Per-source-row outputs of one executed binding — the serve layer's
+    currency.  Alongside the dense reach rows it keeps the *per-row*
+    DBHit/Rows vectors the fused programs accumulate device-side, so any
+    subset of rows can be re-attributed exactly (metrics are row-local sums)
+    without re-executing: the serve engine memoizes these across windows and
+    answers subsumed point bindings by gathering rows."""
+
+    sources: np.ndarray    # [S] int32 source ids, in binding order
+    reach: np.ndarray      # [S, N] int32 reach rows
+    db_vec: np.ndarray     # [S] int32 per-row DBHit contributions
+    rows_vec: np.ndarray   # [S] int32 per-row Rows contributions
+    counting: bool
+
+    def to_reach_result(self) -> ReachResult:
+        """The :class:`ReachResult` a solo ``execute`` would have returned:
+        per-query metrics are S + the row-vector sums (the source-row term
+        plus every row's accumulated hop contributions)."""
+        S = int(self.sources.shape[0])
+        return ReachResult(
+            src_ids=self.sources, reach=self.reach, counting=self.counting,
+            metrics=Metrics(db_hits=S + int(self.db_vec.sum()),
+                            rows=S + int(self.rows_vec.sum())))
+
+    def covers(self, sources: np.ndarray) -> bool:
+        """Is every id of ``sources`` a row of this result?  Requires
+        ``self.sources`` sorted ascending (true of ``default_sources``
+        bindings, the only ones the serve engine gathers from)."""
+        own = self.sources
+        if own.shape[0] == 0:
+            return int(np.asarray(sources).shape[0]) == 0
+        idx = np.searchsorted(own, sources)
+        idx = np.clip(idx, 0, own.shape[0] - 1)
+        return bool(np.all(own[idx] == sources))
+
+    def gather(self, sources: np.ndarray) -> "RowResult":
+        """Exact row-subset view for ``sources`` ⊆ ``self.sources`` (sorted
+        ascending); duplicate ids map to the same row, like re-execution."""
+        sources = np.asarray(sources, np.int32)
+        idx = np.searchsorted(self.sources, sources)
+        return RowResult(sources, self.reach[idx], self.db_vec[idx],
+                         self.rows_vec[idx], self.counting)
 
 
 # ---------------------------------------------------------------------------
@@ -419,11 +485,22 @@ class CompiledPlan:
         is row-local, and padding rows contribute zero to both counters.
         One host sync per batch.
         """
+        return [rr.to_reach_result()
+                for rr in self.execute_rows(source_lists)]
+
+    def execute_rows(self, source_lists: Sequence[np.ndarray], *,
+                     adaptive_blocks: bool = False) -> List[RowResult]:
+        """:meth:`execute_batch` without the per-query metric folding:
+        returns :class:`RowResult` s carrying the raw per-row DBHit/Rows
+        vectors, so the serve engine can memoize executions across windows
+        and answer row-subsumed bindings by gathering.  ``adaptive_blocks``
+        enables the serve-path power-of-two block sizing (the per-query path
+        keeps fixed ``src_block`` blocks — see :func:`block_sizes`)."""
         g = self.engine.g
         counts = [int(np.asarray(s).shape[0]) for s in source_lists]
         R = sum(counts)
-        blk = self.cfg.src_block
-        R_pad = max(round_up(R, blk), blk)
+        sizes = block_sizes(R, self.cfg.src_block, adaptive_blocks)
+        R_pad = sum(sizes)
         padded = np.full(R_pad, -1, np.int32)
         if R:
             padded[:R] = np.concatenate(
@@ -432,7 +509,8 @@ class CompiledPlan:
         nprops = tuple(g.node_prop_col(name) for name in self._nprop_names)
 
         out_rows, db_parts, row_parts, ok_parts = [], [], [], []
-        for b0 in range(0, R_pad, blk):
+        b0 = 0
+        for blk in sizes:
             F, db, rows, ok = self._fn(
                 jnp.asarray(padded[b0:b0 + blk]), g.node_label, g.node_key,
                 g.node_alive, nprops, operands)
@@ -440,6 +518,7 @@ class CompiledPlan:
             db_parts.append(db)
             row_parts.append(rows)
             ok_parts.append(ok)
+            b0 += blk
         reach = np.concatenate(
             [np.asarray(F) for F in out_rows], axis=0)[:R].astype(np.int32)
         db_vec = np.concatenate([np.asarray(d) for d in db_parts])[:R]
@@ -447,17 +526,290 @@ class CompiledPlan:
         if not all(bool(np.asarray(o)) for o in ok_parts):
             raise RuntimeError(
                 "closure did not converge within max_closure_iters")
-        results: List[ReachResult] = []
+        results: List[RowResult] = []
         off = 0
         for srcs, S in zip(source_lists, counts):
-            metrics = Metrics(
-                db_hits=S + int(db_vec[off:off + S].sum()),
-                rows=S + int(rows_vec[off:off + S].sum()))
-            results.append(ReachResult(
-                src_ids=np.asarray(srcs, np.int32),
-                reach=reach[off:off + S], counting=self.counting,
-                metrics=metrics))
+            results.append(RowResult(
+                sources=np.asarray(srcs, np.int32),
+                reach=reach[off:off + S], db_vec=db_vec[off:off + S],
+                rows_vec=rows_vec[off:off + S], counting=self.counting))
             off += S
+        return results
+
+    # -- structural sharing ------------------------------------------------
+
+    def structure_key(self) -> Optional[tuple]:
+        """Structure-only fingerprint: the shape of the traced program with
+        labels, keys and predicates demoted from compile-time constants to
+        per-row operands.  Two plans with equal keys can execute through one
+        :class:`SharedProgram`.  Only all-segment plans are eligible (dense/
+        pallas hops would stack ``[M, N, N]`` adjacencies); direction is
+        folded into the operands (src/dst pre-swapped), so an IN hop and an
+        OUT hop share structure.  Returns ``None`` when ineligible."""
+        sig: List[tuple] = []
+        for s in self.steps:
+            if isinstance(s, FilterStep):
+                sig.append(("f",))
+            else:
+                if s.backend != "segment":
+                    return None
+                sig.append(("x", len(s.reverses), s.min_hops, s.max_hops))
+        if not any(t[0] == "x" for t in sig):
+            return None
+        return (self.counting, self.cfg.collect_metrics,
+                self.cfg.max_closure_iters, tuple(sig))
+
+    def share_scales(self) -> Tuple[int, ...]:
+        """log2-quantized edge-slice sizes per expand step.  Shared buckets
+        partition on these so stacking members to a common padded edge count
+        never inflates any member's per-row hop work by more than 2x (a
+        4k-edge label must not pay a 32k-edge label's scatter width)."""
+        out = []
+        for s in self.steps:
+            if isinstance(s, ExpandStep):
+                esrc, _, _, _ = self.engine.label_edges(s.label_id, s.preds)
+                out.append(max(int(esrc.shape[0]) - 1, 1).bit_length())
+        return tuple(out)
+
+    def _gather_shared_operands(self):
+        """Operands for a :class:`SharedProgram` member: per-filter node
+        masks (label/key/alive/predicates folded into one ``[N]`` bool — the
+        exact mask the single-plan trace computes from its fused constants)
+        and per-expand per-direction edge tuples with reverse pre-applied.
+        Fetched fresh per execution, like :meth:`_gather_operands`."""
+        eng = self.engine
+        g = eng.g
+        masks, expands = [], []
+        for step in self.steps:
+            if isinstance(step, FilterStep):
+                m = g.node_mask(step.label_id, step.key)
+                if step.preds:
+                    m = m & node_pred_mask(g, step.preds)
+                masks.append(m)
+            else:
+                per_dir = []
+                for rev in step.reverses:
+                    esrc, edst, ew, emask = eng.label_edges(step.label_id,
+                                                            step.preds)
+                    deg = eng.deg(step.label_id, rev, step.preds)
+                    a, b = (edst, esrc) if rev else (esrc, edst)
+                    per_dir.append((a, b, ew, emask, deg))
+                expands.append(tuple(per_dir))
+        return tuple(masks), tuple(expands)
+
+
+# ---------------------------------------------------------------------------
+# shared structural program
+# ---------------------------------------------------------------------------
+
+class SharedProgram:
+    """One jitted fused program serving a plan-*structure* equivalence class
+    (DESIGN.md §10).
+
+    Where :class:`CompiledPlan` bakes its labels/keys/predicates into the
+    trace as constants, a shared program takes them as *stacked operands*:
+    per-filter node masks ``[M, N]`` and per-hop edge slices ``[M, E_max]``
+    for the ``M`` member plans of a window bucket, with every frontier row
+    carrying a member index that selects its row of each operand stack.  The
+    trace therefore depends only on the structure signature (step kinds, hop
+    bounds, direction counts) plus shapes — queries that differ only in
+    labels, predicates and sources share one XLA executable instead of
+    compiling per fingerprint.
+
+    Exactness: the row kernels (``_hop_segment_rows`` / ``_hop_cost_rows``)
+    are the homogeneous kernels with the operand broadcast made explicit, so
+    a row whose member stack repeats one plan's operands computes bit-for-bit
+    what that plan's own program computes — including the per-row DBHit/Rows
+    vectors, since every kernel is row-local.  Members are padded to a
+    power-of-two count with member 0's operands and padded rows carry id -1,
+    contributing exactly zero everywhere.
+    """
+
+    def __init__(self, counting: bool, collect_metrics: bool,
+                 max_closure_iters: int, steps_sig: Tuple[tuple, ...]):
+        self.counting = counting
+        self.collect = collect_metrics
+        self.max_closure_iters = max_closure_iters
+        self.steps_sig = steps_sig
+        self._fn = jax.jit(self._program)
+
+    # -- traced program ----------------------------------------------------
+
+    def _program(self, ids, midx, masks, operands):
+        """One source block: ``ids`` [blk] (-1 padding), ``midx`` [blk]
+        member indices, ``masks`` a tuple of [M, N] bool stacks (one per
+        filter step), ``operands`` a tuple (one per expand step) of
+        per-direction (src, dst, ew, emask, deg) stacks.  Mirrors
+        :meth:`CompiledPlan._program` with member-selected operands."""
+        counting, collect = self.counting, self.collect
+        blk = ids.shape[0]
+        N = masks[0].shape[1] if masks else operands[0][0][4].shape[1]
+        valid = ids >= 0
+        cols = jnp.where(valid, ids, 0)
+        if counting:
+            F = jnp.zeros((blk, N), jnp.int32).at[
+                jnp.arange(blk), cols].add(valid.astype(jnp.int32))
+        else:
+            F = jnp.zeros((blk, N), bool).at[
+                jnp.arange(blk), cols].max(valid)
+        db = jnp.zeros(blk, jnp.int32)
+        rows = jnp.zeros(blk, jnp.int32)
+        ok = jnp.bool_(True)
+
+        mi = oi = 0
+        for sig in self.steps_sig:
+            if sig[0] == "f":
+                m = masks[mi][midx]           # [blk, N] per-row node mask
+                mi += 1
+                F = F & m if not counting else jnp.where(m, F, 0)
+                continue
+            _, ndirs, lo, hi = sig
+            # member-select each direction's operands once per step; the
+            # hop closure (and the while_loop body) reuse the gathered rows
+            step_rows = tuple(
+                tuple(arr[midx] for arr in operands[oi][d])
+                for d in range(ndirs))
+            oi += 1
+
+            def hop(Fc, db, rows, step_rows=step_rows):
+                out = None
+                for (a, b, ew, emask, deg) in step_rows:
+                    if collect:
+                        db = db + _hop_cost_rows(Fc, deg)
+                    nxt = _hop_segment_rows(Fc, a, b, emask, ew,
+                                            counting=counting)
+                    out = nxt if out is None else (
+                        out + nxt if counting else out | nxt)
+                if collect:
+                    rows = rows + _active_rows_per_source(out)
+                return out, db, rows
+
+            if hi != INF_HOPS:
+                acc = F if lo == 0 else None
+                cur = F
+                for k in range(1, hi + 1):
+                    cur, db, rows = hop(cur, db, rows)
+                    if k >= lo:
+                        acc = cur if acc is None else (
+                            acc + cur if counting else acc | cur)
+                F = acc if acc is not None else jnp.zeros_like(F)
+                continue
+            cur = F
+            for _ in range(max(lo, 0)):
+                cur, db, rows = hop(cur, db, rows)
+
+            def cond(c):
+                i, _reach, frontier, _db, _rows = c
+                return jnp.logical_and(i < self.max_closure_iters,
+                                       jnp.any(frontier))
+
+            def body(c):
+                i, reach, frontier, db, rows = c
+                nxt, db, rows = hop(frontier, db, rows)
+                return (i + 1, reach | nxt, nxt & ~reach, db, rows)
+
+            _, reach, frontier, db, rows = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), cur, cur, db, rows))
+            ok = ok & ~jnp.any(frontier)
+            F = reach
+        return F, db, rows, ok
+
+    # -- execution ---------------------------------------------------------
+
+    def execute(self, plans: Sequence[CompiledPlan],
+                spec_lists: Sequence[Sequence[np.ndarray]], *,
+                adaptive_blocks: bool = True) -> List[List[RowResult]]:
+        """Run several same-structure plans' bindings as one padded batch.
+
+        ``spec_lists[m]`` holds plan ``m``'s unique source bindings; all rows
+        of all members pack back-to-back into shared blocks, each row tagged
+        with its member index.  Edge operands pad to the bucket's per-step
+        maximum (padded edges are masked off → exact no-ops).  Returns
+        per-plan lists of :class:`RowResult` matching ``spec_lists``."""
+        cfg = plans[0].cfg
+        M = len(plans)
+        M_pad = 1 << max(M - 1, 1).bit_length()    # pow2 >= M, min 2
+        gathered = [p._gather_shared_operands() for p in plans]
+
+        n_filters = sum(1 for s in self.steps_sig if s[0] == "f")
+        masks_st = []
+        for fi in range(n_filters):
+            ms = [gathered[m][0][fi] for m in range(M)]
+            ms += [ms[0]] * (M_pad - M)
+            masks_st.append(jnp.stack(ms))
+
+        ops_st = []
+        oi = 0
+        for sig in self.steps_sig:
+            if sig[0] != "x":
+                continue
+            ndirs = sig[1]
+            per_dir = []
+            for d in range(ndirs):
+                cols = [gathered[m][1][oi][d] for m in range(M)]
+                E = max(int(c[0].shape[0]) for c in cols)
+                stacked = []
+                for j in range(5):          # src, dst, ew, emask, deg
+                    arrs = []
+                    for c in cols:
+                        a = c[j]
+                        if j < 4 and int(a.shape[0]) < E:
+                            a = jnp.pad(a, (0, E - int(a.shape[0])))
+                        arrs.append(a)
+                    arrs += [arrs[0]] * (M_pad - M)
+                    stacked.append(jnp.stack(arrs))
+                per_dir.append(tuple(stacked))
+            ops_st.append(tuple(per_dir))
+            oi += 1
+        masks_st = tuple(masks_st)
+        ops_st = tuple(ops_st)
+
+        layout: List[Tuple[int, int, int]] = []   # (member, offset, S)
+        src_parts, midx_parts = [], []
+        off = 0
+        for m, specs in enumerate(spec_lists):
+            for s in specs:
+                arr = np.asarray(s, np.int32)
+                S = int(arr.shape[0])
+                layout.append((m, off, S))
+                src_parts.append(arr)
+                midx_parts.append(np.full(S, m, np.int32))
+                off += S
+        R = off
+        sizes = block_sizes(R, cfg.src_block, adaptive_blocks)
+        R_pad = sum(sizes)
+        ids = np.full(R_pad, -1, np.int32)
+        midx = np.zeros(R_pad, np.int32)
+        if R:
+            ids[:R] = np.concatenate(src_parts)
+            midx[:R] = np.concatenate(midx_parts)
+
+        out_rows, db_parts, row_parts, ok_parts = [], [], [], []
+        b0 = 0
+        for blk in sizes:
+            F, db, rows, ok = self._fn(
+                jnp.asarray(ids[b0:b0 + blk]),
+                jnp.asarray(midx[b0:b0 + blk]), masks_st, ops_st)
+            out_rows.append(F)
+            db_parts.append(db)
+            row_parts.append(rows)
+            ok_parts.append(ok)
+            b0 += blk
+        reach = np.concatenate(
+            [np.asarray(F) for F in out_rows], axis=0)[:R].astype(np.int32)
+        db_vec = np.concatenate([np.asarray(d) for d in db_parts])[:R]
+        rows_vec = np.concatenate([np.asarray(r) for r in row_parts])[:R]
+        if not all(bool(np.asarray(o)) for o in ok_parts):
+            raise RuntimeError(
+                "closure did not converge within max_closure_iters")
+        results: List[List[RowResult]] = [[] for _ in plans]
+        cursor = 0
+        for (m, off, S) in layout:
+            results[m].append(RowResult(
+                sources=src_parts[cursor], reach=reach[off:off + S],
+                db_vec=db_vec[off:off + S], rows_vec=rows_vec[off:off + S],
+                counting=self.counting))
+            cursor += 1
         return results
 
 
@@ -485,6 +837,7 @@ class QueryPlanner:
         self._plans: Dict[Tuple[QueryFingerprint, bool], CompiledPlan] = {}
         self._rewrites: Dict[Tuple[QueryFingerprint, int],
                              Tuple[PathPattern, bool]] = {}
+        self._shared: Dict[tuple, SharedProgram] = {}
         self.plan_hits = 0
         self.plan_misses = 0
         self.rewrite_hits = 0
@@ -540,3 +893,16 @@ class QueryPlanner:
                             reuse_from=stale)
         self._plans[key] = plan
         return plan, rewrite_s
+
+    def shared_program(self, key: tuple) -> SharedProgram:
+        """The session-lifetime :class:`SharedProgram` for a structure key
+        (see :meth:`CompiledPlan.structure_key`).  Programs persist across
+        windows and write fences: labels and predicates are operands, so
+        epoch invalidation never stales the trace — only shapes respecialize.
+        """
+        sp = self._shared.get(key)
+        if sp is None:
+            counting, collect, max_iters, sig = key
+            sp = SharedProgram(counting, collect, max_iters, sig)
+            self._shared[key] = sp
+        return sp

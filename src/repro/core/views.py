@@ -797,11 +797,13 @@ class GraphSession:
 
     # ------------------------------------------------------------- serving
 
-    def serve(self):
+    def serve(self, config=None):
         """A :class:`~repro.serve.engine.ServeEngine` bound to this session:
-        cross-query batched reads with epoch-fenced writes (DESIGN.md §9)."""
+        continuous-batching reads with label-scoped write fences
+        (DESIGN.md §10).  ``config`` is an optional
+        :class:`~repro.serve.engine.ServeConfig` of scheduler knobs."""
         from repro.serve.engine import ServeEngine
-        return ServeEngine(self)
+        return ServeEngine(self, config)
 
     # ------------------------------------------------------------ integrity
 

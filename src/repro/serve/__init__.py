@@ -1,7 +1,9 @@
 """Serving runtime.
 
-``repro.serve.engine`` — the graph-query serving engine: cross-query
-batched reads grouped by plan fingerprint, with epoch-fenced writes
-(DESIGN.md §9).  ``repro.serve.llm`` — the continuous-batching decode
-engine + KV cache manager for the transformer stack.
+``repro.serve.engine`` — the graph-query serving engine: a
+continuous-batching scheduler with label-scoped write fences, admission
+deadlines, adaptive windows, cross-window result memoization and
+cross-fingerprint structural sharing (DESIGN.md §10).
+``repro.serve.llm`` — the continuous-batching decode engine + KV cache
+manager for the transformer stack the scheduler is modeled on.
 """

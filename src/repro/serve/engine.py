@@ -1,59 +1,108 @@
-"""Cross-query batched serving engine for graph reads (DESIGN.md §9).
+"""Continuous-batching serve scheduler for graph reads (DESIGN.md §10).
 
 A production deployment of MV4PG serves *many logical clients at once*:
 thousands of concurrent ``MATCH`` requests that hash to a handful of plan
 fingerprints (the same amortization bet the paper makes about data work and
-``core/plan.py`` makes about compilation).  The per-query read path still
-executes each request alone — every call pads its sources to a full
-``src_block`` frontier and launches its own device program.  The
-:class:`ServeEngine` closes that gap:
+``core/plan.py`` makes about compilation).  PR 5's engine closed the
+per-query gap with fingerprint-grouped stacked execution, but drained the
+queue as fixed alternating read-windows and write fences: every write
+serialized the whole window, identical reads re-executed every round, and
+small groups launched alone.  This engine replaces that drain with a
+continuous-batching scheduler modeled on the LLM decode loop in
+``serve/llm.py`` (admit / evict without stalling the batch):
 
-* **Fingerprint grouping** — submitted reads are grouped by their
-  :class:`~repro.core.pattern.QueryFingerprint` (+ the effective use-views
-  flag), so every group shares one :class:`~repro.core.plan.CompiledPlan`.
-* **Stacked execution** — each group runs as **one** jitted program over a
-  stacked ``[blk, node_cap]`` source-frontier batch
-  (:meth:`CompiledPlan.execute_batch`): the rows of all the group's queries
-  pack back-to-back into shared blocks instead of each query padding its
-  own.  Per-row DBHit/Rows vectors accumulate device-side and are
-  attributed per query after **one sync per group**, so every ticket's
-  result is row-for-row and metric-exact what a solo
-  :meth:`GraphSession.query` call returns.
-* **Request dedup** — tickets in a group with the same source binding
-  (including the default "all qualifying start nodes" binding) share a
-  single execution; 32 identical dashboard queries cost one program run.
-* **Epoch-fenced writes** — the submission queue is processed in order as
-  alternating *batch windows* (maximal runs of reads) and *write fences*
-  (:class:`~repro.core.graph.WriteBatch` es).  All reads of a window
-  evaluate against one engine snapshot — no write lands mid-window, so
-  view maintenance and label-epoch invalidation (``apply_writes``) keep
-  their single-writer contract under interleaved traffic; a read submitted
-  after a write is guaranteed to observe it.  ``epoch`` counts applied
-  fences; plans revalidate per window through the session plan cache's
-  existing epoch machinery (node-arena growth between windows forces the
-  usual full invalidation and recompile).
+* **Label-scoped write fences** — each :class:`~repro.core.graph.WriteBatch`
+  gets a :class:`FenceScope` (edge labels it may touch — closed over view
+  maintenance — node properties it writes, node creation/deletion flags).
+  A read conflicts with a pending fence only if their scopes intersect, so
+  reads submitted *after* a fence on disjoint labels hoist into the current
+  window instead of waiting for it (one-directional: a fence never applies
+  before an earlier-submitted read executes).
+* **Cross-window result memo** — every executed binding's
+  :class:`~repro.core.plan.RowResult` (rows + per-row DBHit/Rows vectors) is
+  memoized under its (fingerprint, use-views, binding) key.  A later
+  identical read is answered for free while no conflicting fence has
+  applied; fences evict exactly the entries their scope invalidates (label
+  staleness is additionally caught by plan-object identity through the
+  session plan cache's epoch machinery).
+* **Row-subsumption gather** — a point binding whose sources are rows of the
+  group's unbound (default-sources) execution is answered by *gathering*
+  those rows and their per-row metric entries instead of packing new rows:
+  every kernel in the fused programs is row-local, so the gathered result is
+  bit-for-bit what a solo execution returns.
+* **Cross-fingerprint structural sharing** — groups whose plans share a
+  structure key (:meth:`CompiledPlan.structure_key`: same step kinds, hop
+  bounds, direction counts, all-segment backends; labels/predicates demoted
+  to operands) bucket into one :class:`~repro.core.plan.SharedProgram`
+  launch, with per-row member indices selecting each row's operand stack.
+  Buckets also partition on log2 edge-slice scale so padding never inflates
+  a member's per-row work by more than 2x.
+* **Admission deadlines + adaptive windows** — tickets carry an admission
+  deadline (``admit_by``, in executed windows); eligible tickets are
+  admitted oldest-deadline-first up to an adaptive window limit that grows
+  with queue depth and backs off when observed per-ticket group latency
+  spikes.  A ticket admitted after its deadline counts a ``deadline_miss``;
+  deadline ordering makes starvation impossible (an unserved ticket's
+  deadline only gets *relatively* older).
+* **Async client API** — ``submit()`` returns an awaitable
+  :class:`ServeTicket`; ``step()`` advances the scheduler by one window or
+  fence, ``poll()``/``result()`` observe or pump a single ticket, ``run()``
+  drains synchronously, and ``drain()`` is the asyncio-friendly drain that
+  yields to the event loop between steps.
+
+Serving correctness contract (unchanged from §9): every ticket receives
+*exactly* — rows and DBHit/Rows metrics — what the same request sequence
+returns through per-query :meth:`GraphSession.query` / ``apply_writes``
+calls in submission order.  Hoisting, memoization and gathering preserve it
+because a read only crosses or reuses state across fences proven (by scope)
+not to affect its plan's operands, masks, or default-source selection.
+While tickets are pending, writes must go through :meth:`submit_writes` —
+the single-writer contract fences rely on.
 """
 from __future__ import annotations
 
 import collections
+import time
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Tuple, Union
+from typing import (TYPE_CHECKING, Deque, Dict, FrozenSet, List, Optional,
+                    Tuple, Union)
 
 import numpy as np
 
 from repro.core import graph as G
 from repro.core.executor import ReachResult
 from repro.core.parser import parse_query, query_fingerprint
-from repro.core.pattern import Query, QueryFingerprint
-from repro.utils import round_up
+from repro.core.pattern import Query
+from repro.core.plan import CompiledPlan, ExpandStep, RowResult, block_sizes
+from repro.core.schema import NEVER_LABEL, NO_LABEL
 
 if TYPE_CHECKING:  # pragma: no cover - typing only (avoids an import cycle)
     from repro.core.views import BatchResult, GraphSession
 
 
 @dataclass
+class ServeConfig:
+    """Scheduler knobs (defaults tuned on the SNB mixed workload)."""
+
+    window_init: int = 64        # starting admission window (tickets)
+    window_min: int = 16
+    window_max: int = 4096
+    patience: int = 4            # default admission deadline, in windows
+    latency_smoothing: float = 0.5   # EWMA weight of the newest window
+    latency_backoff: float = 2.0     # shrink window when per-ticket latency
+    #                                  exceeds backoff * EWMA
+    structural_sharing: bool = True  # cross-fingerprint SharedProgram buckets
+    adaptive_blocks: bool = True     # pow2 sub-block sizing (serve path only)
+    reuse_results: bool = True       # cross-window execution memo
+
+
+@dataclass
 class ServeTicket:
-    """One submitted request; filled in when its window executes."""
+    """One submitted request; filled in when the scheduler answers it.
+
+    Awaitable: ``await ticket`` yields to the event loop until the ticket is
+    done (something must be driving the engine concurrently — see
+    :meth:`ServeEngine.drain`)."""
 
     uid: int
     kind: str                                  # "read" | "write"
@@ -64,10 +113,42 @@ class ServeTicket:
     result: Optional[ReachResult] = None
     write_result: Optional["BatchResult"] = None
     window: int = -1                           # epoch the ticket ran in
+    window_seq: int = -1                       # executed-window index
+    admit_by: int = 0                          # admission deadline (window_seq)
+    via: str = ""                              # exec | dedup | gather | memo
+    hoisted: bool = False                      # executed ahead of a fence
+    scope: Optional["FenceScope"] = None       # write fences only
 
     @property
     def done(self) -> bool:
         return self.result is not None or self.write_result is not None
+
+    def __await__(self):
+        while not self.done:
+            yield
+        return self.result if self.kind == "read" else self.write_result
+
+
+@dataclass(frozen=True)
+class FenceScope:
+    """What a pending write fence may invalidate, computed at submit time.
+
+    ``edge_labels`` is closed over view maintenance: if the fence can touch
+    a view's inputs (its match labels or the node properties its predicates
+    read), the view's materialized label is in scope too, to a fixpoint.
+    ``global_`` is the conservative escape hatch: node deletes (which kill
+    incident edges and shrink default-source selections), deletes of slots
+    that are dead or already pending deletion (their identity at apply time
+    is unknowable), and writes touching view-owned edge slots."""
+
+    global_: bool = False
+    edge_labels: FrozenSet[int] = frozenset()
+    node_props: FrozenSet[str] = frozenset()
+    creates_nodes: bool = False
+    interns_labels: bool = False    # creates edges under a brand-new label
+
+
+_GLOBAL_SCOPE = FenceScope(global_=True)
 
 
 @dataclass
@@ -79,10 +160,17 @@ class ServeStats:
     queries: int = 0           # read tickets answered
     groups: int = 0            # (fingerprint, use_views) groups executed
     executions: int = 0        # unique source bindings actually evaluated
-    rows: int = 0              # frontier rows packed into shared blocks
+    rows: int = 0              # unique frontier rows packed into blocks
     blocks: int = 0            # fused device-program invocations
-    block_capacity: int = 0    # blocks * src_block (row slots available)
+    block_capacity: int = 0    # total row slots launched
     group_sizes: List[int] = field(default_factory=list)
+    window_sizes: List[int] = field(default_factory=list)  # tickets/window
+    block_sizes: List[int] = field(default_factory=list)   # slots/block
+    deadline_misses: int = 0   # tickets admitted after their deadline
+    memo_hits: int = 0         # tickets answered from the cross-window memo
+    gathers: int = 0           # tickets answered by row-subsumption gather
+    hoisted: int = 0           # tickets answered ahead of a pending fence
+    shared_groups: int = 0     # groups run through a shared structural program
 
     @property
     def mean_group_size(self) -> float:
@@ -90,20 +178,54 @@ class ServeStats:
         return self.queries / self.groups if self.groups else 0.0
 
     @property
+    def mean_window_size(self) -> float:
+        return (sum(self.window_sizes) / len(self.window_sizes)
+                if self.window_sizes else 0.0)
+
+    @property
+    def share_rate(self) -> float:
+        """Fraction of executed groups served by a shared structural
+        program rather than their own per-fingerprint program."""
+        return self.shared_groups / self.groups if self.groups else 0.0
+
+    @property
     def occupancy(self) -> float:
-        """Packed-row fraction of the launched frontier blocks."""
+        """Unique packed rows per launched row slot.  Honest under dedup:
+        tickets answered by dedup/memo/gather contribute no rows and no
+        slots, so 32 identical queries packing one binding score the
+        binding's own occupancy, not 32x."""
         return self.rows / self.block_capacity if self.block_capacity else 0.0
 
     def summary(self) -> str:
         return (f"windows={self.windows} queries={self.queries} "
                 f"groups={self.groups} executions={self.executions} "
                 f"mean_group={self.mean_group_size:.1f} "
+                f"mean_window={self.mean_window_size:.1f} "
                 f"occupancy={self.occupancy:.2f} blocks={self.blocks} "
+                f"memo={self.memo_hits} gathers={self.gathers} "
+                f"hoisted={self.hoisted} share_rate={self.share_rate:.2f} "
+                f"deadline_misses={self.deadline_misses} "
                 f"writes={self.write_batches}")
 
 
+class _Group:
+    """One (plan, use-views) read group inside a window."""
+
+    __slots__ = ("plan", "base", "tickets", "spec_idx", "spec_sources",
+                 "ticket_spec", "unbound_idx")
+
+    def __init__(self, plan: CompiledPlan, base):
+        self.plan = plan
+        self.base = base                      # (fingerprint, use) memo key
+        self.tickets: List[ServeTicket] = []
+        self.spec_idx: Dict[Optional[bytes], int] = {}
+        self.spec_sources: List[np.ndarray] = []
+        self.ticket_spec: List[int] = []
+        self.unbound_idx: Optional[int] = None
+
+
 class ServeEngine:
-    """Batched read serving + epoch-fenced writes over one
+    """Continuous-batching read serving + label-scoped write fences over one
     :class:`~repro.core.views.GraphSession`.
 
     Usage::
@@ -111,40 +233,64 @@ class ServeEngine:
         eng = sess.serve()
         tickets = [eng.submit(q, sources=np.array([c])) for c in clients]
         eng.submit_writes(WriteBatch().create_edge(u, v, "knows"))
-        after = eng.submit(q)        # sees the write: later window
+        after = eng.submit(q)        # sees the write: conflicting scope
         eng.run()                    # drain; tickets now carry results
+
+    or asynchronously::
+
+        async def client(q):
+            return await eng.submit(q)
+        results = await asyncio.gather(client(q1), client(q2), eng.drain())
     """
 
-    def __init__(self, session: "GraphSession"):
+    def __init__(self, session: "GraphSession",
+                 config: Optional[ServeConfig] = None):
         self.sess = session
+        self.cfg = config or ServeConfig()
         self.epoch = 0                     # completed write fences
         self.stats = ServeStats()
+        self.window_limit = self.cfg.window_init
         self._queue: Deque[ServeTicket] = collections.deque()
         self._uid = 0
+        self._window_seq = 0               # executed windows
+        self._lat_ewma: Optional[float] = None
+        # (fingerprint, use, binding-bytes|None) -> (plan, RowResult)
+        self._memo: Dict[tuple, Tuple[CompiledPlan, RowResult]] = {}
+        self._pending_dead: set = set()    # edge slots pending deletion
 
     # -------------------------------------------------------------- submit
 
     def submit(self, q: Union[str, Query], use_views: Optional[bool] = None,
-               sources: Optional[np.ndarray] = None) -> ServeTicket:
-        """Enqueue one read; returns its ticket (result filled by ``run``).
+               sources: Optional[np.ndarray] = None,
+               deadline: Optional[int] = None) -> ServeTicket:
+        """Enqueue one read; returns its awaitable ticket.
 
         ``sources`` is the per-client binding: an explicit source-id array
         evaluated under the :meth:`GraphSession.query` ``sources=`` contract
-        (caller-owned; skips the start-node filter)."""
+        (caller-owned; skips the start-node filter).  ``deadline`` is the
+        admission deadline in executed windows from now (default
+        ``ServeConfig.patience``); tickets are admitted oldest-deadline
+        first."""
         if isinstance(q, str):
             q = parse_query(q)
         t = ServeTicket(
             uid=self._next_uid(), kind="read", query=q, use_views=use_views,
             sources=None if sources is None
-            else np.asarray(sources, np.int32))
+            else np.asarray(sources, np.int32),
+            admit_by=self._window_seq + (self.cfg.patience
+                                         if deadline is None else deadline))
         self._queue.append(t)
         return t
 
     def submit_writes(self, batch: G.WriteBatch) -> ServeTicket:
         """Enqueue a write fence: every read submitted before it runs
-        against the pre-write snapshot, every read after it sees the write
-        (and the view maintenance it triggered)."""
-        t = ServeTicket(uid=self._next_uid(), kind="write", batch=batch)
+        against the pre-write snapshot; a read submitted after it sees the
+        write unless its plan provably doesn't (disjoint :class:`FenceScope`),
+        in which case it may be served early — the result is identical by
+        construction."""
+        t = ServeTicket(uid=self._next_uid(), kind="write", batch=batch,
+                        scope=self._fence_scope(batch))
+        self._pending_dead.update(int(e) for e in batch.edge_deletes)
         self._queue.append(t)
         return t
 
@@ -156,75 +302,408 @@ class ServeEngine:
     def pending(self) -> int:
         return len(self._queue)
 
-    # ----------------------------------------------------------------- run
+    # ------------------------------------------------------------- scoping
+
+    def _fence_scope(self, batch: G.WriteBatch) -> FenceScope:
+        """Compute the fence's invalidation scope against the current graph
+        + the writes already pending (single-writer: nothing else mutates the
+        session while tickets are queued, so submit-time label reads stay
+        true until this fence applies)."""
+        sess = self.sess
+        if batch.node_deletes:
+            return _GLOBAL_SCOPE
+        g = sess.g
+        e_alive = np.asarray(g.edge_alive)
+        e_lab = np.asarray(g.edge_label)
+        labels: set = set()
+        for eid in list(batch.edge_deletes) + [i for i, _, _
+                                               in batch.edge_prop_sets]:
+            eid = int(eid)
+            if eid in self._pending_dead or not bool(e_alive[eid]):
+                # dead or pending-dead slot: its occupant at apply time is
+                # unknowable (slots are reused), so scope can't be trusted
+                return _GLOBAL_SCOPE
+            lid = int(e_lab[eid])
+            if sess.schema.is_view_edge_label_id(lid):
+                # touching view-owned slots interacts with maintenance's own
+                # slot reuse — out of scope analysis, fence everything
+                return _GLOBAL_SCOPE
+            labels.add(lid)
+        interns = False
+        for _, _, lbl in batch.edge_creates:
+            lid = sess.schema.edge_labels.maybe_id(lbl)
+            if lid < 0:
+                interns = True     # brand-new label: id unknown until apply
+            else:
+                labels.add(lid)
+        node_props = ({p for _, p, _ in batch.node_prop_sets}
+                      | {p for _, p, _ in batch.node_create_props})
+        # close over view maintenance: a fence touching a view's inputs
+        # rewrites edges under the view's label too
+        name_of = sess.schema.edge_labels.name_of
+        changed = True
+        while changed:
+            changed = False
+            for view in sess.views.values():
+                if view.label_id in labels:
+                    continue
+                v_nprops = {p.prop for n in view.vdef.match.nodes
+                            for p in n.preds}
+                hit = bool(node_props & v_nprops)
+                hit = hit or (interns and any(
+                    r.label is None for r in view.vdef.match.rels))
+                hit = hit or any(sess._uses_label(view, name_of(lid))
+                                 for lid in labels)
+                if hit:
+                    labels.add(view.label_id)
+                    changed = True
+        return FenceScope(
+            global_=False, edge_labels=frozenset(labels),
+            node_props=frozenset(node_props),
+            creates_nodes=bool(batch.node_creates), interns_labels=interns)
+
+    def _conflicts(self, plan: CompiledPlan, unbound: bool,
+                   scope: FenceScope) -> bool:
+        """May applying a fence with ``scope`` change what ``plan`` returns
+        for a ticket with (``unbound``) default sources?"""
+        if scope.global_:
+            return True
+        labels = {s.label_id for s in plan.steps
+                  if isinstance(s, ExpandStep)}
+        if labels & scope.edge_labels:
+            return True
+        if NEVER_LABEL in labels and scope.interns_labels:
+            return True    # the fence may intern the label this plan awaits
+        if NO_LABEL in labels:
+            # wildcard hops span every base label
+            if scope.interns_labels:
+                return True
+            if any(not self.sess.schema.is_view_edge_label_id(lid)
+                   for lid in scope.edge_labels):
+                return True
+        props = set(plan._nprop_names)
+        if unbound:
+            props |= {p.prop for p in plan.start_preds}
+        if props & scope.node_props:
+            return True
+        if scope.creates_nodes and unbound:
+            return True    # new nodes may join the default-source selection
+        return False
+
+    # ----------------------------------------------------------- scheduling
+
+    def _plan_for(self, t: ServeTicket) -> Tuple[CompiledPlan, tuple]:
+        """Plan identity of a read *at scheduling time* (the view catalog may
+        have changed since submission, so use-views resolves here).  Returns
+        (plan, memo base key)."""
+        sess = self.sess
+        use = (sess.auto_optimize if t.use_views is None else t.use_views)
+        views = list(sess.views.values()) if (use and sess.views) else []
+        plan, _ = sess.planner.plan(t.query, views, sess.view_set_generation)
+        fp = query_fingerprint(t.query, sess.schema)
+        return plan, (fp, bool(views))
+
+    def _memo_answer(self, t: ServeTicket, plan: CompiledPlan,
+                     base: tuple) -> Optional[Tuple[RowResult, str]]:
+        """Answer a ticket from the cross-window memo if possible: an exact
+        binding hit, or a gather from the memoized unbound execution whose
+        rows subsume the ticket's sources."""
+        if not self.cfg.reuse_results:
+            return None
+        key = None if t.sources is None else t.sources.tobytes()
+        ent = self._memo.get((base, key))
+        if ent is not None:
+            if ent[0] is plan:
+                return (ent[1], "memo")
+            del self._memo[(base, key)]    # superseded plan: stale entry
+        if key is not None:
+            ent = self._memo.get((base, None))
+            if ent is not None and ent[0] is plan \
+                    and ent[1].covers(t.sources):
+                return (ent[1].gather(t.sources), "gather")
+        return None
+
+    def _collect(self):
+        """Walk the queue in submission order: classify every read as
+        memo-answerable, eligible for the next window (no conflicting fence
+        ahead of it), or blocked."""
+        scopes: List[FenceScope] = []
+        blocked_global = False
+        window: List[Tuple[ServeTicket, CompiledPlan, tuple]] = []
+        resolved: List[Tuple[ServeTicket, RowResult, str]] = []
+        for t in self._queue:
+            if t.kind == "write":
+                scopes.append(t.scope)
+                blocked_global = blocked_global or t.scope.global_
+                continue
+            if blocked_global:
+                continue
+            plan, base = self._plan_for(t)
+            if any(self._conflicts(plan, t.sources is None, sc)
+                   for sc in scopes):
+                continue
+            t.hoisted = bool(scopes)
+            ans = self._memo_answer(t, plan, base)
+            if ans is not None:
+                resolved.append((t, ans[0], ans[1]))
+                continue
+            window.append((t, plan, base))
+        return window, resolved
+
+    def step(self) -> bool:
+        """Advance the scheduler by one action: answer memo-servable
+        tickets, execute one batch window, or apply the front write fence.
+        Returns False when the queue is drained."""
+        if not self._queue:
+            return False
+        window, resolved = self._collect()
+        for t, rr, via in resolved:
+            self._finish_read(t, rr, via)
+        if window:
+            window.sort(key=lambda e: (e[0].admit_by, e[0].uid))
+            selected = window[:self.window_limit]
+            self._run_window(selected)
+        elif not resolved:
+            if self._queue[0].kind != "write":
+                # unreachable: the front read has no fences ahead of it, so
+                # it is always eligible or memo-servable
+                raise RuntimeError("serve scheduler stalled with a pending "
+                                   f"read at the queue front "
+                                   f"(uid={self._queue[0].uid})")
+            self._apply_fence(self._queue.popleft())
+        self._queue = collections.deque(
+            t for t in self._queue if not t.done)
+        return True
 
     def run(self) -> ServeStats:
-        """Drain the queue: alternate batch windows and write fences in
-        submission order.  Returns the engine's cumulative stats."""
-        while self._queue:
-            reads: List[ServeTicket] = []
-            while self._queue and self._queue[0].kind == "read":
-                reads.append(self._queue.popleft())
-            if reads:
-                self._run_window(reads)
-            if self._queue and self._queue[0].kind == "write":
-                t = self._queue.popleft()
-                t.write_result = self.sess.apply_writes(t.batch)
-                t.window = self.epoch
-                self.epoch += 1
-                self.stats.write_batches += 1
+        """Drain the queue synchronously.  Returns cumulative stats."""
+        while self.step():
+            pass
         return self.stats
+
+    async def drain(self) -> ServeStats:
+        """Async drain: yields to the event loop between scheduler steps so
+        coroutines awaiting tickets observe completions as they happen."""
+        import asyncio
+        while self.step():
+            await asyncio.sleep(0)
+        return self.stats
+
+    def poll(self, t: ServeTicket) -> bool:
+        """Non-blocking completion check (pure — does not advance)."""
+        return t.done
+
+    def result(self, t: ServeTicket):
+        """Pump the scheduler until ``t`` completes; returns its result."""
+        while not t.done:
+            if not self.step():
+                raise RuntimeError(
+                    f"ticket {t.uid} cannot complete: queue drained")
+        return t.result if t.kind == "read" else t.write_result
 
     # -------------------------------------------------------------- window
 
-    def _group_key(self, t: ServeTicket) -> Tuple[QueryFingerprint, bool]:
-        """Plan identity of a read *at window time* (the view catalog may
-        have changed since submission, so use-views resolves here)."""
-        use = (self.sess.auto_optimize if t.use_views is None
-               else t.use_views)
-        return (query_fingerprint(t.query, self.sess.schema),
-                bool(use and self.sess.views))
+    def _finish_read(self, t: ServeTicket, rr: RowResult, via: str) -> None:
+        t.result = rr.to_reach_result()
+        t.window = self.epoch
+        t.window_seq = self._window_seq
+        t.via = via
+        st = self.stats
+        st.queries += 1
+        if via == "memo":
+            st.memo_hits += 1
+        elif via == "gather":
+            st.gathers += 1
+        if t.hoisted:
+            st.hoisted += 1
 
-    def _run_window(self, reads: List[ServeTicket]) -> None:
+    def _run_window(self, selected) -> None:
         """Execute one batch window against the current engine snapshot."""
         sess = self.sess
         st = self.stats
+        cfg = self.cfg
         g_before = sess.g
-        groups: Dict[Tuple[QueryFingerprint, bool], List[ServeTicket]] = {}
-        for t in reads:
-            groups.setdefault(self._group_key(t), []).append(t)
-        for (_, use), tickets in groups.items():
-            views = list(sess.views.values()) if use else []
-            plan, _ = sess.planner.plan(tickets[0].query, views,
-                                        sess.view_set_generation)
-            # dedupe tickets by source binding: None = the plan's default
-            # start-constraint selection, shared by every unbound ticket
-            spec_idx: Dict[Optional[bytes], int] = {}
-            spec_sources: List[np.ndarray] = []
-            ticket_spec: List[int] = []
-            for t in tickets:
-                key = None if t.sources is None else t.sources.tobytes()
-                idx = spec_idx.get(key)
-                if idx is None:
-                    idx = len(spec_sources)
-                    spec_idx[key] = idx
-                    spec_sources.append(plan.default_sources()
-                                        if t.sources is None else t.sources)
-                ticket_spec.append(idx)
-            results = plan.execute_batch(spec_sources)
-            for t, idx in zip(tickets, ticket_spec):
-                t.result = results[idx]
+        t0 = time.perf_counter()
+
+        groups: Dict[int, _Group] = {}
+        for t, plan, base in selected:
+            grp = groups.get(id(plan))
+            if grp is None:
+                grp = groups[id(plan)] = _Group(plan, base)
+            grp.tickets.append(t)
+            key = None if t.sources is None else t.sources.tobytes()
+            idx = grp.spec_idx.get(key)
+            if idx is None:
+                idx = len(grp.spec_sources)
+                grp.spec_idx[key] = idx
+                grp.spec_sources.append(
+                    plan.default_sources() if t.sources is None
+                    else t.sources)
+                if key is None:
+                    grp.unbound_idx = idx
+            grp.ticket_spec.append(idx)
+
+        # split each group's specs into executed bindings and bindings
+        # answered by gathering rows of the group's unbound execution
+        plan_exec: Dict[int, List[int]] = {}      # group -> exec spec idxs
+        plan_gather: Dict[int, List[int]] = {}    # group -> gathered idxs
+        for gid, grp in groups.items():
+            ex, ga = [], []
+            ub = grp.unbound_idx
+            ub_src = grp.spec_sources[ub] if ub is not None else None
+            for i, src in enumerate(grp.spec_sources):
+                if (ub is not None and i != ub
+                        and _subset(src, ub_src)):
+                    ga.append(i)
+                else:
+                    ex.append(i)
+            plan_exec[gid] = ex
+            plan_gather[gid] = ga
+
+        # bucket groups by structure for cross-fingerprint sharing
+        buckets: Dict[tuple, List[int]] = {}
+        singles: List[int] = []
+        if cfg.structural_sharing:
+            for gid, grp in groups.items():
+                skey = grp.plan.structure_key()
+                if skey is None:
+                    singles.append(gid)
+                else:
+                    bkey = (skey, grp.plan.share_scales())
+                    buckets.setdefault(bkey, []).append(gid)
+            for bkey, gids in list(buckets.items()):
+                if len(gids) < 2:
+                    singles.extend(gids)
+                    del buckets[bkey]
+        else:
+            singles = list(groups)
+
+        spec_results: Dict[int, List[Optional[RowResult]]] = {
+            gid: [None] * len(groups[gid].spec_sources) for gid in groups}
+
+        def account(n_rows: int) -> None:
+            sizes = block_sizes(n_rows, sess.cfg.src_block,
+                                cfg.adaptive_blocks)
+            st.rows += n_rows
+            st.blocks += len(sizes)
+            st.block_capacity += sum(sizes)
+            st.block_sizes.extend(sizes)
+
+        for gid in singles:
+            grp = groups[gid]
+            ex = plan_exec[gid]
+            srcs = [grp.spec_sources[i] for i in ex]
+            rrs = grp.plan.execute_rows(srcs,
+                                        adaptive_blocks=cfg.adaptive_blocks)
+            for i, rr in zip(ex, rrs):
+                spec_results[gid][i] = rr
+            account(sum(int(np.asarray(s).shape[0]) for s in srcs))
+
+        for (skey, _), gids in buckets.items():
+            plans = [groups[gid].plan for gid in gids]
+            spec_lists = [[groups[gid].spec_sources[i]
+                           for i in plan_exec[gid]] for gid in gids]
+            shared = sess.planner.shared_program(skey)
+            per_plan = shared.execute(plans, spec_lists,
+                                      adaptive_blocks=cfg.adaptive_blocks)
+            for gid, rrs in zip(gids, per_plan):
+                for i, rr in zip(plan_exec[gid], rrs):
+                    spec_results[gid][i] = rr
+                st.shared_groups += 1
+            account(sum(int(np.asarray(s).shape[0])
+                        for specs in spec_lists for s in specs))
+
+        for gid, grp in groups.items():
+            ub = grp.unbound_idx
+            for i in plan_gather[gid]:
+                spec_results[gid][i] = spec_results[gid][ub].gather(
+                    grp.spec_sources[i])
+            # memoize every binding's rows for cross-window reuse
+            if cfg.reuse_results:
+                for key, i in grp.spec_idx.items():
+                    self._memo[(grp.base, key)] = (grp.plan,
+                                                   spec_results[gid][i])
+            reach = [rr.to_reach_result() for rr in spec_results[gid]]
+            seen_specs = set()
+            for t, i in zip(grp.tickets, grp.ticket_spec):
+                t.result = reach[i]
                 t.window = self.epoch
-            rows = sum(int(s.shape[0]) for s in spec_sources)
-            blk = plan.cfg.src_block
-            rows_pad = max(round_up(rows, blk), blk)
+                t.window_seq = self._window_seq
+                if i in plan_gather[gid]:
+                    t.via = "gather"
+                    st.gathers += 1
+                elif i in seen_specs:
+                    t.via = "dedup"
+                else:
+                    t.via = "exec"
+                seen_specs.add(i)
+                if t.window_seq > t.admit_by:
+                    st.deadline_misses += 1
+                if t.hoisted:
+                    st.hoisted += 1
             st.groups += 1
-            st.queries += len(tickets)
-            st.executions += len(spec_sources)
-            st.rows += rows
-            st.blocks += rows_pad // blk
-            st.block_capacity += rows_pad
-            st.group_sizes.append(len(tickets))
+            st.queries += len(grp.tickets)
+            st.executions += len(plan_exec[gid])
+            st.group_sizes.append(len(grp.tickets))
+
         # reads are pure: the window ran against one engine snapshot
         assert sess.g is g_before, "a read mutated the session graph"
         st.windows += 1
+        st.window_sizes.append(len(selected))
+        self._window_seq += 1
+
+        # adaptive window limit: back off when per-ticket latency spikes,
+        # grow with queue depth (more waiting tickets -> bigger batches)
+        elapsed = time.perf_counter() - t0
+        per_ticket = elapsed / max(len(selected), 1)
+        depth = sum(1 for t in self._queue
+                    if t.kind == "read" and not t.done)
+        if (self._lat_ewma is not None
+                and per_ticket > cfg.latency_backoff * self._lat_ewma
+                and self.window_limit > cfg.window_min):
+            self.window_limit = max(cfg.window_min, self.window_limit // 2)
+        elif depth > self.window_limit:
+            self.window_limit = min(cfg.window_max, self.window_limit * 2)
+        a = cfg.latency_smoothing
+        self._lat_ewma = (per_ticket if self._lat_ewma is None
+                          else a * per_ticket + (1 - a) * self._lat_ewma)
+
+    # --------------------------------------------------------------- fence
+
+    def _apply_fence(self, t: ServeTicket) -> None:
+        t.write_result = self.sess.apply_writes(t.batch)
+        t.window = self.epoch
+        self.epoch += 1
+        self.stats.write_batches += 1
+        self._pending_dead.difference_update(
+            int(e) for e in t.batch.edge_deletes)
+        self._evict_memo(t.scope)
+
+    def _evict_memo(self, scope: FenceScope) -> None:
+        """Drop memo entries the fence may invalidate.  Label staleness is
+        doubly covered (plan-identity check at lookup), but node-prop writes
+        and node creates don't bump label epochs — scope eviction is the
+        mechanism that keeps those exact."""
+        if not self._memo:
+            return
+        if scope.global_:
+            self._memo.clear()
+            return
+        dead = [key for key, (plan, _) in self._memo.items()
+                if self._conflicts(plan, key[1] is None, scope)]
+        for key in dead:
+            del self._memo[key]
+
+
+def _subset(sub: np.ndarray, sorted_arr: Optional[np.ndarray]) -> bool:
+    """Is every id of ``sub`` present in ``sorted_arr`` (ascending)?"""
+    if sorted_arr is None:
+        return False
+    sub = np.asarray(sub)
+    if sub.shape[0] == 0:
+        return True
+    if sorted_arr.shape[0] == 0:
+        return False
+    idx = np.clip(np.searchsorted(sorted_arr, sub), 0,
+                  sorted_arr.shape[0] - 1)
+    return bool(np.all(sorted_arr[idx] == sub))

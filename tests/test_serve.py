@@ -1,17 +1,21 @@
 """Serve-engine differential tests: batched == sequential, row for row.
 
-The serving contract (DESIGN.md §9): a mixed read/write workload pushed
-through :class:`~repro.serve.engine.ServeEngine` — reads grouped by plan
-fingerprint and executed as stacked frontier batches, writes applied as
-epoch fences between batch windows — returns for every ticket *exactly*
-(rows and DBHit/Rows metrics) what the same request sequence returns through
-per-query ``GraphSession.query`` / ``apply_writes`` calls.  Includes a write
-fence landing mid-window and a node-arena growth forcing full invalidation
-between windows.
+The serving contract (DESIGN.md §10): a mixed read/write workload pushed
+through :class:`~repro.serve.engine.ServeEngine` — reads continuously
+batched into adaptive windows, writes applied as label-scoped fences —
+returns for every ticket *exactly* (rows and DBHit/Rows metrics) what the
+same request sequence returns through per-query ``GraphSession.query`` /
+``apply_writes`` calls.  Includes a write fence landing mid-window, a
+node-arena growth forcing full invalidation between windows, and the
+scheduler invariants: disjoint-label fences don't serialize, admission
+follows deadlines under adversarial arrival, a hot fingerprint can't
+starve older tickets, and structural sharing / gather / memo answers are
+bit-identical to solo execution.
 """
 import numpy as np
 
 from repro.core import GraphBuilder, GraphSchema, GraphSession, WriteBatch
+from repro.serve.engine import ServeConfig
 
 QUERIES = [
     "MATCH (a:A)-[e:x]->(m:B)-[f:y]->(c) RETURN a, c",
@@ -198,6 +202,158 @@ def test_point_clients_pack_into_shared_blocks():
     assert stats.blocks == 1, "point clients must share one frontier block"
     for t, c in zip(tickets, clients):
         _assert_same(t.result, serve_sess.query(q, sources=c))
+
+
+def test_disjoint_label_fence_does_not_serialize():
+    """A write touching only label x must not fence reads that never touch
+    x: they hoist into the current window — and a control run shows the
+    same fence DOES serialize reads on its own label."""
+    serve_sess = _build(seed=6)
+    seq_sess = _build(seed=6)
+    q_y = QUERIES[3]                       # reads label y only, no node preds
+
+    eng = serve_sess.serve()
+    pre = [eng.submit(q_y) for _ in range(4)]
+    eng.submit_writes(WriteBatch().create_edge(0, 1, "x", props={"w": 1}))
+    post = [eng.submit(q_y) for _ in range(4)]
+    stats = eng.run()
+    assert stats.windows == 1, "disjoint-label fence serialized the window"
+    assert all(t.window == 0 for t in pre + post)
+    assert stats.hoisted >= len(post)
+
+    want = seq_sess.query(q_y)
+    seq_sess.apply_writes(
+        WriteBatch().create_edge(0, 1, "x", props={"w": 1}))
+    want_after = seq_sess.query(q_y)
+    _assert_same(want_after, want, "x-write changed a y-read?!")
+    for t in pre + post:
+        _assert_same(t.result, want)
+
+    # control: the same shape of fence on label y serializes y-readers
+    ctrl = _build(seed=6)
+    eng2 = ctrl.serve()
+    pre2 = [eng2.submit(q_y) for _ in range(4)]
+    eng2.submit_writes(WriteBatch().create_edge(0, 1, "y", props={"w": 4}))
+    post2 = [eng2.submit(q_y) for _ in range(4)]
+    stats2 = eng2.run()
+    assert stats2.windows == 2, "conflicting fence must split the window"
+    assert all(t.window == 0 for t in pre2)
+    assert all(t.window == 1 for t in post2)
+
+
+def test_deadline_ordering_under_adversarial_arrival():
+    """Later-submitted urgent tickets (deadline 0) are admitted before
+    earlier lax ones when the window can't hold everybody."""
+    sess = _build(seed=7)
+    eng = sess.serve(ServeConfig(window_init=4, window_min=4, window_max=4))
+    lax = [eng.submit(QUERIES[3], sources=np.asarray([i], np.int32),
+                      deadline=50) for i in range(8)]
+    urgent = [eng.submit(QUERIES[3], sources=np.asarray([i + 3], np.int32),
+                         deadline=0) for i in range(4)]
+    stats = eng.run()
+    assert all(t.window_seq == 0 for t in urgent), \
+        "urgent tickets must be admitted in the first window"
+    assert stats.deadline_misses == 0
+    assert stats.windows >= 2
+    for t in lax + urgent:
+        _assert_same(t.result, sess.query(QUERIES[3], sources=t.sources))
+
+
+def test_no_starvation_under_hot_fingerprint():
+    """Tickets already waiting carry older deadlines than a later flood of
+    hot-fingerprint tickets, so the flood cannot starve them."""
+    sess = _build(seed=8)
+    eng = sess.serve(ServeConfig(window_init=4, window_min=4, window_max=4))
+    old = [eng.submit(QUERIES[1], sources=np.asarray([i], np.int32))
+           for i in range(8)]
+    assert eng.step()                    # window 0 admits the 4 oldest
+    hot = [eng.submit(QUERIES[3], sources=np.asarray([i], np.int32))
+           for i in range(12)]           # flood with newer deadlines
+    stats = eng.run()
+    assert all(t.window_seq <= 1 for t in old), \
+        "pre-flood tickets were starved past their deadline order"
+    assert stats.deadline_misses == 0
+    for t in old:
+        _assert_same(t.result, sess.query(QUERIES[1], sources=t.sources))
+    for t in hot:
+        _assert_same(t.result, sess.query(QUERIES[3], sources=t.sources))
+
+
+def test_structural_sharing_exact_parity():
+    """Two fingerprints whose plans share hop structure (1-hop, labels
+    differing only as operands) run as one shared program — results stay
+    bit-identical to solo execution, and subsumed point bindings are
+    answered by row gather."""
+    sess = _build(seed=9)
+    q_x = "MATCH (a:A)-[e:x]->(b) RETURN a, b"
+    q_y = "MATCH (s:B)-[e:y]->(d) RETURN s, d"
+    eng = sess.serve()
+    tx = [eng.submit(q_x)] + [
+        eng.submit(q_x, sources=np.asarray([i], np.int32)) for i in (0, 2, 4)]
+    ty = [eng.submit(q_y)] + [
+        eng.submit(q_y, sources=np.asarray([i], np.int32)) for i in (1, 3, 5)]
+    stats = eng.run()
+    assert stats.groups == 2
+    assert stats.shared_groups == 2, \
+        "same-structure groups must bucket into one shared program"
+    for t in tx:
+        _assert_same(t.result, sess.query(q_x, sources=t.sources))
+    for t in ty:
+        _assert_same(t.result, sess.query(q_y, sources=t.sources))
+
+
+def test_occupancy_counts_unique_rows():
+    """Occupancy is honest under dedup (unique executed rows over launched
+    slots) and point groups get power-of-two block sizing."""
+    sess = _build(seed=10)
+    q = QUERIES[3]
+    eng = sess.serve()
+    for _ in range(16):
+        eng.submit(q)                   # identical: one execution
+    stats = eng.run()
+    n_src = int(sess.query(q).src_ids.size)
+    assert stats.executions == 1
+    assert stats.rows == n_src, "occupancy must count unique rows, not 16x"
+    assert stats.block_capacity >= stats.rows
+    assert 0.0 < stats.occupancy <= 1.0
+
+    eng2 = sess.serve()
+    pts = [np.asarray([i], np.int32) for i in range(5)]
+    tickets = [eng2.submit(q, sources=p) for p in pts]
+    s2 = eng2.run()
+    assert s2.blocks == 1 and s2.block_sizes == [8], \
+        "5 point rows must pack one pow2-sized (8) block"
+    assert s2.occupancy == 5 / 8
+    for t, p in zip(tickets, pts):
+        _assert_same(t.result, sess.query(q, sources=p))
+
+
+def test_async_submit_await_and_poll():
+    """The async client API: awaitable tickets with a concurrent drain;
+    poll() observes without advancing, result() pumps to completion."""
+    import asyncio
+    sess = _build(seed=11)
+    eng = sess.serve()
+
+    async def client(q):
+        return await eng.submit(q)
+
+    async def main():
+        return await asyncio.gather(
+            client(QUERIES[0]), client(QUERIES[3]), eng.drain())
+
+    r0, r3, stats = asyncio.run(main())
+    assert stats.queries == 2
+    _assert_same(r0, sess.query(QUERIES[0]))
+    _assert_same(r3, sess.query(QUERIES[3]))
+
+    eng2 = sess.serve()
+    t1 = eng2.submit(QUERIES[0])
+    t2 = eng2.submit(QUERIES[3])
+    assert not eng2.poll(t2)
+    r = eng2.result(t2)                  # pumps the scheduler
+    assert eng2.poll(t2) and eng2.poll(t1)   # same window answered both
+    _assert_same(r, sess.query(QUERIES[3]))
 
 
 def test_views_on_and_off_are_separate_groups():
