@@ -43,6 +43,9 @@ from typing import Dict, List, Optional, Tuple
 # is asserted machine-independently inside bench_serve itself.
 HEADLINES: List[Tuple] = [
     ("maintenance", "fig19_batched_delete_100_edges", "batched_vs_looped"),
+    # deferred-vs-exact whole-workload ratio: bench_maintenance_scaling
+    # asserts >= 1.0 machine-independently; the gate tracks the margin
+    ("maintenance", "fig19_deferred_workload", "deferred_workload_ratio"),
     ("wildcard", "wildcard_1hop_compact", "speedup_vs_arena"),
     ("plan_cache", "plan_cache_overhead_warm", "cold_over_warm"),
     ("plan_cache", "plan_cache_query_warm_e2e", "e2e_speedup"),

@@ -101,11 +101,12 @@ def bench_maintenance_scaling(mode: str, seed: int) -> None:
 
     n_comment = {"small": 3000, "default": 4000, "large": 8000}[mode]
 
-    def fresh_session():
+    def fresh_session(refresh: str = ""):
         g, schema, _ = snb_like(seed=seed + 1, n_person=500, n_post=400,
                                 n_comment=n_comment)
         sess = GraphSession(g, schema)
-        sess.create_view(WORKLOADS["snb"].views[0])   # ROOT_POST (unbounded)
+        # ROOT_POST (unbounded); refresh suffix selects the freshness policy
+        sess.create_view(WORKLOADS["snb"].views[0] + refresh)
         return sess
 
     # the setup scan needs only the raw graph + schema, not a full session
@@ -146,6 +147,55 @@ def bench_maintenance_scaling(mode: str, seed: int) -> None:
         _row(f"fig19_batched_delete_{n}_edges", t_batch / max(n, 1) * 1e6,
              f"batched_vs_looped={t_loop/max(t_batch,1e-12):.2f};"
              f"batch_s={t_batch:.3f};loop_s={t_loop:.3f}")
+        # deferred freshness (DESIGN.md §11): the same looped deletes only
+        # enqueue coalesced per-(view, label) deltas; one drain replays them
+        # in a single batched sweep
+        sess = fresh_session(" REFRESH DEFERRED")
+        t0 = time.perf_counter()
+        for eid in batch:
+            sess.delete_edge(int(eid))
+        sess.drain_all()
+        t_def = time.perf_counter() - t0
+        assert sess.check_consistency("ROOT_POST")
+        _row(f"fig19_deferred_delete_{n}_edges", t_def / max(n, 1) * 1e6,
+             f"deferred_vs_looped={t_loop/max(t_def,1e-12):.2f};"
+             f"deferred_s={t_def:.3f};loop_s={t_loop:.3f}")
+
+    # whole-workload freshness comparison: N looped single-edge deletes
+    # interleaved with view-answerable reads.  Exact pays one synchronous
+    # delta sweep per delete; deferred queues and drains once per
+    # conflicting read, so in a write-dominated mix (the policy's target
+    # regime) the coalesced write path must win end to end.  Each drain
+    # invalidates the view's cached plan and warmed label slices, so the
+    # read points are kept sparse — a read-heavy mix belongs to exact.
+    n_work = 100 if mode == "small" else 200
+    work = alive[:n_work]
+    read_q = WORKLOADS["snb"].reads[0]      # ROOT_POST answers this
+    read_every = max(n_work // 2, 1)
+
+    def run_interleaved(refresh: str) -> float:
+        sess = fresh_session(refresh)
+        t0 = time.perf_counter()
+        for i, eid in enumerate(work):
+            sess.delete_edge(int(eid))
+            if (i + 1) % read_every == 0:
+                sess.query(read_q, use_views=True)
+        elapsed = time.perf_counter() - t0
+        sess.drain_all()
+        assert sess.check_consistency("ROOT_POST")
+        return elapsed
+
+    t_exact = run_interleaved("")
+    t_deferred = run_interleaved(" REFRESH DEFERRED")
+    ratio = t_exact / max(t_deferred, 1e-12)
+    assert ratio >= 1.0, (
+        f"deferred refresh must not lose to exact on a write-heavy "
+        f"interleaved workload: exact={t_exact:.3f}s "
+        f"deferred={t_deferred:.3f}s ratio={ratio:.2f}")
+    _row("fig19_deferred_workload", t_deferred / n_work * 1e6,
+         f"deferred_workload_ratio={ratio:.2f};"
+         f"exact_s={t_exact:.3f};deferred_s={t_deferred:.3f};"
+         f"deletes={n_work};reads={n_work // read_every}")
 
 
 def bench_profile(mode: str, seed: int) -> None:

@@ -12,6 +12,9 @@ throughput (queries/s) plus group-occupancy stats::
 
     PYTHONPATH=src python -m benchmarks.workload_driver --serve \
         --dataset snb --small --clients 32 --rounds 3 --seed 0
+
+``--freshness {exact,deferred,<N>}`` runs every view under the chosen
+refresh policy (DESIGN.md §11); an integer selects ``REFRESH STALENESS N``.
 """
 from __future__ import annotations
 
@@ -89,8 +92,10 @@ def _write_targets(sess: GraphSession, rng):
 
 
 def run_workload(g, schema, wl: WorkloadConfig, repeats: int = 3,
-                 seed: int = 0, cfg: ExecConfig | None = None
-                 ) -> WorkloadReport:
+                 seed: int = 0, cfg: ExecConfig | None = None,
+                 refresh: str = "") -> WorkloadReport:
+    """``refresh`` is an optional ``REFRESH ...`` clause suffix appended to
+    every view definition (DESIGN.md §11), e.g. ``" REFRESH DEFERRED"``."""
     rng = np.random.default_rng(seed)
     sess = GraphSession(g, schema, cfg or ExecConfig())
     report = WorkloadReport(dataset=wl.name, view_creation_s={}, queries=[])
@@ -105,7 +110,7 @@ def run_workload(g, schema, wl: WorkloadConfig, repeats: int = 3,
 
     # ---- create views (Table III) --------------------------------------
     for vtext in wl.views:
-        view = sess.create_view(vtext)
+        view = sess.create_view(vtext + refresh)
         report.view_creation_s[view.name] = view.creation_seconds
     report.mv_total = sum(report.view_creation_s.values())
 
@@ -197,7 +202,9 @@ def run_workload(g, schema, wl: WorkloadConfig, repeats: int = 3,
     report.rewrite_total_s = sess.planner.rewrite_seconds_total
     report.rewrite_amortized_s = (
         sess.planner.rewrite_seconds_total / max(sess.planner.plan_calls, 1))
-    # paper's consistency verification (§VI-C)
+    # paper's consistency verification (§VI-C); non-exact views must be
+    # drained first — stale-by-design queues fail the exactness check
+    sess.drain_all()
     for vname in list(sess.views):
         assert sess.check_consistency(vname), f"{vname} inconsistent!"
     return report
@@ -291,7 +298,8 @@ def _serve_script(sess: GraphSession, wl: WorkloadConfig, clients: int,
 
 def run_serve_workload(make_dataset: Callable[[], Tuple], wl: WorkloadConfig,
                        clients: int = 32, rounds: int = 3, seed: int = 0,
-                       cfg: ExecConfig | None = None) -> ServeReport:
+                       cfg: ExecConfig | None = None,
+                       refresh: str = "") -> ServeReport:
     """Replay the workload through the serve engine and sequentially on a
     twin session; returns throughput and batching stats.
 
@@ -299,13 +307,16 @@ def run_serve_workload(make_dataset: Callable[[], Tuple], wl: WorkloadConfig,
     every call (deterministic seed) — the sequential replay needs its own
     session so write fences land on equal state.  Row parity is spot-checked
     on result cardinality + DBHit/Rows per read (the exact row-for-row
-    oracle lives in ``tests/test_serve.py``).
+    oracle lives in ``tests/test_serve.py``).  ``refresh`` appends a
+    ``REFRESH ...`` clause to every view on both twins (DESIGN.md §11):
+    fences then enqueue instead of maintaining, and both replay paths drain
+    at the same first-conflicting-read points, so parity still holds.
     """
     rng = np.random.default_rng(seed)
     ds = make_dataset()
     sess = GraphSession(ds[0], ds[1], cfg or ExecConfig())
     for vtext in wl.views:
-        sess.create_view(vtext)
+        sess.create_view(vtext + refresh)
     ops = _serve_script(sess, wl, clients, rounds, rng)
 
     # ---- batched serve run (timer covers submission + drain, so the
@@ -323,7 +334,7 @@ def run_serve_workload(make_dataset: Callable[[], Tuple], wl: WorkloadConfig,
     ds2 = make_dataset()
     sess2 = GraphSession(ds2[0], ds2[1], cfg or ExecConfig())
     for vtext in wl.views:
-        sess2.create_view(vtext)
+        sess2.create_view(vtext + refresh)
     t0 = time.perf_counter()
     seq = []
     for kind, payload, src in ops:
@@ -343,6 +354,7 @@ def run_serve_workload(make_dataset: Callable[[], Tuple], wl: WorkloadConfig,
         assert got == want, (
             f"serve replay diverged from sequential on uid={t.uid}: "
             f"{got} != {want}")
+    sess.drain_all()     # non-exact views: flush queues before the oracle
     for vname in list(sess.views):
         assert sess.check_consistency(vname), f"{vname} inconsistent!"
 
@@ -378,7 +390,17 @@ def main() -> None:
                     help="read windows (each closed by a write fence)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--freshness", default="exact",
+                    help="view refresh policy: 'exact', 'deferred', or an "
+                         "integer staleness bound (REFRESH STALENESS N)")
     args = ap.parse_args()
+
+    if args.freshness == "exact":
+        refresh = ""
+    elif args.freshness == "deferred":
+        refresh = " REFRESH DEFERRED"
+    else:
+        refresh = f" REFRESH STALENESS {int(args.freshness)}"
 
     scale = 0.25 if args.small else 0.4
     if args.dataset == "snb":
@@ -398,11 +420,13 @@ def main() -> None:
     wl = WORKLOADS[args.dataset]
     if args.serve:
         rep = run_serve_workload(make, wl, clients=args.clients,
-                                 rounds=args.rounds, seed=args.seed)
+                                 rounds=args.rounds, seed=args.seed,
+                                 refresh=refresh)
         print(rep.summary())
         return
     g, schema, _ = make()
-    rep = run_workload(g, schema, wl, repeats=args.repeats, seed=args.seed)
+    rep = run_workload(g, schema, wl, repeats=args.repeats, seed=args.seed,
+                       refresh=refresh)
     for q in rep.queries:
         print(f"{q.name}: ori={q.ori_s*1e3:.2f}ms opt={q.opt_s*1e3:.2f}ms "
               f"speedup={q.speedup:.2f}")

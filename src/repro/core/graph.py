@@ -123,8 +123,19 @@ class WriteBatch:
     # node_creates, prop name, value); resolved to arena ids at apply time
     edge_create_props: List[Tuple[int, str, int]] = field(default_factory=list)
     node_create_props: List[Tuple[int, str, int]] = field(default_factory=list)
+    # per-view freshness routing for THIS batch: view name -> mode override
+    # ("exact" | "deferred" | "bounded_stale").  Views absent from the map
+    # follow their declared FreshnessPolicy; an "exact" override forces a
+    # synchronous maintenance pass (draining any queued deltas first).
+    refresh_routing: Dict[str, str] = field(default_factory=dict)
 
     # -- builder-style helpers -------------------------------------------
+    def route_view(self, name: str, mode: str) -> "WriteBatch":
+        """Override one view's freshness mode for this batch only."""
+        if mode not in ("exact", "deferred", "bounded_stale"):
+            raise ValueError(f"unknown freshness mode {mode!r}")
+        self.refresh_routing[name] = mode
+        return self
     def create_edge(self, src: int, dst: int, label: str,
                     props: Optional[Dict[str, int]] = None) -> "WriteBatch":
         idx = len(self.edge_creates)

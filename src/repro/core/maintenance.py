@@ -26,8 +26,8 @@ acknowledged duplicate-instance issue):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -630,3 +630,102 @@ def affected_sources_edge(templates: ViewTemplates, vdef: ViewDef,
                                       metrics=metrics)
             hit |= row.astype(bool)
     return np.flatnonzero(hit).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Freshness subsystem: per-view delta queues + on-demand drain (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PendingDelta:
+    """Queued maintenance work for one non-exact view.
+
+    Writes under a ``deferred``/``bounded_stale`` policy skip template
+    evaluation entirely: the base graph mutates immediately (only the view's
+    materialized edges go stale) and each touched element's *structural
+    endpoints* are appended here, coalesced per (view, label) through
+    :meth:`DeltaPairs.concat`/:meth:`DeltaPairs.merged` — delete/recreate
+    churn on the same (src, dst) collapses to one queue row, which is what
+    makes a drain after N writes cheaper than N exact passes.
+
+    The queue must contain every element whose mutation can invalidate or
+    create a view path: deleted edges, created edges, the incident edges of
+    deleted nodes (captured *before* the deletion), property-touched edges
+    (by label), and property-touched nodes (for properties the view reads).
+    Given that, a single affected-source sweep per queue group on the
+    *current* graph is exact: for any stored row whose supporting path broke,
+    the first invalidated element has an intact, constraint-satisfying prefix
+    in the current graph — every earlier element would otherwise itself be a
+    queued first break — so the reverse-prefix run from the queued element
+    reaches the row's source.  New paths are found symmetrically.  The sweep
+    runs with ``check_preds=False`` (a queued element may satisfy predicates
+    on either side of its mutation); supersets are exact because the
+    follow-up recompute is idempotent.
+    """
+
+    edges: Dict[str, DeltaPairs] = field(default_factory=dict)
+    nodes: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    writes: int = 0            # queue rows appended (staleness, write count)
+    first_epoch: int = -1      # session write epoch of the first enqueue
+
+    @property
+    def is_empty(self) -> bool:
+        return self.writes == 0
+
+    def add_edges(self, label: str, srcs: np.ndarray,
+                  dsts: np.ndarray, epoch: int) -> None:
+        srcs = np.asarray(srcs, np.int32)
+        if srcs.size == 0:
+            return
+        add = DeltaPairs(srcs, np.asarray(dsts, np.int32),
+                         np.ones(srcs.size, np.int64))
+        cur = self.edges.get(label)
+        self.edges[label] = (add if cur is None
+                             else cur.concat(add)).merged()
+        self._note(int(srcs.size), epoch)
+
+    def add_nodes(self, node_ids: np.ndarray, epoch: int) -> None:
+        node_ids = np.asarray(node_ids, np.int32)
+        if node_ids.size == 0:
+            return
+        self.nodes = np.union1d(self.nodes, node_ids).astype(np.int32)
+        self._note(int(node_ids.size), epoch)
+
+    def _note(self, n: int, epoch: int) -> None:
+        self.writes += n
+        if self.first_epoch < 0:
+            self.first_epoch = epoch
+
+    def staleness(self, current_epoch: int) -> int:
+        """Staleness degree: max of queued-write count and epoch age."""
+        if self.is_empty:
+            return 0
+        return max(self.writes, current_epoch - self.first_epoch)
+
+    def clear(self) -> None:
+        self.edges = {}
+        self.nodes = np.zeros(0, np.int32)
+        self.writes = 0
+        self.first_epoch = -1
+
+
+def pending_affected_sources(pending: PendingDelta, templates: ViewTemplates,
+                             vdef: ViewDef, schema: GraphSchema,
+                             metrics: Metrics, ex: PathExecutor) -> np.ndarray:
+    """Drain sweep: affected sources of every queued delta, evaluated on the
+    *current* graph (``ex``).  One :func:`affected_sources_edges` pass per
+    queued (label) group plus one :func:`affected_sources_nodes` pass over
+    property-touched nodes; predicates on the queued elements themselves are
+    skipped (see :class:`PendingDelta`)."""
+    affected = np.zeros(0, np.int32)
+    for label, dp in pending.edges.items():
+        aff = affected_sources_edges(
+            templates, vdef, schema, dp.src, dp.dst, label,
+            metrics=metrics, ex=ex, edge_ids=None, check_preds=False)
+        affected = np.union1d(affected, aff).astype(np.int32)
+    if pending.nodes.size:
+        aff = affected_sources_nodes(
+            templates, vdef, schema, pending.nodes, metrics=metrics, ex=ex)
+        affected = np.union1d(affected, aff).astype(np.int32)
+    return affected

@@ -93,3 +93,15 @@ def match_view(qpath: PathPattern, vpath: PathPattern) -> Optional[ViewMatch]:
         if _try_at(qpath, rpath, start):
             return ViewMatch(start=start, length=k, forward=False)
     return None
+
+
+def read_may_use_view(qpath: PathPattern, view_name: str,
+                      vpath: PathPattern, splice: bool = True) -> bool:
+    """Freshness gate (DESIGN.md §11): could evaluating ``qpath`` read the
+    edges of the view named ``view_name`` — directly, because the query
+    pattern names the view label, or indirectly, because the optimizer could
+    splice the view into the plan?  Conservative in the cheap direction: a
+    True here only costs an eager drain, never a stale answer."""
+    if any(r.label == view_name for r in qpath.rels):
+        return True
+    return splice and match_view(qpath, vpath) is not None

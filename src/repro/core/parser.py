@@ -25,8 +25,9 @@ import re
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.pattern import (
-    Direction, NodePat, PathPattern, PRED_OPS, PropPred, Query,
-    QueryFingerprint, RelPat, ViewDef, mark_references, normalize_preds,
+    Direction, FreshnessPolicy, NodePat, PathPattern, PRED_OPS, PropPred,
+    Query, QueryFingerprint, RelPat, ViewDef, mark_references,
+    normalize_preds,
 )
 from repro.utils import INF_HOPS
 
@@ -45,7 +46,8 @@ _TOKEN_RE = re.compile(
 )
 
 _KEYWORDS = {"MATCH", "RETURN", "CREATE", "VIEW", "AS", "CONSTRUCT", "WHERE",
-             "LIMIT", "COUNT", "AND"}
+             "LIMIT", "COUNT", "AND", "REFRESH", "EXACT", "DEFERRED",
+             "STALENESS"}
 
 
 class ParseError(ValueError):
@@ -385,9 +387,28 @@ def parse_view(text: str) -> ViewDef:
     if c.accept("WHERE"):
         mpath = _parse_where(c, mpath)
     c.expect(")")
+    refresh = FreshnessPolicy()
+    if c.accept("REFRESH"):
+        if c.accept("EXACT"):
+            refresh = FreshnessPolicy(mode="exact")
+        elif c.accept("DEFERRED"):
+            refresh = FreshnessPolicy(mode="deferred")
+        elif c.accept("STALENESS"):
+            tok = c.next()
+            try:
+                bound = int(tok)
+            except ValueError:
+                raise ParseError(
+                    f"REFRESH STALENESS expects an integer bound, got {tok!r}")
+            refresh = FreshnessPolicy(mode="bounded_stale", staleness=bound)
+        else:
+            raise ParseError(
+                "REFRESH expects EXACT, DEFERRED, or STALENESS <n> "
+                f"(got {c.peek()!r})")
     if not c.done():
         raise ParseError(f"trailing tokens: {c.toks[c.i:]}")
     src_var, dst_var = cpath.nodes[0].var, cpath.nodes[1].var
     if src_var is None or dst_var is None:
         raise ParseError("CONSTRUCT endpoints must be named variables")
-    return ViewDef(name=name, src_var=src_var, dst_var=dst_var, match=mpath)
+    return ViewDef(name=name, src_var=src_var, dst_var=dst_var, match=mpath,
+                   refresh=refresh)

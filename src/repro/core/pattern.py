@@ -253,6 +253,43 @@ class Query:
 
 
 @dataclass(frozen=True)
+class FreshnessPolicy:
+    """Per-view refresh policy (``CREATE VIEW ... REFRESH <mode>``).
+
+    ``exact``         — synchronous delta maintenance inside every write
+                        (the paper's model; the default).
+    ``deferred``      — writes enqueue coalesced per-(view, label) deltas;
+                        the queue drains on the first read that could use
+                        the view, or when the serve engine applies a fence
+                        whose readers depend on it.
+    ``bounded_stale`` — like deferred, but reads within the staleness bound
+                        may answer from the stale view; the queue drains
+                        lazily once queued-write count or epoch age exceeds
+                        ``staleness``.
+    """
+
+    mode: str = "exact"        # "exact" | "deferred" | "bounded_stale"
+    staleness: int = 0         # bound for bounded_stale (writes or epochs)
+
+    def __post_init__(self):
+        if self.mode not in ("exact", "deferred", "bounded_stale"):
+            raise ValueError(f"unknown freshness mode {self.mode!r}")
+        if self.mode == "bounded_stale" and self.staleness < 1:
+            raise ValueError("bounded_stale requires staleness >= 1")
+
+    @property
+    def is_exact(self) -> bool:
+        return self.mode == "exact"
+
+    def pretty(self) -> str:
+        if self.mode == "exact":
+            return "REFRESH EXACT"
+        if self.mode == "deferred":
+            return "REFRESH DEFERRED"
+        return f"REFRESH STALENESS {self.staleness}"
+
+
+@dataclass(frozen=True)
 class ViewDef:
     """CREATE VIEW <name> AS (CONSTRUCT (s)-[:name]->(d) MATCH <path>)."""
 
@@ -260,6 +297,7 @@ class ViewDef:
     src_var: str
     dst_var: str
     match: PathPattern
+    refresh: FreshnessPolicy = FreshnessPolicy()
 
     def __post_init__(self):
         vars_ = {self.match.start.var, self.match.end.var}
@@ -275,9 +313,11 @@ class ViewDef:
         return self.src_var == self.match.start.var
 
     def pretty(self) -> str:
+        suffix = "" if self.refresh.is_exact else f" {self.refresh.pretty()}"
         return (
             f"CREATE VIEW {self.name} AS (CONSTRUCT ({self.src_var})-"
             f"[r:{self.name}]->({self.dst_var}) MATCH {self.match.pretty()})"
+            f"{suffix}"
         )
 
 

@@ -69,7 +69,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -277,6 +277,12 @@ class CompiledPlan:
         self._nprop_names: Tuple[str, ...] = tuple(sorted(
             {p.prop for s in self.steps if isinstance(s, FilterStep)
              for p in s.preds}))
+        # (node label id, prop) pairs the plan's node filters read — the
+        # serve engine's fence/conflict scoping unit (NO_LABEL = any label)
+        self._nprop_pairs: FrozenSet[Tuple[int, str]] = frozenset(
+            (s.label_id, p.prop)
+            for s in self.steps if isinstance(s, FilterStep)
+            for p in s.preds)
         # validity snapshot (same machinery the engine's caches key off)
         self.label_epochs: Dict[int, int] = {
             s.label_id: engine.epochs.of(s.label_id)

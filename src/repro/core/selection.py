@@ -26,8 +26,25 @@ from repro.core.matcher import match_view
 from repro.core.optimizer import change_pg
 from repro.core.parser import parse_query
 from repro.core.pattern import (
-    NodePat, PathPattern, Query, ViewDef, normalize_preds,
+    FreshnessPolicy, NodePat, PathPattern, Query, ViewDef, normalize_preds,
 )
+
+
+def maintenance_weight(refresh: FreshnessPolicy) -> float:
+    """Relative per-write maintenance cost of a refresh policy (Eq. 1's
+    maintenance term, DESIGN.md §11).
+
+    Exact maintenance pays the full delta sweep on every write.  Deferred
+    maintenance coalesces queued deltas per (view, label) pair and replays
+    them in one batched sweep at the next conflicting read, collapsing
+    delete/recreate churn — modeled as a flat coalescing discount.  A
+    bounded-stale view amortizes one sweep over up to ``staleness`` queued
+    writes."""
+    if refresh.mode == "exact":
+        return 1.0
+    if refresh.mode == "deferred":
+        return 0.25
+    return 1.0 / (1.0 + refresh.staleness)
 
 
 def _signature(path: PathPattern) -> tuple:
@@ -87,6 +104,7 @@ class Candidate:
     n_matches: int
     db_hit_no_v: int
     e_vl: int
+    maint_cost: float = 0.0  # policy-weighted per-write maintenance estimate
 
 
 class _Probe:
@@ -113,9 +131,17 @@ class _Probe:
 def score_candidate(ex: PathExecutor, sub: PathPattern, queries: Sequence[Query],
                     name: str,
                     match_memo: Optional[Dict[tuple, bool]] = None,
-                    measure_memo: Optional[Dict[tuple, tuple]] = None
+                    measure_memo: Optional[Dict[tuple, tuple]] = None,
+                    refresh: FreshnessPolicy = FreshnessPolicy(),
+                    write_fraction: float = 0.0
                     ) -> Optional[Candidate]:
-    """Measure Eq. 1 for one candidate against the current graph."""
+    """Measure Eq. 1 for one candidate against the current graph.
+
+    ``write_fraction`` is the workload's writes-per-view-read ratio; when
+    nonzero the score is discounted by the policy-weighted maintenance cost
+    of keeping the candidate fresh (one delta sweep costs on the order of
+    the view's own optimized read, ``n_sl + 2 e_vl``).  The defaults
+    (exact policy, ``write_fraction=0``) reproduce the pure Eq. 1 score."""
     # strip interior references for the view definition (replace() keeps
     # every other constraint — key AND property predicates)
     from dataclasses import replace as _replace
@@ -147,6 +173,9 @@ def score_candidate(ex: PathExecutor, sub: PathPattern, queries: Sequence[Query]
         if measure_memo is not None:
             measure_memo[mkey] = (e_vl, n_sl, db_hit_no_v)
     per_use_eff = db_hit_no_v - (n_sl + 2 * e_vl)        # Eq. 1
+    maint_cost = (write_fraction * maintenance_weight(refresh)
+                  * (n_sl + 2 * e_vl))
+    per_use_eff -= maint_cost
     if match_memo is None:
         n_matches = sum(1 for q in queries
                         if match_view(q.path, sub) is not None)
@@ -165,20 +194,29 @@ def score_candidate(ex: PathExecutor, sub: PathPattern, queries: Sequence[Query]
             n_matches += int(hit)
     if n_matches == 0:
         return None
+    if refresh.mode != "exact":
+        vdef = ViewDef(name=vdef.name, src_var=vdef.src_var,
+                       dst_var=vdef.dst_var, match=vdef.match,
+                       refresh=refresh)
     return Candidate(vdef=vdef, opt_eff=per_use_eff * n_matches,
                      n_matches=n_matches, db_hit_no_v=db_hit_no_v,
-                     e_vl=e_vl)
+                     e_vl=e_vl, maint_cost=maint_cost)
 
 
 def select_views(g, schema, read_queries: Sequence[str], k: int = 3,
                  cfg: Optional[ExecConfig] = None,
-                 engine: Optional[ExecEngine] = None) -> List[ViewDef]:
+                 engine: Optional[ExecEngine] = None,
+                 refresh: FreshnessPolicy = FreshnessPolicy(),
+                 write_fraction: float = 0.0) -> List[ViewDef]:
     """Greedy top-k workload-driven view selection (measured Eq. 1 scores).
 
     Pass a session's :class:`ExecEngine` as ``engine`` to score candidates on
     the already-warm per-label caches instead of rebuilding them; candidate
     probes are pure reads, so the engine state they leave behind (warmed
-    slices) stays valid for the session."""
+    slices) stays valid for the session.  ``refresh``/``write_fraction``
+    thread the freshness-policy maintenance term through every candidate
+    score (see :func:`score_candidate`); selected definitions carry the
+    policy, so materializing them creates views under it."""
     queries = [parse_query(q) for q in read_queries]
     if engine is not None:
         ex = PathExecutor(engine=engine,
@@ -203,7 +241,9 @@ def select_views(g, schema, read_queries: Sequence[str], k: int = 3,
         for sig, sub in remaining.items():
             c = score_candidate(ex, sub, live_queries, name=f"AUTO_V{i}",
                                 match_memo=match_memo,
-                                measure_memo=measure_memo)
+                                measure_memo=measure_memo,
+                                refresh=refresh,
+                                write_fraction=write_fraction)
             if c is not None and c.opt_eff > 0:
                 scored.append(c)
         if not scored:

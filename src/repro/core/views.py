@@ -24,6 +24,7 @@ batches — and maintenance evaluates one grouped telescoped delta per
 from __future__ import annotations
 
 import time
+import weakref
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple, Union
 
@@ -34,8 +35,9 @@ from repro.core.executor import (
     ExecConfig, ExecEngine, Metrics, PathExecutor, ReachResult,
 )
 from repro.core.maintenance import (
-    DeltaPairs, ViewTemplates, affected_sources_edges, affected_sources_nodes,
-    batch_edge_delta_pairs,
+    DeltaPairs, PendingDelta, ViewTemplates, affected_sources_edges,
+    affected_sources_nodes, batch_edge_delta_pairs,
+    pending_affected_sources,
 )
 from repro.core.parser import parse_query, parse_view
 from repro.core.pattern import Query, ViewDef
@@ -68,10 +70,19 @@ class MaterializedView:
     stats: ViewStats
     pair_slot: Dict[Tuple[int, int], int] = field(default_factory=dict)
     creation_seconds: float = 0.0
+    # freshness subsystem (DESIGN.md §11): queued deltas for non-exact
+    # policies, and the session write epoch of the last drain
+    pending: PendingDelta = field(default_factory=PendingDelta)
+    drain_epoch: int = 0
 
     @property
     def name(self) -> str:
         return self.vdef.name
+
+    @property
+    def is_stale(self) -> bool:
+        """Materialized edges lag the base graph (queued, undrained deltas)."""
+        return not self.pending.is_empty
 
     def oriented(self, s: int, d: int) -> Tuple[int, int]:
         """Map a (match-start, match-end) pair to (view-src, view-dst)."""
@@ -110,6 +121,11 @@ class GraphSession:
         # invalidation key bumped by create_view/drop_view
         self.planner = QueryPlanner(self.engine, schema, self.cfg)
         self.view_set_generation = 0
+        # freshness bookkeeping: one epoch per applied write batch (staleness
+        # age unit), plus live serve engines to notify at drain/drop points
+        # so they can evict memo entries keyed on refreshed view labels
+        self.write_epoch = 0
+        self._serve_engines: "weakref.WeakSet" = weakref.WeakSet()
         self._delta_cfg = ExecConfig(
             backend="segment", src_block=8,
             max_closure_iters=self.cfg.max_closure_iters,
@@ -215,11 +231,16 @@ class GraphSession:
                 f"view {name!r} does not exist; existing views: "
                 f"{sorted(self.views) or '(none)'}")
         view = self.views.pop(name)
+        # queued deltas die with the view — a later drain_all or staleness
+        # probe must never resurrect them
+        view.pending.clear()
         self.view_set_generation += 1
         slots = np.fromiter(view.pair_slot.values(), np.int32,
                             len(view.pair_slot))
         if slots.size:
             self._set_graph(G.delete_edges(self.g, slots), {view.label_id})
+        for eng in list(self._serve_engines):
+            eng._on_view_dropped(view)
 
     # ------------------------------------------------------ view-edge deltas
 
@@ -395,6 +416,14 @@ class GraphSession:
         in batch order.
         """
         metrics = Metrics()
+        self.write_epoch += 1
+        # exact maintenance telescopes around THIS batch from a consistent
+        # pre-state: any view maintained exactly this batch must first drain
+        # deltas queued while it ran under a non-exact routing
+        for view in list(self.views.values()):
+            if (self._effective_mode(view, batch) == "exact"
+                    and not view.pending.is_empty):
+                self._drain_view(view, metrics)
         g0 = self.g
 
         # view edges are owned by the view machinery: a user-created edge
@@ -479,6 +508,9 @@ class GraphSession:
             [n for n in batch.node_deletes if bool(n_alive[int(n)])],
             np.int32))
         incident_labels: set = set()
+        # (label id, srcs, dsts) of edges killed by node deletes — captured
+        # BEFORE the delete so deferred queues record the broken endpoints
+        incident_groups: List[Tuple[int, np.ndarray, np.ndarray]] = []
         g3 = g2n
         if node_del.size:
             e_alive2 = np.asarray(g2n.edge_alive)
@@ -486,14 +518,21 @@ class GraphSession:
             dead[node_del] = True
             inc = e_alive2 & (dead[np.asarray(g2n.edge_src)]
                               | dead[np.asarray(g2n.edge_dst)])
-            incident_labels = set(
-                int(lid) for lid in np.unique(np.asarray(g2n.edge_label)[inc]))
+            inc_idx = np.flatnonzero(inc)
+            inc_lab = np.asarray(g2n.edge_label)[inc_idx]
+            inc_src = np.asarray(g2n.edge_src)[inc_idx]
+            inc_dst = np.asarray(g2n.edge_dst)[inc_idx]
+            for lid in np.unique(inc_lab):
+                m = inc_lab == lid
+                incident_groups.append((int(lid), inc_src[m], inc_dst[m]))
+            incident_labels = set(lid for lid, _, _ in incident_groups)
             g3 = G.delete_nodes(g2n, node_del)
 
         if g3 is g0 and not batch.node_creates:
             # no structural change; property updates may still apply
             self._apply_prop_updates(batch, created_slots, created_nodes,
                                      metrics)
+            self._drain_over_bound(batch, metrics)
             self.last_maintenance_metrics = metrics
             return BatchResult(created_slots, created_nodes)
 
@@ -553,9 +592,30 @@ class GraphSession:
         # -- per-view maintenance: one grouped pass per (view, label)
         for view in self.views.values():
             if dead_set:
+                # index purge stays synchronous for every policy: arena edges
+                # incident to deleted nodes are already dead, and leaving the
+                # slots indexed would alias recycled slots on the next create
                 for key in [k for k in view.pair_slot
                             if k[0] in dead_set or k[1] in dead_set]:
                     view.pair_slot.pop(key)
+            if self._effective_mode(view, batch) != "exact":
+                # non-exact policies: the base mutations above already landed,
+                # so only this view's derived edges go stale.  Queue the
+                # structural endpoints per label; the drain sweep re-derives
+                # every affected source on the then-current graph.
+                pend = view.pending
+                for name, srcs, dsts, _eids in del_groups:
+                    if self._uses_label(view, name):
+                        pend.add_edges(name, srcs, dsts, self.write_epoch)
+                for name, srcs, dsts, _eids in create_groups:
+                    if self._uses_label(view, name):
+                        pend.add_edges(name, srcs, dsts, self.write_epoch)
+                for lid, srcs, dsts in incident_groups:
+                    if self._uses_label(view, name_of(lid)):
+                        pend.add_edges(name_of(lid), srcs, dsts,
+                                       self.write_epoch)
+                view.stats.e_vl = len(view.pair_slot)
+                continue
             affected = np.zeros(0, np.int32)
             if view.counting:
                 for name, srcs, dsts, eids in del_groups:
@@ -619,6 +679,7 @@ class GraphSession:
         self._old_exec.engine = self.engine
         self._mid_exec.engine = self.engine
         self._aux_exec.engine = self.engine
+        self._drain_over_bound(batch, metrics)
         self.last_maintenance_metrics = metrics
         return BatchResult(created_slots, created_nodes)
 
@@ -693,6 +754,30 @@ class GraphSession:
                          for p in n.preds}
             rel_read = {p.prop for r in view.vdef.match.rels
                         for p in r.preds}
+            if self._effective_mode(view, batch) != "exact":
+                # queue the prop-touched elements; by drain time the
+                # old-vs-new predicate membership question is moot — the
+                # sweep runs with check_preds=False on the current graph
+                pend = view.pending
+                if rel_read:
+                    q_by_label: Dict[str, List[int]] = {}
+                    for i, p, _ in e_sets:
+                        if p in rel_read:
+                            q_by_label.setdefault(name_of(int(e_lab[i])),
+                                                  []).append(i)
+                    for name, eids in q_by_label.items():
+                        if not self._uses_label(view, name):
+                            continue
+                        eids_np = np.unique(np.asarray(eids, np.int32))
+                        pend.add_edges(name, e_src[eids_np], e_dst[eids_np],
+                                       self.write_epoch)
+                if node_read:
+                    nids = np.unique(np.asarray(
+                        [i for i, p, _ in n_sets if p in node_read],
+                        np.int32))
+                    if nids.size:
+                        pend.add_nodes(nids, self.write_epoch)
+                continue
             affected = np.zeros(0, np.int32)
             if rel_read:
                 by_label: Dict[str, List[int]] = {}
@@ -765,13 +850,128 @@ class GraphSession:
         return any(r.label == label or r.label is None
                    for r in view.vdef.match.rels)
 
+    # ---------------------------------------------------- freshness / drains
+
+    def _effective_mode(self, view: MaterializedView,
+                        batch: G.WriteBatch) -> str:
+        """The refresh mode governing this view for this batch: the declared
+        policy, unless the batch routed an override (WriteBatch.route_view)."""
+        return batch.refresh_routing.get(view.name, view.vdef.refresh.mode)
+
+    def _drain_view(self, view: MaterializedView, metrics: Metrics) -> bool:
+        """Replay a view's queued deltas: one affected-source sweep per
+        queued label plus one per queued node set, then a single batched
+        recompute — all on the *current* graph.
+
+        Completeness rests on a first-break argument: for any view row that
+        must change, walk its derivation path from the source and take the
+        first element the queued writes invalidated (or newly validated).
+        Every earlier element is intact and constraint-satisfying in the
+        current graph, so the reversed-prefix sweep from the queued element's
+        path-side endpoint reaches the source.  Node deletes participate via
+        their incident edges (endpoints captured before the delete); the
+        path-side endpoint of the first broken element is alive by
+        minimality.  Prop flips are queued by element with the sweep running
+        ``check_preds=False``, so either-side membership is covered.
+        """
+        pending = view.pending
+        view.drain_epoch = self.write_epoch
+        if pending.is_empty:
+            return False
+        # a view whose match names another view's label reads those edges
+        # while re-deriving: refresh dependencies first (views can only name
+        # earlier-created views, so recursion terminates)
+        for r in view.vdef.match.rels:
+            dep = self.views.get(r.label) if r.label else None
+            if dep is not None and dep is not view and not dep.pending.is_empty:
+                self._drain_view(dep, metrics)
+        affected = pending_affected_sources(
+            pending, view.templates, view.vdef, self.schema, metrics,
+            self._delta)
+        pending.clear()
+        if affected.size:
+            self._recompute_sources(view, affected, metrics, ex=self._delta)
+        view.stats.e_vl = len(view.pair_slot)
+        for eng in list(self._serve_engines):
+            eng._on_view_drained(view)
+        return True
+
+    def _drain_over_bound(self, batch: G.WriteBatch, metrics: Metrics) -> None:
+        """End-of-batch backstop: a bounded-stale view whose queued lag
+        exceeds its declared bound repairs immediately (write-time drain), so
+        no later read can observe staleness beyond the bound."""
+        for view in list(self.views.values()):
+            if self._effective_mode(view, batch) != "bounded_stale":
+                continue
+            if view.pending.is_empty:
+                continue
+            bound = view.vdef.refresh.staleness
+            if view.pending.staleness(self.write_epoch) > bound:
+                self._drain_view(view, metrics)
+
+    def _read_triggers_drain(self, view: MaterializedView) -> bool:
+        """Would a read that touches this view have to drain it first?
+        Deferred views always refresh on first conflicting read; bounded-stale
+        views may answer stale while within their declared bound."""
+        if view.pending.is_empty:
+            return False
+        pol = view.vdef.refresh
+        if (pol.mode == "bounded_stale"
+                and view.pending.staleness(self.write_epoch) <= pol.staleness):
+            return False
+        return True
+
+    def _maybe_drain_for_query(self, q: Query, use_views: bool) -> None:
+        """Pre-plan freshness pass: drain any stale view this query could
+        read — directly (the query names the view label) or via an optimizer
+        splice.  Cheap pattern-level check; the post-plan label check in
+        :meth:`query` is the safety net for rewrites this misses."""
+        stale = [v for v in self.views.values()
+                 if self._read_triggers_drain(v)]
+        if not stale:
+            return
+        from repro.core.matcher import read_may_use_view
+        for view in stale:
+            if read_may_use_view(q.path, view.name, view.vdef.match,
+                                 splice=use_views):
+                self._drain_view(view, Metrics())
+
+    def drain_view(self, name: str) -> bool:
+        """Drain one view's queued deltas now.  Returns True if any were
+        queued.  No-op (False) for an already-fresh view."""
+        if name not in self.views:
+            raise ValueError(f"view {name!r} does not exist")
+        metrics = Metrics()
+        out = self._drain_view(self.views[name], metrics)
+        self.last_maintenance_metrics = metrics
+        return out
+
+    def drain_all(self) -> None:
+        """Drain every stale view (serve fences and tests use this as the
+        global synchronization point)."""
+        metrics = Metrics()
+        for view in list(self.views.values()):
+            self._drain_view(view, metrics)
+        self.last_maintenance_metrics = metrics
+
+    def stale_views(self) -> List[str]:
+        """Names of views whose materialized edges lag the base graph."""
+        return [v.name for v in self.views.values() if v.is_stale]
+
     # ------------------------------------------------------- view selection
 
-    def select_views(self, read_queries, k: int = 3):
-        """Workload-driven view selection scored on the session's warm engine."""
+    def select_views(self, read_queries, k: int = 3, refresh=None,
+                     write_fraction: float = 0.0):
+        """Workload-driven view selection scored on the session's warm
+        engine.  ``refresh``/``write_fraction`` make the Eq. 1 score
+        maintenance-aware (core/selection.py); selected definitions carry
+        the policy."""
+        from repro.core.pattern import FreshnessPolicy
         from repro.core.selection import select_views as _select
         return _select(self.g, self.schema, read_queries, k=k, cfg=self.cfg,
-                       engine=self.engine)
+                       engine=self.engine,
+                       refresh=refresh or FreshnessPolicy(),
+                       write_fraction=write_fraction)
 
     # -------------------------------------------------------------- queries
 
@@ -790,9 +990,24 @@ class GraphSession:
         if isinstance(q, str):
             q = parse_query(q)
         use = self.auto_optimize if use_views is None else use_views
+        self._maybe_drain_for_query(q, use)
         views = list(self.views.values()) if (use and self.views) else []
         plan, self.last_rewrite_seconds = self.planner.plan(
             q, views, self.view_set_generation)
+        # post-plan safety net: the greedy rewrite fixpoint can splice in a
+        # view the pre-plan pattern check missed (a view matching only a
+        # partially rewritten path).  Drain any such stale view, then replan
+        # — the drain bumps the view label's epoch, so the first plan is
+        # invalid anyway
+        drained = False
+        for view in self.views.values():
+            if (view.label_id in plan.label_epochs
+                    and self._read_triggers_drain(view)):
+                self._drain_view(view, Metrics())
+                drained = True
+        if drained:
+            plan, rw = self.planner.plan(q, views, self.view_set_generation)
+            self.last_rewrite_seconds += rw
         return plan.execute(sources=sources)
 
     # ------------------------------------------------------------- serving
@@ -812,7 +1027,9 @@ class GraphSession:
 
         The re-derivation runs on the session engine, so a wildcard rel in
         the view's match expands over base labels only — other views'
-        (and this view's own) materialized edges cannot pollute the check."""
+        (and this view's own) materialized edges cannot pollute the check.
+        A view under a non-exact refresh policy must be drained first
+        (:meth:`drain_view`) — an undrained stale view fails by design."""
         view = self.views[name]
         res = self._exec.run_path(view.vdef.match, counting=view.counting)
         s_ids, d_ids, cnt = res.pairs()

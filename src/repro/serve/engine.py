@@ -143,12 +143,37 @@ class FenceScope:
 
     global_: bool = False
     edge_labels: FrozenSet[int] = frozenset()
-    node_props: FrozenSet[str] = frozenset()
+    # (node label id, prop) pairs the fence writes; NO_LABEL pairs with any
+    # label (a prop set on a node whose label the scope can't pin down)
+    node_props: FrozenSet[Tuple[int, str]] = frozenset()
     creates_nodes: bool = False
     interns_labels: bool = False    # creates edges under a brand-new label
+    # views impacted by this fence whose effective refresh policy is
+    # non-exact: applying the fence only queues their deltas, so their
+    # labels stay out of edge_labels — a read touching one must instead
+    # order behind the fence and drain (or prove itself within a staleness
+    # bound and hoist)
+    deferred_views: FrozenSet[str] = frozenset()
+    write_ops: int = 0              # batch op count (staleness estimation)
 
 
 _GLOBAL_SCOPE = FenceScope(global_=True)
+
+
+def _prop_pairs_conflict(reads: FrozenSet[Tuple[int, str]],
+                         writes: FrozenSet[Tuple[int, str]]) -> bool:
+    """Do any (node label, prop) read/write pairs collide?  ``NO_LABEL`` (and
+    the not-yet-interned ``NEVER_LABEL``) act as wildcards on either side."""
+    by_prop: Dict[str, set] = {}
+    for lid, p in reads:
+        by_prop.setdefault(p, set()).add(lid)
+    for lid, p in writes:
+        lids = by_prop.get(p)
+        if lids is None:
+            continue
+        if lid < 0 or lid in lids or any(l < 0 for l in lids):
+            return True
+    return False
 
 
 @dataclass
@@ -171,6 +196,7 @@ class ServeStats:
     gathers: int = 0           # tickets answered by row-subsumption gather
     hoisted: int = 0           # tickets answered ahead of a pending fence
     shared_groups: int = 0     # groups run through a shared structural program
+    drains: int = 0            # read-triggered targeted view drains
 
     @property
     def mean_group_size(self) -> float:
@@ -205,7 +231,7 @@ class ServeStats:
                 f"memo={self.memo_hits} gathers={self.gathers} "
                 f"hoisted={self.hoisted} share_rate={self.share_rate:.2f} "
                 f"deadline_misses={self.deadline_misses} "
-                f"writes={self.write_batches}")
+                f"writes={self.write_batches} drains={self.drains}")
 
 
 class _Group:
@@ -257,6 +283,10 @@ class ServeEngine:
         # (fingerprint, use, binding-bytes|None) -> (plan, RowResult)
         self._memo: Dict[tuple, Tuple[CompiledPlan, RowResult]] = {}
         self._pending_dead: set = set()    # edge slots pending deletion
+        self._pending_dead_nodes: set = set()  # node slots pending deletion
+        # the session notifies us at drain/drop points (targeted memo
+        # eviction for content that changes outside any fence application)
+        session._serve_engines.add(self)
 
     # -------------------------------------------------------------- submit
 
@@ -291,6 +321,7 @@ class ServeEngine:
         t = ServeTicket(uid=self._next_uid(), kind="write", batch=batch,
                         scope=self._fence_scope(batch))
         self._pending_dead.update(int(e) for e in batch.edge_deletes)
+        self._pending_dead_nodes.update(int(n) for n in batch.node_deletes)
         self._queue.append(t)
         return t
 
@@ -336,31 +367,55 @@ class ServeEngine:
                 interns = True     # brand-new label: id unknown until apply
             else:
                 labels.add(lid)
-        node_props = ({p for _, p, _ in batch.node_prop_sets}
-                      | {p for _, p, _ in batch.node_create_props})
-        # close over view maintenance: a fence touching a view's inputs
-        # rewrites edges under the view's label too
+        # node-prop writes scope to (node label, prop) pairs so reads over a
+        # disjoint node label stay fence-free.  A set on a dead or
+        # pending-dead node falls back to global (slot reuse makes the label
+        # at apply time unknowable); a create-prop's label comes from the
+        # batch itself (un-interned label -> wildcard pair)
+        n_alive = np.asarray(g.node_alive)
+        n_lab = np.asarray(g.node_label)
+        node_props: set = set()
+        for nid, p, _ in batch.node_prop_sets:
+            nid = int(nid)
+            if nid in self._pending_dead_nodes or not bool(n_alive[nid]):
+                return _GLOBAL_SCOPE
+            node_props.add((int(n_lab[nid]), p))
+        for idx, p, _ in batch.node_create_props:
+            lid = sess.schema.node_labels.maybe_id(
+                batch.node_creates[int(idx)][0])
+            node_props.add((lid if lid >= 0 else NO_LABEL, p))
+        # close over view maintenance: a fence touching an exactly-maintained
+        # view's inputs rewrites edges under the view's label too.  Views
+        # whose effective policy for this batch is non-exact only get their
+        # deltas queued — their labels stay out of scope, and the view name
+        # goes to deferred_views for the freshness gate instead
         name_of = sess.schema.edge_labels.name_of
+        deferred: set = set()
         changed = True
         while changed:
             changed = False
             for view in sess.views.values():
-                if view.label_id in labels:
+                if view.label_id in labels or view.name in deferred:
                     continue
-                v_nprops = {p.prop for n in view.vdef.match.nodes
-                            for p in n.preds}
-                hit = bool(node_props & v_nprops)
+                v_pairs = frozenset(
+                    (sess.schema.node_label_id(n.label), p.prop)
+                    for n in view.vdef.match.nodes for p in n.preds)
+                hit = _prop_pairs_conflict(v_pairs, frozenset(node_props))
                 hit = hit or (interns and any(
                     r.label is None for r in view.vdef.match.rels))
                 hit = hit or any(sess._uses_label(view, name_of(lid))
                                  for lid in labels)
                 if hit:
-                    labels.add(view.label_id)
+                    if sess._effective_mode(view, batch) == "exact":
+                        labels.add(view.label_id)
+                    else:
+                        deferred.add(view.name)
                     changed = True
         return FenceScope(
             global_=False, edge_labels=frozenset(labels),
             node_props=frozenset(node_props),
-            creates_nodes=bool(batch.node_creates), interns_labels=interns)
+            creates_nodes=bool(batch.node_creates), interns_labels=interns,
+            deferred_views=frozenset(deferred), write_ops=len(batch))
 
     def _conflicts(self, plan: CompiledPlan, unbound: bool,
                    scope: FenceScope) -> bool:
@@ -381,10 +436,12 @@ class ServeEngine:
             if any(not self.sess.schema.is_view_edge_label_id(lid)
                    for lid in scope.edge_labels):
                 return True
-        props = set(plan._nprop_names)
+        props = set(plan._nprop_pairs)
         if unbound:
-            props |= {p.prop for p in plan.start_preds}
-        if props & scope.node_props:
+            props |= {(plan.start_label_id, p.prop)
+                      for p in plan.start_preds}
+        if props and scope.node_props \
+                and _prop_pairs_conflict(frozenset(props), scope.node_props):
             return True
         if scope.creates_nodes and unbound:
             return True    # new nodes may join the default-source selection
@@ -442,6 +499,17 @@ class ServeEngine:
             if any(self._conflicts(plan, t.sources is None, sc)
                    for sc in scopes):
                 continue
+            blocked, need_drain = self._freshness_gate(plan, scopes)
+            if blocked:
+                continue
+            if need_drain:
+                # targeted read-triggered drain: refresh exactly the stale
+                # views this plan reads, then replan (the drain bumps their
+                # label epochs, invalidating the plan just computed)
+                for view in need_drain:
+                    self.sess.drain_view(view.name)
+                    self.stats.drains += 1
+                plan, base = self._plan_for(t)
             t.hoisted = bool(scopes)
             ans = self._memo_answer(t, plan, base)
             if ans is not None:
@@ -449,6 +517,42 @@ class ServeEngine:
                 continue
             window.append((t, plan, base))
         return window, resolved
+
+    def _freshness_gate(self, plan: CompiledPlan, scopes: List[FenceScope]):
+        """Classify a read against the stale views its plan touches.
+
+        Returns ``(blocked, need_drain)``.  A read whose plan expands a
+        non-exact view's label must order behind every queued fence that
+        impacts the view (sequential-twin parity: those fences' deltas
+        belong to the read's snapshot), unless the view is bounded-stale and
+        the read provably stays within the declared bound even if every
+        impacting fence ahead applied first — then it may hoist and answer
+        stale.  Once no impacting fence is ahead, a read touching an
+        over-bound or deferred stale view drains it before running."""
+        sess = self.sess
+        blocked = False
+        need_drain: List = []
+        for view in sess.views.values():
+            if view.label_id not in plan.label_epochs:
+                continue
+            ahead = [sc for sc in scopes if view.name in sc.deferred_views]
+            pol = view.vdef.refresh
+            if pol.mode == "bounded_stale":
+                pend = view.pending
+                cur_age = (0 if pend.is_empty
+                           else sess.write_epoch - pend.first_epoch)
+                # conservative future-staleness estimate: every impacting
+                # fence ahead applies first, each contributing all its ops
+                est = max(pend.writes + sum(sc.write_ops for sc in ahead),
+                          cur_age + len(ahead))
+                if est <= pol.staleness:
+                    continue          # stale answer permitted: hoistable
+            if ahead:
+                blocked = True
+                break
+            if sess._read_triggers_drain(view):
+                need_drain.append(view)
+        return blocked, need_drain
 
     def step(self) -> bool:
         """Advance the scheduler by one action: answer memo-servable
@@ -677,7 +781,29 @@ class ServeEngine:
         self.stats.write_batches += 1
         self._pending_dead.difference_update(
             int(e) for e in t.batch.edge_deletes)
+        self._pending_dead_nodes.difference_update(
+            int(n) for n in t.batch.node_deletes)
         self._evict_memo(t.scope)
+
+    # ----------------------------------------------- session notifications
+
+    def _on_view_drained(self, view) -> None:
+        """A view's materialized edges just changed outside any fence scope
+        (queued deltas replayed): drop memo entries whose plan reads them.
+        Plan identity would miss anyway (the drain bumps the view label's
+        epoch), but eviction keeps the memo from pinning dead row blocks."""
+        self._evict_view_label(view.label_id)
+
+    def _on_view_dropped(self, view) -> None:
+        self._evict_view_label(view.label_id)
+
+    def _evict_view_label(self, label_id: int) -> None:
+        if not self._memo:
+            return
+        dead = [key for key, (plan, _) in self._memo.items()
+                if label_id in plan.label_epochs]
+        for key in dead:
+            del self._memo[key]
 
     def _evict_memo(self, scope: FenceScope) -> None:
         """Drop memo entries the fence may invalidate.  Label staleness is

@@ -161,3 +161,88 @@ def test_differential_covers_required_step_count():
     """Default 210 = 3 seeds x 70 steps; the oracle's bar is >= 200.  The
     env knobs may only scale the oracle *up* (the deep-lane contract)."""
     assert N_SEEDS * STEPS >= 200
+
+
+# ---------------------------------------------------------------------------
+# freshness-mode differential: deferred / bounded-stale interleavings
+# ---------------------------------------------------------------------------
+
+FRESHNESS_MODES = [" REFRESH DEFERRED", " REFRESH STALENESS 3"]
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+@pytest.mark.parametrize("mode", FRESHNESS_MODES)
+def test_differential_freshness_modes(seed, mode):
+    """The tiered-freshness oracle (DESIGN.md §11): under the same random
+    interleaving, with every view declared deferred or bounded-stale,
+
+    - every read answered through the (possibly drain-triggering) view path
+      matches the no-views derivation row for row at every drain point;
+    - a bounded-stale view's queued lag never exceeds its declared bound;
+    - periodic ``drain_all`` points restore ``check_consistency`` exactly.
+    """
+    bound = 3 if "STALENESS" in mode else None
+    rng = np.random.default_rng(seed + 100)
+    g, schema, base_eids = _build(rng)
+    sess = GraphSession(g, schema)
+    view_idx = rng.choice(len(VIEWS), size=2 + (seed % 2), replace=False)
+    views = [sess.create_view(VIEWS[i] + mode) for i in sorted(view_idx)]
+    for v in views:
+        assert sess.check_consistency(v.name)
+
+    alive_nodes = set(range(N_NODES))
+    alive_edges = set(base_eids)
+
+    def live_base_edges(ids):
+        alive = np.asarray(sess.g.edge_alive)
+        lab = np.asarray(sess.g.edge_label)
+        return {e for e in ids if bool(alive[e])
+                and not schema.is_view_edge_label_id(int(lab[e]))}
+
+    steps = max(STEPS // 2, 20)   # two modes per seed: keep total bounded
+    for step in range(steps):
+        batch = _random_batch(rng, alive_nodes, alive_edges)
+        res = sess.apply_writes(batch)
+        for eid in batch.edge_deletes:
+            alive_edges.discard(int(eid))
+        alive_edges.update(int(s) for s in res.edge_slots)
+        alive_nodes.update(int(s) for s in res.node_slots)
+        for nid in batch.node_deletes:
+            alive_nodes.discard(int(nid))
+        alive_edges = live_base_edges(alive_edges)
+
+        if bound is not None:
+            for v in views:
+                lag = v.pending.staleness(sess.write_epoch)
+                assert lag <= bound, (
+                    f"seed={seed} step={step}: {v.name} lag {lag} exceeds "
+                    f"declared bound {bound}")
+
+        if step % 5 == 2:
+            # drain point: the view-path read drains what it needs (deferred)
+            # and must then agree with the oracle.  Bounded-stale views may
+            # legally answer stale within their bound, so force the drain
+            # point explicitly there before comparing.
+            if bound is not None:
+                sess.drain_all()
+            for q in QUERIES:
+                with_v = _pairs(sess.query(q, use_views=True))
+                without = _pairs(sess.query(q, use_views=False))
+                assert with_v == without, (
+                    f"seed={seed} step={step} mode={mode.strip()}: rows "
+                    f"diverge for {q!r}:\n  with views: {with_v}\n"
+                    f"  without:    {without}")
+
+        if step % 11 == 7:
+            sess.drain_all()
+            for v in views:
+                assert sess.check_consistency(v.name), (
+                    f"seed={seed} step={step} mode={mode.strip()}: "
+                    f"{v.name} inconsistent after drain_all")
+
+    sess.drain_all()
+    for v in views:
+        assert sess.check_consistency(v.name)
+    for q in QUERIES:
+        assert _pairs(sess.query(q, use_views=True)) == \
+            _pairs(sess.query(q, use_views=False))

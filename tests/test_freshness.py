@@ -1,0 +1,250 @@
+"""Tiered view freshness (DESIGN.md §11): per-view refresh policies.
+
+Exact views keep PR-6 synchronous semantics; deferred views queue coalesced
+per-(view, label) deltas and drain on first conflicting read (or
+explicitly); bounded-stale views lazily repair once the queued-write count
+or epoch age exceeds the declared bound.  Every drain must land on exactly
+the state a from-scratch re-derivation produces (``check_consistency``) and
+every post-drain read must match the no-views oracle row for row.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, GraphSchema, GraphSession, WriteBatch
+from repro.core.pattern import FreshnessPolicy
+
+
+def _build(refresh="", n=6):
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    A = [b.add_node("A") for _ in range(n)]
+    B = [b.add_node("B") for _ in range(n)]
+    C = [b.add_node("C") for _ in range(n)]
+    for i in range(n):
+        b.add_edge(A[i], B[i], "x", props={"w": i})
+        b.add_edge(B[i], C[i], "y")
+    sess = GraphSession(b.finalize(edge_cap=256), schema)
+    sess.create_view(
+        "CREATE VIEW V AS (CONSTRUCT (s)-[r:V]->(d) "
+        "MATCH (s:A)-[:x]->(m:B)-[:y]->(d:C))" + refresh)
+    return sess, A, B, C
+
+
+def _rows(sess, q, **kw):
+    return sorted(zip(*sess.query(q, **kw).pairs()))
+
+
+Q2 = "MATCH (s:A)-[:x]->(m:B)-[:y]->(d:C)"
+
+
+# ---------------------------------------------------------------------------
+# policy object + plumbing
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    assert FreshnessPolicy().is_exact
+    with pytest.raises(ValueError):
+        FreshnessPolicy(mode="sometimes")
+    with pytest.raises(ValueError):
+        FreshnessPolicy(mode="bounded_stale", staleness=0)
+    assert FreshnessPolicy(mode="bounded_stale", staleness=2).staleness == 2
+
+
+def test_exact_views_never_go_stale():
+    sess, A, B, C = _build()               # default REFRESH EXACT
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    assert sess.stale_views() == []
+    assert sess.check_consistency("V")
+
+
+# ---------------------------------------------------------------------------
+# deferred: enqueue, coalesce, drain on read
+# ---------------------------------------------------------------------------
+
+def test_deferred_write_queues_and_read_drains():
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    assert sess.stale_views() == ["V"]
+    assert not sess.check_consistency("V")   # stale by design until drained
+    # a read that can use the view drains it first
+    got = _rows(sess, Q2, use_views=True)
+    assert sess.stale_views() == []
+    assert got == _rows(sess, Q2, use_views=False)
+    assert sess.check_consistency("V")
+
+
+def test_deferred_queue_coalesces_churn():
+    """Delete + recreate of the same endpoints collapses to one queued row
+    (DeltaPairs.merged), and the drain lands on the fixed point."""
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    view = sess.views["V"]
+    before = dict(view.pair_slot)
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    sess.apply_writes(WriteBatch().create_edge(A[0], B[0], "x"))
+    assert view.pending.writes == 2
+    assert all(dp.src.size == 1 for dp in view.pending.edges.values())
+    assert sess.drain_view("V")
+    assert dict(view.pair_slot) == before
+    assert sess.check_consistency("V")
+
+
+def test_deferred_direct_view_label_read_drains():
+    """Querying the view's label explicitly (not via rewrite) also counts
+    as a conflicting read."""
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    got = _rows(sess, "MATCH (s:A)-[:V]->(d:C)", use_views=False)
+    assert sess.stale_views() == []
+    assert got == _rows(sess, Q2, use_views=False)
+
+
+def test_deferred_node_delete_and_prop_updates_drain_exactly():
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    sess.apply_writes(WriteBatch(node_deletes=[B[1]]))
+    sess.apply_writes(WriteBatch(node_prop_sets=[(A[2], "p", 1)]))
+    sess.apply_writes(WriteBatch(edge_prop_sets=[(0, "w", 9)]))
+    sess.drain_all()
+    assert sess.check_consistency("V")
+    assert _rows(sess, Q2, use_views=True) == _rows(sess, Q2, use_views=False)
+
+
+def test_unrelated_read_does_not_drain():
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    _rows(sess, "MATCH (s:B)-[:y]->(d:C)", use_views=True)  # V can't splice
+    assert sess.stale_views() == ["V"], \
+        "a read the view cannot serve must not force a drain"
+
+
+# ---------------------------------------------------------------------------
+# bounded-stale: reads within bound stay stale, bound breach repairs
+# ---------------------------------------------------------------------------
+
+def test_bounded_stale_read_within_bound_answers_stale():
+    sess, A, B, C = _build(" REFRESH STALENESS 3")
+    pre = _rows(sess, Q2, use_views=True)
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    assert _rows(sess, Q2, use_views=True) == pre        # stale, permitted
+    assert sess.stale_views() == ["V"]
+    assert _rows(sess, Q2, use_views=False) != pre
+
+
+def test_bounded_stale_write_count_breach_drains_at_write_time():
+    sess, A, B, C = _build(" REFRESH STALENESS 2")
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    sess.apply_writes(WriteBatch(edge_deletes=[2]))
+    assert sess.stale_views() == ["V"]                   # at the bound: kept
+    sess.apply_writes(WriteBatch(edge_deletes=[4]))
+    assert sess.stale_views() == [], "third write must breach bound 2"
+    assert sess.check_consistency("V")
+
+
+def test_bounded_stale_epoch_age_breach():
+    """Age counts write epochs, so unrelated batches also age the queue."""
+    sess, A, B, C = _build(" REFRESH STALENESS 2")
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))       # queues, age 0
+    sess.apply_writes(WriteBatch(node_prop_sets=[(C[0], "q", 1)]))  # age 1
+    assert sess.stale_views() == ["V"]
+    sess.apply_writes(WriteBatch(node_prop_sets=[(C[0], "q", 2)]))  # age 2
+    sess.apply_writes(WriteBatch(node_prop_sets=[(C[0], "q", 3)]))  # age 3>2
+    assert sess.stale_views() == []
+    assert sess.check_consistency("V")
+
+
+# ---------------------------------------------------------------------------
+# per-batch routing overrides
+# ---------------------------------------------------------------------------
+
+def test_route_view_defers_an_exact_view_for_one_batch():
+    sess, A, B, C = _build()                              # exact
+    sess.apply_writes(
+        WriteBatch(edge_deletes=[0]).route_view("V", "deferred"))
+    assert sess.stale_views() == ["V"]
+    # the next exact batch pre-drains so its telescoped deltas start from a
+    # consistent state
+    sess.apply_writes(WriteBatch(edge_deletes=[2]))
+    assert sess.stale_views() == []
+    assert sess.check_consistency("V")
+
+
+def test_route_view_exact_forces_synchronous_refresh():
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    assert sess.stale_views() == ["V"]
+    sess.apply_writes(
+        WriteBatch(edge_deletes=[2]).route_view("V", "exact"))
+    assert sess.stale_views() == []
+    assert sess.check_consistency("V")
+
+
+def test_route_view_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        WriteBatch().route_view("V", "eventually")
+
+
+# ---------------------------------------------------------------------------
+# drop_view with pending deltas (the satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_drop_view_discards_pending_deltas():
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    assert sess.stale_views() == ["V"]
+    sess.drop_view("V")
+    assert sess.stale_views() == []
+    sess.drain_all()                                      # must be a no-op
+    got = _rows(sess, Q2, use_views=True)
+    assert got == _rows(sess, Q2, use_views=False)
+
+
+def test_drop_view_with_pending_evicts_serve_memo():
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    eng = sess.serve()
+    label_id = sess.views["V"].label_id
+    t = eng.submit(Q2, use_views=True)
+    eng.run()
+    assert any(label_id in plan.label_epochs
+               for plan, _ in eng._memo.values()), "memo should hold V rows"
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    sess.drop_view("V")
+    assert not any(label_id in plan.label_epochs
+                   for plan, _ in eng._memo.values()), \
+        "drop_view must evict memo entries reading the dropped view"
+    t2 = eng.submit(Q2, use_views=True)
+    eng.run()
+    assert sorted(zip(*t2.result.pairs())) == _rows(sess, Q2,
+                                                    use_views=False)
+
+
+def test_drained_view_evicts_serve_memo():
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    eng = sess.serve()
+    label_id = sess.views["V"].label_id
+    eng.submit(Q2, use_views=True)
+    eng.run()
+    assert any(label_id in plan.label_epochs
+               for plan, _ in eng._memo.values())
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))
+    sess.drain_view("V")
+    assert not any(label_id in plan.label_epochs
+                   for plan, _ in eng._memo.values()), \
+        "drain must evict memo entries whose plans read the view"
+
+
+# ---------------------------------------------------------------------------
+# views over views: dependency-first drains
+# ---------------------------------------------------------------------------
+
+def test_drain_refreshes_named_dependency_first():
+    sess, A, B, C = _build(" REFRESH DEFERRED")
+    sess.create_view(
+        "CREATE VIEW W AS (CONSTRUCT (s)-[r:W]->(d) "
+        "MATCH (s:A)-[:V]->(d:C)) REFRESH DEFERRED")
+    assert sess.check_consistency("W")
+    sess.apply_writes(WriteBatch(edge_deletes=[0]))       # stales V
+    sess.views["W"].pending.add_nodes(np.asarray([A[0]], np.int32),
+                                      sess.write_epoch)   # force W stale too
+    sess.drain_view("W")                                  # must drain V first
+    assert "V" not in sess.stale_views()
+    assert sess.check_consistency("V")
+    assert sess.check_consistency("W")

@@ -206,3 +206,42 @@ def test_predicate_pretty_round_trip():
         assert normalize_preds(a.preds) == normalize_preds(b.preds)
     for a, b in zip(q1.path.rels, q2.path.rels):
         assert normalize_preds(a.preds) == normalize_preds(b.preds)
+
+
+# ---------------------------------------------------------------------------
+# REFRESH clause: freshness policies on CREATE VIEW (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def test_refresh_clause_parses_all_modes():
+    base = ("CREATE VIEW RV AS (CONSTRUCT (s)-[r:RV]->(d) "
+            "MATCH (s:A)-[:x]->(d:B))")
+    assert parse_view(base).refresh.mode == "exact"
+    assert parse_view(base + " REFRESH EXACT").refresh.mode == "exact"
+    v = parse_view(base + " REFRESH DEFERRED")
+    assert v.refresh.mode == "deferred"
+    v = parse_view(base + " refresh staleness 5")       # keywords fold case
+    assert v.refresh.mode == "bounded_stale"
+    assert v.refresh.staleness == 5
+
+
+def test_refresh_clause_rejects_garbage():
+    base = ("CREATE VIEW RV AS (CONSTRUCT (s)-[r:RV]->(d) "
+            "MATCH (s:A)-[:x]->(d:B))")
+    with pytest.raises(ParseError):
+        parse_view(base + " REFRESH SOMETIMES")
+    with pytest.raises(ParseError):
+        parse_view(base + " REFRESH STALENESS lots")
+    with pytest.raises(ValueError):
+        parse_view(base + " REFRESH STALENESS 0")       # bound must be >= 1
+
+
+def test_refresh_clause_pretty_round_trip():
+    base = ("CREATE VIEW RV AS (CONSTRUCT (s)-[r:RV]->(d) "
+            "MATCH (s:A)-[:x]->(d:B))")
+    for suffix in ("", " REFRESH DEFERRED", " REFRESH STALENESS 7"):
+        v1 = parse_view(base + suffix)
+        v2 = parse_view(v1.pretty())
+        assert v1.refresh == v2.refresh
+        assert v1.match == v2.match
+    # exact policy stays implicit in pretty() (round-trips to the default)
+    assert "REFRESH" not in parse_view(base).pretty()

@@ -371,3 +371,122 @@ def test_views_on_and_off_are_separate_groups():
     _assert_same(t_off.result, serve_sess.query(q, use_views=False))
     # view-answered and base rows agree (the §VI-C invariant)
     assert np.array_equal(t_on.result.reach, t_off.result.reach)
+
+
+# ---------------------------------------------------------------------------
+# Freshness policies in the serve path (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+VIEW_DEFERRED = VIEW + " REFRESH DEFERRED"
+VIEW_BOUNDED = VIEW + " REFRESH STALENESS 10"
+
+
+def test_node_prop_fence_scopes_to_label_prop_pairs():
+    """A node-prop write on a B node must not fence reads whose plans only
+    filter that prop on A nodes: fence scope carries (label, prop) pairs,
+    not bare prop names — and a control run shows the same write on an A
+    node DOES serialize them."""
+    serve_sess = _build(seed=11)
+    seq_sess = _build(seed=11)
+    q = QUERIES[1]                   # unbound, start pred a.age on label A
+
+    eng = serve_sess.serve()
+    pre = [eng.submit(q) for _ in range(3)]
+    # node 1 is a B node (labels alternate A/B by construction); its age is
+    # read by no plan filtering label A
+    eng.submit_writes(WriteBatch().set_node_prop(1, "age", 7))
+    post = [eng.submit(q) for _ in range(3)]
+    stats = eng.run()
+    assert stats.windows == 1, "(B, age) write serialized an (A, age) read"
+    assert stats.hoisted >= len(post)
+
+    want = seq_sess.query(q)
+    seq_sess.apply_writes(WriteBatch().set_node_prop(1, "age", 7))
+    _assert_same(seq_sess.query(q), want, "B-age write changed an A read?!")
+    for t in pre + post:
+        _assert_same(t.result, want)
+
+    # control: the same prop on an A node conflicts and splits the window
+    ctrl = _build(seed=11)
+    eng2 = ctrl.serve()
+    pre2 = [eng2.submit(q) for _ in range(3)]
+    eng2.submit_writes(WriteBatch().set_node_prop(0, "age", 7))
+    post2 = [eng2.submit(q) for _ in range(3)]
+    stats2 = eng2.run()
+    assert stats2.windows == 2, "conflicting (A, age) fence must serialize"
+    assert all(t.window == 0 for t in pre2)
+    assert all(t.window == 1 for t in post2)
+
+
+def test_node_prop_fence_on_pending_dead_node_goes_global():
+    """A prop set whose target node has a deletion queued ahead cannot
+    resolve its label at submit time — the fence falls back to global."""
+    sess = _build(seed=12)
+    eng = sess.serve()
+    eng.submit_writes(WriteBatch(node_deletes=[2]))
+    f = eng.submit_writes(WriteBatch().set_node_prop(2, "age", 5))
+    assert f.scope.global_
+    eng.run()
+
+
+def test_deferred_fence_blocks_view_read_then_drains():
+    """A fence impacting only a deferred view stays out of that view's
+    label scope; a read whose plan uses the view orders behind the fence,
+    triggers a targeted drain, and answers exactly the sequential result."""
+    serve_sess = _build(seed=13)
+    serve_sess.create_view(VIEW_DEFERRED)
+    twin = _build(seed=13)
+    twin.create_view(VIEW_DEFERRED)
+
+    eng = serve_sess.serve()
+    fence = WriteBatch().create_edge(0, 3, "x", props={"w": 1})
+    f = eng.submit_writes(fence)
+    assert f.scope.deferred_views == frozenset({"V0"})
+    assert not any(serve_sess.schema.is_view_edge_label_id(lid)
+                   for lid in f.scope.edge_labels), \
+        "deferred view's label leaked into the fence scope"
+    t_view = eng.submit(QUERIES[0], use_views=True)
+    stats = eng.run()
+    assert not t_view.hoisted, "view read must order behind impacting fence"
+    assert stats.drains >= 1
+    assert serve_sess.stale_views() == []
+
+    twin.apply_writes(WriteBatch().create_edge(0, 3, "x", props={"w": 1}))
+    _assert_same(t_view.result, twin.query(QUERIES[0], use_views=True))
+    assert serve_sess.check_consistency("V0")
+
+
+def test_deferred_fence_does_not_block_view_free_reads():
+    """The same impacting fence lets reads that touch neither the view nor
+    the written base label hoist into the pre-fence window."""
+    serve_sess = _build(seed=13)
+    serve_sess.create_view(VIEW_DEFERRED)
+    eng = serve_sess.serve()
+    # y-edge create: impacts V0 (deferred) and base label y, but not x
+    eng.submit_writes(WriteBatch().create_edge(0, 3, "y", props={"w": 1}))
+    t = eng.submit(QUERIES[1])       # x-only plan, V0 cannot splice
+    stats = eng.run()
+    assert t.hoisted
+    assert stats.windows == 1
+    assert stats.drains == 0
+    assert serve_sess.stale_views() == ["V0"]
+
+
+def test_bounded_stale_read_hoists_within_bound():
+    """Under REFRESH STALENESS n, a read impacted only through the view may
+    hoist past the fence and answer the stale rows (which equal the
+    pre-fence rows by construction)."""
+    sess = _build(seed=14)
+    sess.create_view(VIEW_BOUNDED)
+    pre = sess.query(QUERIES[0], use_views=True)
+    eng = sess.serve()
+    eng.submit_writes(WriteBatch().create_edge(0, 3, "x", props={"w": 1}))
+    t = eng.submit(QUERIES[0], use_views=True)
+    stats = eng.run()
+    assert t.hoisted, "within-bound bounded-stale read should hoist"
+    assert stats.drains == 0
+    assert sess.stale_views() == ["V0"]
+    _assert_same(t.result, pre)
+    # a later session-level drain restores exactness
+    sess.drain_all()
+    assert sess.check_consistency("V0")
