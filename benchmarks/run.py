@@ -21,7 +21,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
   serve_*    — cross-query batched serving: a >= 32-strong same-fingerprint
                group through the ServeEngine vs sequential per-query calls,
-               plus the mixed read/write serving replay (qps + occupancy)
+               the mixed read/write serving replay (qps + occupancy), and
+               the multi-device scaling curve (replay qps at 1/2/4 forced
+               host devices, DESIGN.md §12)
 
 Each benchmark additionally writes its rows as machine-readable
 ``BENCH_<name>.json`` under ``--json-dir`` (default ``results/``), so CI runs
@@ -593,6 +595,42 @@ def bench_serve(mode: str, seed: int) -> None:
          f"memo_hits={rep.memo_hits};gathers={rep.gathers};"
          f"hoisted={rep.hoisted};share_rate={rep.share_rate:.2f};"
          f"deadline_misses={rep.deadline_misses}")
+
+    # -- multi-device scaling curve (DESIGN.md §12) -----------------------
+    # qps of the serving replay at 1/2/4 forced host devices.  Each point
+    # is a subprocess because XLA pins the host device count at first jax
+    # import.  On this 1-CPU-core container the forced "devices" are
+    # threads on one core, so qps *drops* with device count (shard_map
+    # overhead, no extra silicon) — the curve is an honest overhead
+    # measurement, and ``sharded_scaling_ratio`` (best multi-device qps /
+    # 1-device qps) is gated against the committed baseline so sharding
+    # overhead can't silently regress.  Row parity across device counts is
+    # asserted in ``tests/test_sharded.py``, not re-checked here.
+    import subprocess
+    env = dict(os.environ)
+    src_dir = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    qps_by_dev: dict = {}
+    for n_dev in (1, 2, 4):
+        cmd = [sys.executable, "-m", "benchmarks.workload_driver",
+               "--serve", "--dataset", "snb", "--small", "--clients", "8",
+               "--rounds", "2", "--seed", str(seed), "--no-sequential",
+               "--devices", str(n_dev)]
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=900)
+        assert proc.returncode == 0, (
+            f"scaling-curve leg --devices {n_dev} failed:\n"
+            + (proc.stdout + proc.stderr)[-2000:])
+        qps_line = [ln for ln in proc.stdout.splitlines()
+                    if ln.startswith("QPS ")]
+        assert qps_line, f"no QPS line from --devices {n_dev}"
+        qps_by_dev[n_dev] = float(qps_line[-1].split()[1])
+    ratio = max(qps_by_dev[2], qps_by_dev[4]) / max(qps_by_dev[1], 1e-12)
+    _row("serve_sharded_scaling", 1e6 / max(qps_by_dev[4], 1e-12),
+         f"sharded_scaling_ratio={ratio:.3f};"
+         f"qps_dev1={qps_by_dev[1]:.1f};qps_dev2={qps_by_dev[2]:.1f};"
+         f"qps_dev4={qps_by_dev[4]:.1f}")
 
 
 def bench_kernels(mode: str, seed: int) -> None:

@@ -15,20 +15,46 @@ throughput (queries/s) plus group-occupancy stats::
 
 ``--freshness {exact,deferred,<N>}`` runs every view under the chosen
 refresh policy (DESIGN.md §11); an integer selects ``REFRESH STALENESS N``.
+
+``--devices N`` runs the workload sharded over ``N`` forced host devices
+(DESIGN.md §12): sessions execute with ``ExecConfig(data_shards=N)`` on an
+N-way data mesh.  XLA fixes the device count at first jax import, so the
+flag is honored by scanning ``sys.argv`` *before* importing jax below —
+``--devices`` therefore only works as a CLI flag of this module (callers
+embedding :func:`run_serve_workload` must set XLA_FLAGS themselves).
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Tuple
 
-import jax
-import numpy as np
 
-from repro.configs.mv4pg import WorkloadConfig
-from repro.core import ExecConfig, GraphSession
-from repro.core import graph as G
+def _early_devices() -> int:
+    for i, a in enumerate(sys.argv):
+        if a == "--devices" and i + 1 < len(sys.argv):
+            return int(sys.argv[i + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return 1
+
+
+_N_DEVICES = _early_devices()
+if (_N_DEVICES > 1 and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_N_DEVICES}").strip()
+
+import jax  # noqa: E402  (XLA_FLAGS must be set above, before first import)
+import numpy as np  # noqa: E402
+
+from repro.configs.mv4pg import WorkloadConfig  # noqa: E402
+from repro.core import ExecConfig, GraphSession  # noqa: E402
+from repro.core import graph as G  # noqa: E402
 
 
 @dataclass
@@ -299,7 +325,8 @@ def _serve_script(sess: GraphSession, wl: WorkloadConfig, clients: int,
 def run_serve_workload(make_dataset: Callable[[], Tuple], wl: WorkloadConfig,
                        clients: int = 32, rounds: int = 3, seed: int = 0,
                        cfg: ExecConfig | None = None,
-                       refresh: str = "") -> ServeReport:
+                       refresh: str = "",
+                       sequential: bool = True) -> ServeReport:
     """Replay the workload through the serve engine and sequentially on a
     twin session; returns throughput and batching stats.
 
@@ -311,6 +338,11 @@ def run_serve_workload(make_dataset: Callable[[], Tuple], wl: WorkloadConfig,
     ``REFRESH ...`` clause to every view on both twins (DESIGN.md §11):
     fences then enqueue instead of maintaining, and both replay paths drain
     at the same first-conflicting-read points, so parity still holds.
+
+    ``sequential=False`` skips the twin replay and its per-ticket parity
+    check (``seq_s``/``speedup`` report 0) — used by the scaling curve,
+    where only batched-serve qps matters and parity is covered by
+    ``tests/test_sharded.py``.  Drain + view-consistency still run.
     """
     rng = np.random.default_rng(seed)
     ds = make_dataset()
@@ -331,29 +363,32 @@ def run_serve_workload(make_dataset: Callable[[], Tuple], wl: WorkloadConfig,
     serve_s = time.perf_counter() - t0
 
     # ---- sequential replay on the twin ---------------------------------
-    ds2 = make_dataset()
-    sess2 = GraphSession(ds2[0], ds2[1], cfg or ExecConfig())
-    for vtext in wl.views:
-        sess2.create_view(vtext + refresh)
-    t0 = time.perf_counter()
-    seq = []
-    for kind, payload, src in ops:
-        if kind == "read":
-            r = sess2.query(payload, sources=src)
-            seq.append((r.num_results(), r.metrics.db_hits, r.metrics.rows))
-        else:
-            sess2.apply_writes(payload)
-            seq.append(None)
-    seq_s = time.perf_counter() - t0
+    seq_s = 0.0
+    if sequential:
+        ds2 = make_dataset()
+        sess2 = GraphSession(ds2[0], ds2[1], cfg or ExecConfig())
+        for vtext in wl.views:
+            sess2.create_view(vtext + refresh)
+        t0 = time.perf_counter()
+        seq = []
+        for kind, payload, src in ops:
+            if kind == "read":
+                r = sess2.query(payload, sources=src)
+                seq.append((r.num_results(), r.metrics.db_hits,
+                            r.metrics.rows))
+            else:
+                sess2.apply_writes(payload)
+                seq.append(None)
+        seq_s = time.perf_counter() - t0
 
-    for t, want in zip(tickets, seq):
-        if want is None:
-            continue
-        got = (t.result.num_results(), t.result.metrics.db_hits,
-               t.result.metrics.rows)
-        assert got == want, (
-            f"serve replay diverged from sequential on uid={t.uid}: "
-            f"{got} != {want}")
+        for t, want in zip(tickets, seq):
+            if want is None:
+                continue
+            got = (t.result.num_results(), t.result.metrics.db_hits,
+                   t.result.metrics.rows)
+            assert got == want, (
+                f"serve replay diverged from sequential on uid={t.uid}: "
+                f"{got} != {want}")
     sess.drain_all()     # non-exact views: flush queues before the oracle
     for vname in list(sess.views):
         assert sess.check_consistency(vname), f"{vname} inconsistent!"
@@ -393,7 +428,24 @@ def main() -> None:
     ap.add_argument("--freshness", default="exact",
                     help="view refresh policy: 'exact', 'deferred', or an "
                          "integer staleness bound (REFRESH STALENESS N)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard execution over N forced host devices "
+                         "(ExecConfig.data_shards=N; sets XLA_FLAGS before "
+                         "jax import)")
+    ap.add_argument("--no-sequential", action="store_true",
+                    help="--serve only: skip the sequential twin replay "
+                         "(faster; reports qps without speedup)")
     args = ap.parse_args()
+    if args.devices != _N_DEVICES:   # argparse and the early scan disagree
+        raise SystemExit("--devices must be scannable from argv before "
+                         "jax import; got inconsistent values")
+    if args.devices > 1 and len(jax.devices()) < args.devices:
+        raise SystemExit(
+            f"--devices {args.devices} but only {len(jax.devices())} jax "
+            "devices exist (XLA_FLAGS was set too late — is jax already "
+            "imported via sitecustomize?)")
+    cfg = (ExecConfig(data_shards=args.devices) if args.devices > 1
+           else None)
 
     if args.freshness == "exact":
         refresh = ""
@@ -421,12 +473,14 @@ def main() -> None:
     if args.serve:
         rep = run_serve_workload(make, wl, clients=args.clients,
                                  rounds=args.rounds, seed=args.seed,
-                                 refresh=refresh)
+                                 cfg=cfg, refresh=refresh,
+                                 sequential=not args.no_sequential)
         print(rep.summary())
+        print(f"QPS {rep.qps:.3f}")   # machine-readable (scaling curve)
         return
     g, schema, _ = make()
     rep = run_workload(g, schema, wl, repeats=args.repeats, seed=args.seed,
-                       refresh=refresh)
+                       cfg=cfg, refresh=refresh)
     for q in rep.queries:
         print(f"{q.name}: ori={q.ori_s*1e3:.2f}ms opt={q.opt_s*1e3:.2f}ms "
               f"speedup={q.speedup:.2f}")

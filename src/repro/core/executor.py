@@ -55,6 +55,10 @@ class ExecConfig:
     #                                 "segment"/"dense"/"pallas" force one
     dense_node_limit: int = 4096    # never go dense above this node_cap
     dense_density: float = 0.05     # E_label / node_cap^2 threshold for dense
+    data_shards: int = 1            # >1: compile plans as shard_map programs
+    #                                 over a (data_shards x 1) device mesh
+    #                                 (node columns + per-label edge slices
+    #                                 dst-partitioned; DESIGN.md §12)
 
 
 @dataclass
@@ -106,6 +110,39 @@ def _hop_segment(F, esrc, edst, emask, eweight, *, counting: bool, reverse: bool
         return jnp.zeros_like(F).at[:, b].add(msg)
     msg = jnp.where(emask[None, :], F[:, a], False)
     return jnp.zeros_like(F).at[:, b].max(msg)
+
+
+@partial(jax.jit, static_argnames=("counting", "n_loc"))
+def _hop_segment_local(F_full, a, b_local, emask, eweight, *, counting: bool,
+                       n_loc: int):
+    """Device-local half of a sharded segment hop: gather from the
+    all-gathered full frontier (``F_full`` [blk, N_pad]), scatter into the
+    shard's **local** node-column range only (``[blk, n_loc]``).  Edges are
+    pre-partitioned by scatter-side owner with ``b_local`` already localized
+    (:func:`repro.graphops.distributed.partition_hop_edges`), so no
+    cross-device scatter exists; direction is folded into the operands."""
+    if counting:
+        msg = jnp.where(emask[None, :], F_full[:, a] * eweight[None, :], 0)
+        return jnp.zeros((F_full.shape[0], n_loc),
+                         F_full.dtype).at[:, b_local].add(msg)
+    msg = jnp.where(emask[None, :], F_full[:, a], False)
+    return jnp.zeros((F_full.shape[0], n_loc), bool).at[:, b_local].max(msg)
+
+
+@partial(jax.jit, static_argnames=("counting", "n_loc"))
+def _hop_segment_rows_local(F_full, a, b_local, emask, eweight, *,
+                            counting: bool, n_loc: int):
+    """Row-parameterized :func:`_hop_segment_local` (per-row operand stacks —
+    the sharded ``SharedProgram`` hop)."""
+    rows = jnp.arange(F_full.shape[0])[:, None]
+    if counting:
+        msg = jnp.where(emask, jnp.take_along_axis(F_full, a, axis=1)
+                        * eweight, 0)
+        return jnp.zeros((F_full.shape[0], n_loc),
+                         F_full.dtype).at[rows, b_local].add(msg)
+    msg = jnp.where(emask, jnp.take_along_axis(F_full, a, axis=1), False)
+    return jnp.zeros((F_full.shape[0], n_loc),
+                     bool).at[rows, b_local].max(msg)
 
 
 @partial(jax.jit, static_argnames=("counting",))
@@ -226,6 +263,20 @@ class ExecEngine:
         self._adj_cache: Dict[Tuple, Tuple[int, jax.Array]] = {}
         self._base_mask_cache: Optional[Tuple[Tuple[int, int], np.ndarray]] = None
         self._count_cache: Dict[int, Tuple[Tuple[int, int], int]] = {}
+        # sharded (dst-partitioned) hop operands: (label, preds, rev) ->
+        # (validity, stacked arrays).  Validity is (label epoch,
+        # reset_generation, node_cap): the partition layout depends on the
+        # node capacity (owner = id // n_loc), so node-arena growth — which
+        # bumps reset_generation *and* changes node_cap — must invalidate
+        # every shard's cached slices even though per-label epochs also move
+        # (the reset fence is the contract; epochs alone would miss an
+        # external graph swap that keeps a label's epoch by rebuilding)
+        self._shard_cache: Dict[Tuple, Tuple[Tuple, Tuple]] = {}
+        self._shard_nodes_cache: Optional[Tuple] = None
+        self._mesh = None
+        # maintenance routing observability: owner shard -> delta sweeps
+        # routed there (views.py records one per drained/maintained view)
+        self.shard_sweeps: Dict[int, int] = {}
         self.hits = 0
         self.misses = 0
 
@@ -252,6 +303,8 @@ class ExecEngine:
             self._deg_cache.clear()
             self._adj_cache.clear()
             self._count_cache.clear()
+            self._shard_cache.clear()
+            self._shard_nodes_cache = None
             return
         touched = {int(lid) for lid in touched_edge_labels}
         touches_base = bool(touched - self.schema.view_edge_ids)
@@ -268,6 +321,9 @@ class ExecEngine:
             del self._deg_cache[k]
         for k in [k for k in self._adj_cache if stale(k[0])]:
             del self._adj_cache[k]
+        for k in [k for k in self._shard_cache if stale(k[0])]:
+            del self._shard_cache[k]
+        self._shard_nodes_cache = None
 
     def snapshot(self, g: Optional[PropertyGraph] = None,
                  touched_edge_labels: Optional[Iterable[int]] = None
@@ -287,6 +343,8 @@ class ExecEngine:
         eng._adj_cache = dict(self._adj_cache)
         eng._base_mask_cache = self._base_mask_cache
         eng._count_cache = dict(self._count_cache)
+        eng._shard_cache = dict(self._shard_cache)
+        eng._mesh = self._mesh
         if g is not None:
             eng.set_graph(g, touched_edge_labels)
         return eng
@@ -442,6 +500,137 @@ class ExecEngine:
             lambda: _dense_adjacency(self.g,
                                      self._pred_edge_mask(label_id, preds),
                                      counting, reverse))
+
+    # -- sharded execution (DESIGN.md §12) --------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return max(int(self.cfg.data_shards), 1)
+
+    def mesh(self):
+        """The (data_shards x 1) device mesh sharded plans execute on.
+        Built lazily so single-device sessions never touch device state."""
+        if self._mesh is None or self._mesh.shape["data"] != self.n_shards:
+            from repro.launch.mesh import make_host_mesh
+            self._mesh = make_host_mesh(n_data=self.n_shards)
+        return self._mesh
+
+    def node_pad(self) -> int:
+        """Node-column capacity padded to a shard multiple; ``n_loc =
+        node_pad // n_shards`` columns live on each shard.  Pad columns are
+        unreachable (no edge scatters there, sources never select them)."""
+        return max(round_up(self.g.node_cap, self.n_shards), self.n_shards)
+
+    def _shard_validity(self, label_id: int) -> Tuple[int, int, int]:
+        """Sharded entries revalidate on the label epoch AND the reset
+        generation AND node_cap: the dst-partition layout is a function of
+        node capacity, and reset fences (arena growth, external swaps) must
+        invalidate every shard's cached slices (the PR-8 audit)."""
+        return (self.epochs.of(label_id), self.epochs.reset_generation,
+                self.g.node_cap)
+
+    def shard_put_edges(self, arr: np.ndarray) -> jax.Array:
+        """Ship a ``[D, ...]`` stacked per-shard array with row ``s`` resident
+        on mesh device ``s`` (NamedSharding over the data axis)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = P("data", *([None] * (arr.ndim - 1)))
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self.mesh(), spec))
+
+    def shard_put_cols(self, arr) -> jax.Array:
+        """Ship a ``[N_pad, ...]`` node-column array column-sharded over the
+        data axis (each shard holds its local ``n_loc`` slice)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = P("data", *([None] * (np.ndim(arr) - 1)))
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self.mesh(), spec))
+
+    def sharded_label_edges(self, label_id: int, reverse: bool,
+                            preds: Tuple[PropPred, ...] = (), *,
+                            host: bool = False):
+        """Dst-partitioned hop operands for one (label, preds, direction):
+        ``(a, b_local, w, mask, deg)`` stacked ``[D, Ep]`` (deg ``[D, N_pad]``)
+        with shard ``s``'s row resident on device ``s``.  Partitioned by the
+        hop's scatter-side endpoint (dst, or src for reverse hops); ``deg`` is
+        the per-shard partial degree vector whose psum reproduces
+        :meth:`deg` exactly.  Cached per (label, preds, direction) under the
+        sharded validity key (epoch, reset_generation, node_cap); both the
+        host partition (``host=True`` — the sharded SharedProgram stacks
+        members host-side before shipping) and its device placement live in
+        the same entry."""
+        from repro.graphops.distributed import partition_hop_edges
+        key = (label_id, preds, reverse, self.n_shards)
+        validity = self._shard_validity(label_id)
+        ent = self._shard_cache.get(key)
+        if ent is not None and ent[0] == validity:
+            self.hits += 1
+            return ent[1] if host else ent[2]
+        self.misses += 1
+        esrc, edst, ew, emask = self.label_edges(label_id, preds)
+        keep = np.asarray(emask)
+        src = np.asarray(esrc)[keep]
+        dst = np.asarray(edst)[keep]
+        w = np.asarray(ew)[keep]
+        gather, scatter = (dst, src) if reverse else (src, dst)
+        host_val = partition_hop_edges(
+            gather, scatter, w, self.node_pad(), self.n_shards)
+        dev_val = tuple(self.shard_put_edges(x) for x in host_val)
+        self._shard_cache[key] = (validity, host_val, dev_val)
+        return host_val if host else dev_val
+
+    def sharded_node_data(self, nprop_names: Tuple[str, ...]):
+        """Node columns padded to ``node_pad()`` and column-sharded:
+        ``(label, key, alive, props)``.  Cached per graph object identity
+        (every mutation swaps the graph pytree, so identity tracks
+        freshness); pad columns are dead (alive=False) and unreachable."""
+        n_pad = self.node_pad()
+        cached = self._shard_nodes_cache
+        if (cached is not None and cached[0] is self.g
+                and cached[1] == nprop_names and cached[2] == n_pad):
+            return cached[3]
+        g = self.g
+        pad = n_pad - g.node_cap
+
+        def padded(col, fill=0):
+            c = np.asarray(col)
+            if pad:
+                c = np.concatenate(
+                    [c, np.full(pad, fill, c.dtype)])
+            return self.shard_put_cols(c)
+
+        val = (padded(g.node_label), padded(g.node_key),
+               padded(g.node_alive, fill=False),
+               tuple(padded(g.node_prop_col(n)) for n in nprop_names))
+        self._shard_nodes_cache = (g, nprop_names, n_pad, val)
+        return val
+
+    def padded_node_mask(self, m) -> np.ndarray:
+        """Pad a ``[node_cap]`` bool node mask to ``node_pad()`` with False —
+        host-side; the sharded SharedProgram stacks member masks then ships
+        the ``[M, N_pad]`` stack via :meth:`shard_put_mask_stack`."""
+        m = np.asarray(m)
+        pad = self.node_pad() - m.shape[0]
+        if pad:
+            m = np.concatenate([m, np.zeros(pad, bool)])
+        return m
+
+    def shard_put_mask_stack(self, arr) -> jax.Array:
+        """Ship a ``[M, N_pad]`` member-mask stack column-sharded over the
+        data axis (members replicated, node columns local)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self.mesh(), P(None, "data")))
+
+    def shard_owner_of(self, label_id: int) -> int:
+        from repro.graphops.distributed import shard_owner
+        return shard_owner(label_id, self.n_shards)
+
+    def note_shard_sweep(self, label_id: int) -> None:
+        """Record one maintenance delta sweep routed to a label's owner
+        shard (views.py calls this per drained/maintained view when
+        sharded — the routing counter benchmarks and tests observe)."""
+        owner = self.shard_owner_of(label_id)
+        self.shard_sweeps[owner] = self.shard_sweeps.get(owner, 0) + 1
 
 
 # ---------------------------------------------------------------------------

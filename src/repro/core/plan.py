@@ -78,7 +78,7 @@ import numpy as np
 from repro.core.executor import (
     ExecConfig, ExecEngine, Metrics, ReachResult, _active_rows_per_source,
     _hop_cost_per_source, _hop_cost_rows, _hop_dense, _hop_segment,
-    _hop_segment_rows,
+    _hop_segment_local, _hop_segment_rows, _hop_segment_rows_local,
 )
 from repro.core.graph import node_pred_mask
 from repro.core.parser import query_fingerprint
@@ -136,6 +136,12 @@ def _choose_backend(engine: ExecEngine, cfg: ExecConfig, label_id: int) -> str:
     fits (node_cap <= ``cfg.dense_node_limit``); ``cfg.plan_backend`` forces
     a specific backend when not "auto".
     """
+    if cfg.data_shards > 1:
+        # sharded execution partitions the per-label compact slices across
+        # the device mesh; dense/pallas hops would need replicated [N, N]
+        # adjacency tiles per shard, defeating the partition — every hop of
+        # a sharded plan is a segment hop (DESIGN.md §12)
+        return "segment"
     mode = cfg.plan_backend
     if mode and mode != "auto":
         return mode
@@ -159,7 +165,7 @@ def _cfg_snapshot(cfg: ExecConfig) -> tuple:
     next query (as it did with the per-call unfused executor)."""
     return (cfg.plan_backend, cfg.backend, cfg.use_pallas, cfg.interpret,
             cfg.collect_metrics, cfg.max_closure_iters, cfg.src_block,
-            cfg.dense_node_limit, cfg.dense_density)
+            cfg.dense_node_limit, cfg.dense_density, cfg.data_shards)
 
 
 def block_sizes(rows: int, blk: int, adaptive: bool) -> List[int]:
@@ -299,6 +305,8 @@ class CompiledPlan:
                 and reuse_from.counting == self.counting
                 and reuse_from._cfg_key == self._cfg_key):
             self._fn = reuse_from._fn
+        elif cfg.data_shards > 1:
+            self._fn = self._make_sharded_fn()
         else:
             self._fn = jax.jit(self._program)
 
@@ -432,6 +440,125 @@ class CompiledPlan:
             F = reach
         return F, db, rows, ok
 
+    # -- sharded fused program (DESIGN.md §12) -----------------------------
+
+    def _make_sharded_fn(self):
+        """Compile :meth:`_program_sharded` as a jitted shard_map over the
+        engine's (data_shards x 1) mesh.  Node columns (and therefore
+        frontiers) shard over the data axis; edge operands are stacked
+        ``[D, ...]`` with shard ``s``'s partition on device ``s``; the
+        source-id block is replicated.  F comes back reassembled
+        ``[blk, N_pad]``; db/rows/ok are replicated (psum-reduced)."""
+        from jax.sharding import PartitionSpec as P
+        from repro.utils import compat
+        mesh = self.engine.mesh()
+        col = P("data")
+        in_specs = (P(None), col, col, col, col, P("data", None))
+        out_specs = (P(None, "data"), P(None), P(None), P(None))
+        return jax.jit(compat.shard_map(
+            self._program_sharded, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs, check_vma=False))
+
+    def _program_sharded(self, ids, node_label, node_key, node_alive, nprops,
+                         operands):
+        """Per-device body of the sharded fused program.
+
+        Same signature and step walk as :meth:`_program`, but node arrays
+        arrive as the shard's local column slice (``[n_loc]``), edge operands
+        as the shard's dst-partition (leading shard axis of size 1), and F is
+        the local column block ``[blk, n_loc]``.  Each hop all-gathers the
+        frontier columns once (**the halo exchange — the only per-hop
+        collective**), gathers edge sources from the full frontier, and
+        scatters into the local column range only.  DBHit/Rows accumulate as
+        per-shard partials (partial degree vectors / local-column row
+        counts) and reduce with a **single psum** at program end, so
+        per-query metric parity with :meth:`_program` is exact — int32
+        partial sums commute.  Unbounded closures carry a psum'd global
+        frontier count so every shard agrees on the trip count."""
+        counting = self.counting
+        collect = self.cfg.collect_metrics
+        blk = ids.shape[0]
+        n_loc = node_label.shape[0]
+        offset = jax.lax.axis_index("data") * n_loc
+        lcol = ids - offset
+        mine = (ids >= 0) & (lcol >= 0) & (lcol < n_loc)
+        lcol = jnp.clip(lcol, 0, n_loc - 1)
+        if counting:
+            F = jnp.zeros((blk, n_loc), jnp.int32).at[
+                jnp.arange(blk), lcol].add(mine.astype(jnp.int32))
+        else:
+            F = jnp.zeros((blk, n_loc), bool).at[
+                jnp.arange(blk), lcol].max(mine)
+        db = jnp.zeros(blk, jnp.int32)
+        rows = jnp.zeros(blk, jnp.int32)
+        ok = jnp.bool_(True)
+
+        def hop(Fc, step_ops, db, rows):
+            F_full = jax.lax.all_gather(Fc, "data", axis=1, tiled=True)
+            out = None
+            for arrs in step_ops:
+                a, b_local, ew, emask, deg = (x[0] for x in arrs)
+                if collect:
+                    db = db + _hop_cost_per_source(F_full, deg)
+                nxt = _hop_segment_local(F_full, a, b_local, emask, ew,
+                                         counting=counting, n_loc=n_loc)
+                out = nxt if out is None else (
+                    out + nxt if counting else out | nxt)
+            if collect:
+                rows = rows + _active_rows_per_source(out)
+            return out, db, rows
+
+        op_i = 0
+        for step in self.steps:
+            if isinstance(step, FilterStep):
+                m = node_alive
+                if step.label_id != NO_LABEL:
+                    m = m & (node_label == step.label_id)
+                if step.key is not None:
+                    m = m & (node_key == step.key)
+                for p in step.preds:
+                    m = m & _cmp(nprops[self._nprop_names.index(p.prop)],
+                                 p.op, p.value)
+                F = F & m[None, :] if not counting else jnp.where(m[None, :],
+                                                                 F, 0)
+                continue
+            step_ops = operands[op_i]
+            op_i += 1
+            lo, hi = step.min_hops, step.max_hops
+            if hi != INF_HOPS:
+                acc = F if lo == 0 else None
+                cur = F
+                for k in range(1, hi + 1):
+                    cur, db, rows = hop(cur, step_ops, db, rows)
+                    if k >= lo:
+                        acc = cur if acc is None else (
+                            acc + cur if counting else acc | cur)
+                F = acc if acc is not None else jnp.zeros_like(F)
+                continue
+            cur = F
+            for _ in range(max(lo, 0)):
+                cur, db, rows = hop(cur, step_ops, db, rows)
+            act = jax.lax.psum(jnp.sum(cur.astype(jnp.int32)), "data")
+
+            def cond(c):
+                i, _reach, _frontier, _db, _rows, act = c
+                return jnp.logical_and(i < self.cfg.max_closure_iters,
+                                       act > 0)
+
+            def body(c):
+                i, reach, frontier, db, rows, _act = c
+                nxt, db, rows = hop(frontier, step_ops, db, rows)
+                new = nxt & ~reach
+                act = jax.lax.psum(jnp.sum(new.astype(jnp.int32)), "data")
+                return (i + 1, reach | nxt, new, db, rows, act)
+
+            _, reach, frontier, db, rows, act = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), cur, cur, db, rows, act))
+            ok = ok & (act == 0)
+            F = reach
+        met = jax.lax.psum(jnp.stack([db, rows]), "data")  # the single psum
+        return F, met[0], met[1], ok
+
     # -- operands ----------------------------------------------------------
 
     def _gather_operands(self):
@@ -455,6 +582,17 @@ class CompiledPlan:
                                             rev, step.preds), deg))
             out.append(tuple(per_dir))
         return tuple(out)
+
+    def _gather_operands_sharded(self):
+        """Sharded counterpart of :meth:`_gather_operands`: per expand step,
+        per direction, the engine's cached dst-partitioned ``[D, ...]`` edge
+        stacks (gather ids global, scatter ids localized, per-shard partial
+        degree vectors) already placed shard-per-device."""
+        eng = self.engine
+        return tuple(
+            tuple(eng.sharded_label_edges(step.label_id, rev, step.preds)
+                  for rev in step.reverses)
+            for step in self.steps if isinstance(step, ExpandStep))
 
     # -- execution ---------------------------------------------------------
 
@@ -511,15 +649,24 @@ class CompiledPlan:
         if R:
             padded[:R] = np.concatenate(
                 [np.asarray(s, np.int32) for s in source_lists])
-        operands = self._gather_operands()
-        nprops = tuple(g.node_prop_col(name) for name in self._nprop_names)
+        sharded = self.cfg.data_shards > 1
+        if sharded:
+            node_label, node_key, node_alive, nprops = \
+                self.engine.sharded_node_data(self._nprop_names)
+            operands = self._gather_operands_sharded()
+        else:
+            node_label, node_key, node_alive = (g.node_label, g.node_key,
+                                                g.node_alive)
+            nprops = tuple(g.node_prop_col(name)
+                           for name in self._nprop_names)
+            operands = self._gather_operands()
 
         out_rows, db_parts, row_parts, ok_parts = [], [], [], []
         b0 = 0
         for blk in sizes:
             F, db, rows, ok = self._fn(
-                jnp.asarray(padded[b0:b0 + blk]), g.node_label, g.node_key,
-                g.node_alive, nprops, operands)
+                jnp.asarray(padded[b0:b0 + blk]), node_label, node_key,
+                node_alive, nprops, operands)
             out_rows.append(F)
             db_parts.append(db)
             row_parts.append(rows)
@@ -527,6 +674,9 @@ class CompiledPlan:
             b0 += blk
         reach = np.concatenate(
             [np.asarray(F) for F in out_rows], axis=0)[:R].astype(np.int32)
+        # sharded F columns are padded to node_pad (multiple of the shard
+        # count); slice back to the arena width — identity when unsharded
+        reach = reach[:, :g.node_cap]
         db_vec = np.concatenate([np.asarray(d) for d in db_parts])[:R]
         rows_vec = np.concatenate([np.asarray(r) for r in row_parts])[:R]
         if not all(bool(np.asarray(o)) for o in ok_parts):
@@ -603,6 +753,28 @@ class CompiledPlan:
                 expands.append(tuple(per_dir))
         return tuple(masks), tuple(expands)
 
+    def _gather_shared_operands_sharded(self):
+        """Sharded counterpart of :meth:`_gather_shared_operands`: host-side
+        padded node masks (``[N_pad]``) and host-side dst-partitioned edge
+        tuples (``[D, Ep]`` / deg ``[D, N_pad]``) per expand direction — the
+        sharded :class:`SharedProgram` stacks members host-side, then ships
+        each stack with its shard placement in one device_put."""
+        eng = self.engine
+        g = eng.g
+        masks, expands = [], []
+        for step in self.steps:
+            if isinstance(step, FilterStep):
+                m = g.node_mask(step.label_id, step.key)
+                if step.preds:
+                    m = m & node_pred_mask(g, step.preds)
+                masks.append(eng.padded_node_mask(m))
+            else:
+                expands.append(tuple(
+                    eng.sharded_label_edges(step.label_id, rev, step.preds,
+                                            host=True)
+                    for rev in step.reverses))
+        return tuple(masks), tuple(expands)
+
 
 # ---------------------------------------------------------------------------
 # shared structural program
@@ -632,12 +804,32 @@ class SharedProgram:
     """
 
     def __init__(self, counting: bool, collect_metrics: bool,
-                 max_closure_iters: int, steps_sig: Tuple[tuple, ...]):
+                 max_closure_iters: int, steps_sig: Tuple[tuple, ...],
+                 engine: Optional[ExecEngine] = None, data_shards: int = 1):
         self.counting = counting
         self.collect = collect_metrics
         self.max_closure_iters = max_closure_iters
         self.steps_sig = steps_sig
-        self._fn = jax.jit(self._program)
+        self.engine = engine
+        self.data_shards = data_shards
+        if data_shards > 1:
+            self._fn = self._make_sharded_fn()
+        else:
+            self._fn = jax.jit(self._program)
+
+    def _make_sharded_fn(self):
+        """Sharded variant: masks column-shard over the data axis (members
+        replicated), edge stacks carry a leading shard axis, ids/midx
+        replicate; F returns column-assembled, metrics replicated.  Same
+        mesh/spec scheme as :meth:`CompiledPlan._make_sharded_fn`."""
+        from jax.sharding import PartitionSpec as P
+        from repro.utils import compat
+        mesh = self.engine.mesh()
+        in_specs = (P(None), P(None), P(None, "data"), P("data"))
+        out_specs = (P(None, "data"), P(None), P(None), P(None))
+        return jax.jit(compat.shard_map(
+            self._program_sharded, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs, check_vma=False))
 
     # -- traced program ----------------------------------------------------
 
@@ -720,6 +912,95 @@ class SharedProgram:
             F = reach
         return F, db, rows, ok
 
+    def _program_sharded(self, ids, midx, masks, operands):
+        """Per-device body of the sharded shared program: masks arrive as
+        the shard's ``[M, n_loc]`` column slice, edge stacks as the shard's
+        partition ``[1, M, Ep]`` / deg ``[1, M, N_pad]`` (squeeze the shard
+        axis), and rows scatter only into the local columns.  Metric
+        partials and closure convergence follow
+        :meth:`CompiledPlan._program_sharded` exactly: one end-of-program
+        psum, psum'd global frontier counts in the while_loop carry."""
+        from repro.utils import compat
+        counting, collect = self.counting, self.collect
+        blk = ids.shape[0]
+        # masks shard to local columns; deg stays full-width ([1, M, N_pad])
+        n_loc = (masks[0].shape[1] if masks
+                 else operands[0][0][4].shape[2] // compat.axis_size("data"))
+        offset = jax.lax.axis_index("data") * n_loc
+        lcol = ids - offset
+        mine = (ids >= 0) & (lcol >= 0) & (lcol < n_loc)
+        lcol = jnp.clip(lcol, 0, n_loc - 1)
+        if counting:
+            F = jnp.zeros((blk, n_loc), jnp.int32).at[
+                jnp.arange(blk), lcol].add(mine.astype(jnp.int32))
+        else:
+            F = jnp.zeros((blk, n_loc), bool).at[
+                jnp.arange(blk), lcol].max(mine)
+        db = jnp.zeros(blk, jnp.int32)
+        rows = jnp.zeros(blk, jnp.int32)
+        ok = jnp.bool_(True)
+
+        mi = oi = 0
+        for sig in self.steps_sig:
+            if sig[0] == "f":
+                m = masks[mi][midx]           # [blk, n_loc] local columns
+                mi += 1
+                F = F & m if not counting else jnp.where(m, F, 0)
+                continue
+            _, ndirs, lo, hi = sig
+            step_rows = tuple(
+                tuple(arr[0][midx] for arr in operands[oi][d])
+                for d in range(ndirs))
+            oi += 1
+
+            def hop(Fc, db, rows, step_rows=step_rows):
+                F_full = jax.lax.all_gather(Fc, "data", axis=1, tiled=True)
+                out = None
+                for (a, b_local, ew, emask, deg) in step_rows:
+                    if collect:
+                        db = db + _hop_cost_rows(F_full, deg)
+                    nxt = _hop_segment_rows_local(F_full, a, b_local, emask,
+                                                  ew, counting=counting,
+                                                  n_loc=n_loc)
+                    out = nxt if out is None else (
+                        out + nxt if counting else out | nxt)
+                if collect:
+                    rows = rows + _active_rows_per_source(out)
+                return out, db, rows
+
+            if hi != INF_HOPS:
+                acc = F if lo == 0 else None
+                cur = F
+                for k in range(1, hi + 1):
+                    cur, db, rows = hop(cur, db, rows)
+                    if k >= lo:
+                        acc = cur if acc is None else (
+                            acc + cur if counting else acc | cur)
+                F = acc if acc is not None else jnp.zeros_like(F)
+                continue
+            cur = F
+            for _ in range(max(lo, 0)):
+                cur, db, rows = hop(cur, db, rows)
+            act = jax.lax.psum(jnp.sum(cur.astype(jnp.int32)), "data")
+
+            def cond(c):
+                i, _reach, _frontier, _db, _rows, act = c
+                return jnp.logical_and(i < self.max_closure_iters, act > 0)
+
+            def body(c):
+                i, reach, frontier, db, rows, _act = c
+                nxt, db, rows = hop(frontier, db, rows)
+                new = nxt & ~reach
+                act = jax.lax.psum(jnp.sum(new.astype(jnp.int32)), "data")
+                return (i + 1, reach | nxt, new, db, rows, act)
+
+            _, reach, frontier, db, rows, act = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), cur, cur, db, rows, act))
+            ok = ok & (act == 0)
+            F = reach
+        met = jax.lax.psum(jnp.stack([db, rows]), "data")
+        return F, met[0], met[1], ok
+
     # -- execution ---------------------------------------------------------
 
     def execute(self, plans: Sequence[CompiledPlan],
@@ -733,16 +1014,22 @@ class SharedProgram:
         maximum (padded edges are masked off → exact no-ops).  Returns
         per-plan lists of :class:`RowResult` matching ``spec_lists``."""
         cfg = plans[0].cfg
+        eng = plans[0].engine
         M = len(plans)
         M_pad = 1 << max(M - 1, 1).bit_length()    # pow2 >= M, min 2
-        gathered = [p._gather_shared_operands() for p in plans]
+        sharded = self.data_shards > 1
+        gathered = [p._gather_shared_operands_sharded() if sharded
+                    else p._gather_shared_operands() for p in plans]
 
         n_filters = sum(1 for s in self.steps_sig if s[0] == "f")
         masks_st = []
         for fi in range(n_filters):
             ms = [gathered[m][0][fi] for m in range(M)]
             ms += [ms[0]] * (M_pad - M)
-            masks_st.append(jnp.stack(ms))
+            if sharded:     # host stack → one column-sharded device_put
+                masks_st.append(eng.shard_put_mask_stack(np.stack(ms)))
+            else:
+                masks_st.append(jnp.stack(ms))
 
         ops_st = []
         oi = 0
@@ -753,17 +1040,32 @@ class SharedProgram:
             per_dir = []
             for d in range(ndirs):
                 cols = [gathered[m][1][oi][d] for m in range(M)]
-                E = max(int(c[0].shape[0]) for c in cols)
+                # edge widths pad to the pow2 ceiling of the bucket max —
+                # recurring shapes then hit the same XLA executable across
+                # windows (the warm pool's compile skip); members share a
+                # log2 scale, so inflation stays within the bucket's 2x
+                # bound (padded edges are masked — exact no-ops)
+                ax = 1 if sharded else 0     # sharded leaves are [D, Ep]
+                E_max = max(int(c[0].shape[ax]) for c in cols)
+                E = 1 << max(E_max - 1, 1).bit_length()
                 stacked = []
                 for j in range(5):          # src, dst, ew, emask, deg
                     arrs = []
                     for c in cols:
                         a = c[j]
-                        if j < 4 and int(a.shape[0]) < E:
-                            a = jnp.pad(a, (0, E - int(a.shape[0])))
+                        if j < 4 and int(a.shape[ax]) < E:
+                            pad = (0, E - int(a.shape[ax]))
+                            if sharded:
+                                a = np.pad(a, ((0, 0), pad))
+                            else:
+                                a = jnp.pad(a, pad)
                         arrs.append(a)
                     arrs += [arrs[0]] * (M_pad - M)
-                    stacked.append(jnp.stack(arrs))
+                    if sharded:   # [D, M_pad, ...], shard axis leading
+                        stacked.append(
+                            eng.shard_put_edges(np.stack(arrs, axis=1)))
+                    else:
+                        stacked.append(jnp.stack(arrs))
                 per_dir.append(tuple(stacked))
             ops_st.append(tuple(per_dir))
             oi += 1
@@ -803,6 +1105,7 @@ class SharedProgram:
             b0 += blk
         reach = np.concatenate(
             [np.asarray(F) for F in out_rows], axis=0)[:R].astype(np.int32)
+        reach = reach[:, :eng.g.node_cap]     # drop shard pad columns
         db_vec = np.concatenate([np.asarray(d) for d in db_parts])[:R]
         rows_vec = np.concatenate([np.asarray(r) for r in row_parts])[:R]
         if not all(bool(np.asarray(o)) for o in ok_parts):
@@ -905,10 +1208,13 @@ class QueryPlanner:
         (see :meth:`CompiledPlan.structure_key`).  Programs persist across
         windows and write fences: labels and predicates are operands, so
         epoch invalidation never stales the trace — only shapes respecialize.
-        """
-        sp = self._shared.get(key)
+        Sharded sessions get a sharded program (cached separately, so a cfg
+        ``data_shards`` flip can't execute through a mismatched trace)."""
+        shards = max(int(self.cfg.data_shards), 1)
+        sp = self._shared.get((key, shards))
         if sp is None:
             counting, collect, max_iters, sig = key
-            sp = SharedProgram(counting, collect, max_iters, sig)
-            self._shared[key] = sp
+            sp = SharedProgram(counting, collect, max_iters, sig,
+                               engine=self.engine, data_shards=shards)
+            self._shared[(key, shards)] = sp
         return sp

@@ -669,6 +669,13 @@ class GraphSession:
                         ex_pre=self._delta, ex_suf=self._delta,
                         edge_ids=eids)
                     self._apply_union(view, endpoints_alive(delta))
+            if (self.cfg.data_shards > 1
+                    and (node_del.size
+                         or any(self._uses_label(view, name)
+                                for name, _, _, _ in
+                                del_groups + create_groups))):
+                # exact maintenance swept this view — route to its owner
+                self.engine.note_shard_sweep(view.label_id)
             view.stats.e_vl = len(view.pair_slot)
 
         # -- step 5: property updates  g3 -> g4 (the prop-update write kind)
@@ -891,6 +898,9 @@ class GraphSession:
         pending.clear()
         if affected.size:
             self._recompute_sources(view, affected, metrics, ex=self._delta)
+        if self.cfg.data_shards > 1:
+            # sharded: this sweep is anchored to the label's owner shard
+            self.engine.note_shard_sweep(view.label_id)
         view.stats.e_vl = len(view.pair_slot)
         for eng in list(self._serve_engines):
             eng._on_view_drained(view)
@@ -948,9 +958,15 @@ class GraphSession:
 
     def drain_all(self) -> None:
         """Drain every stale view (serve fences and tests use this as the
-        global synchronization point)."""
+        global synchronization point).  Sharded sessions visit views grouped
+        by their label's owner shard, so the pass routes maintenance work
+        owner-by-owner across the mesh (see maintenance.owner_order)."""
         metrics = Metrics()
-        for view in list(self.views.values()):
+        views = list(self.views.values())
+        if self.cfg.data_shards > 1:
+            from repro.core.maintenance import owner_order
+            views = owner_order(views, self.engine.n_shards)
+        for view in views:
             self._drain_view(view, metrics)
         self.last_maintenance_metrics = metrics
 

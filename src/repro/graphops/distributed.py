@@ -78,6 +78,72 @@ def dst_partitioned_aggregate(
     )(h, edge_src, edge_dst, edge_mask)
 
 
+def shard_owner(label_id: int, n_shards: int) -> int:
+    """Deterministic owner shard for a label's maintenance routing.
+
+    Edge *data* is dst-partitioned across every shard (see
+    :func:`partition_hop_edges`); the owner shard is the scheduling anchor:
+    delta sweeps and drain batches for a label group under its owner so
+    maintenance work spreads round-robin over the mesh instead of all
+    landing on device 0."""
+    return int(label_id) % max(int(n_shards), 1)
+
+
+def partition_hop_edges(gather_ids: np.ndarray, scatter_ids: np.ndarray,
+                        weights: np.ndarray, n_pad: int, n_shards: int
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray, np.ndarray]:
+    """Host-side dst-partition of one hop's compact edge slice.
+
+    A sharded hop gathers from the *full* (all-gathered) frontier and
+    scatters only into the shard's local node-column range, so edges are
+    partitioned by the owner of their **scatter-side** endpoint (the hop's
+    traversal destination; callers pass ``(dst, src)`` swapped for reverse
+    hops).  Returns stacked per-shard arrays, padded to a uniform per-shard
+    width (padding rows are masked off — exact no-ops):
+
+      * ``a``        [D, Ep]  gather-side endpoint, **global** node id
+      * ``b_local``  [D, Ep]  scatter-side endpoint, **localized**
+                              (global id − shard offset, in ``[0, n_loc)``)
+      * ``w``        [D, Ep]  edge weights
+      * ``mask``     [D, Ep]  real-edge mask
+      * ``deg``      [D, N_pad] partial degree by gather-side endpoint over
+                              the shard's local edges only — the per-shard
+                              DBHit operand; the shard partials sum (one
+                              psum) to the single-device degree vector
+                              exactly (int32 sums commute).
+
+    ``n_pad`` is the node-column capacity padded to a multiple of
+    ``n_shards`` (``n_loc = n_pad // n_shards``).
+    """
+    gather_ids = np.asarray(gather_ids, np.int32)
+    scatter_ids = np.asarray(scatter_ids, np.int32)
+    weights = np.asarray(weights, np.int32)
+    if n_pad % n_shards != 0:
+        raise ValueError(f"n_pad={n_pad} not a multiple of n_shards={n_shards}")
+    n_loc = n_pad // n_shards
+    owner = np.minimum(scatter_ids // n_loc, n_shards - 1)
+    order = np.argsort(owner, kind="stable")
+    counts = np.bincount(owner, minlength=n_shards)
+    width = max(int(counts.max()) if counts.size else 0, 1)
+    a = np.zeros((n_shards, width), np.int32)
+    b_local = np.zeros((n_shards, width), np.int32)
+    w = np.zeros((n_shards, width), np.int32)
+    mask = np.zeros((n_shards, width), bool)
+    deg = np.zeros((n_shards, n_pad), np.int32)
+    start = 0
+    for s in range(n_shards):
+        c = int(counts[s])
+        sl = order[start:start + c]
+        a[s, :c] = gather_ids[sl]
+        b_local[s, :c] = scatter_ids[sl] - s * n_loc
+        w[s, :c] = weights[sl]
+        mask[s, :c] = True
+        np.add.at(deg[s], gather_ids[sl], 1)
+        start += c
+    return a, b_local, w, mask, deg
+
+
 def partition_edges_by_dst(src: np.ndarray, dst: np.ndarray, n_nodes: int,
                            n_shards: int
                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -24,8 +24,25 @@ def data_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in names)
 
 
-def make_host_mesh(n_data: int = 1, n_model: int = 1):
-    """Tiny mesh over real local devices (CPU tests)."""
+def make_host_mesh(n_data: int = 1, n_model: int = 1, devices=None):
+    """Tiny mesh over real local devices (CPU tests).
+
+    ``devices`` overrides the device list (forced-host-device tests pass the
+    subset they want meshed); by default the first ``n_data * n_model`` local
+    devices are used.  Raises a descriptive error when the host has fewer
+    devices than the requested mesh — the common cause is forgetting to set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes.
+    """
     import numpy as np
-    devs = np.asarray(jax.devices()[: n_data * n_model])
+    need = n_data * n_model
+    devs = list(jax.devices() if devices is None else devices)
+    if len(devs) < need:
+        raise ValueError(
+            f"make_host_mesh needs {need} devices for a "
+            f"({n_data} data x {n_model} model) mesh but only "
+            f"{len(devs)} {'were passed' if devices is not None else 'are available'}"
+            " — on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} before importing jax (or pass devices=)")
+    devs = np.asarray(devs[:need])
     return jax.sharding.Mesh(devs.reshape(n_data, n_model), ("data", "model"))

@@ -196,6 +196,7 @@ class ServeStats:
     gathers: int = 0           # tickets answered by row-subsumption gather
     hoisted: int = 0           # tickets answered ahead of a pending fence
     shared_groups: int = 0     # groups run through a shared structural program
+    warm_pool_hits: int = 0    # singleton groups riding a pooled shared shape
     drains: int = 0            # read-triggered targeted view drains
 
     @property
@@ -230,6 +231,7 @@ class ServeStats:
                 f"occupancy={self.occupancy:.2f} blocks={self.blocks} "
                 f"memo={self.memo_hits} gathers={self.gathers} "
                 f"hoisted={self.hoisted} share_rate={self.share_rate:.2f} "
+                f"warm_pool={self.warm_pool_hits} "
                 f"deadline_misses={self.deadline_misses} "
                 f"writes={self.write_batches} drains={self.drains}")
 
@@ -282,6 +284,13 @@ class ServeEngine:
         self._lat_ewma: Optional[float] = None
         # (fingerprint, use, binding-bytes|None) -> (plan, RowResult)
         self._memo: Dict[tuple, Tuple[CompiledPlan, RowResult]] = {}
+        # cross-window warm pool of shared-program bucket shapes
+        # (structure_key, share_scales): once a shape has bucketed, later
+        # windows route even a *singleton* group of that shape through the
+        # session's SharedProgram — the pow2-padded operand shapes match, so
+        # the first window of a recurring shape reuses the warm executable
+        # instead of compiling a per-fingerprint program
+        self._bucket_pool: set = set()
         self._pending_dead: set = set()    # edge slots pending deletion
         self._pending_dead_nodes: set = set()  # node slots pending deletion
         # the session notifies us at drain/drop points (targeted memo
@@ -676,9 +685,11 @@ class ServeEngine:
                     bkey = (skey, grp.plan.share_scales())
                     buckets.setdefault(bkey, []).append(gid)
             for bkey, gids in list(buckets.items()):
-                if len(gids) < 2:
+                if len(gids) < 2 and bkey not in self._bucket_pool:
                     singles.extend(gids)
                     del buckets[bkey]
+                else:
+                    self._bucket_pool.add(bkey)
         else:
             singles = list(groups)
 
@@ -710,6 +721,8 @@ class ServeEngine:
             shared = sess.planner.shared_program(skey)
             per_plan = shared.execute(plans, spec_lists,
                                       adaptive_blocks=cfg.adaptive_blocks)
+            if len(gids) == 1:
+                st.warm_pool_hits += 1
             for gid, rrs in zip(gids, per_plan):
                 for i, rr in zip(plan_exec[gid], rrs):
                     spec_results[gid][i] = rr

@@ -1,0 +1,216 @@
+"""Sharded-execution differential tests (DESIGN.md §12).
+
+Runs in a SUBPROCESS with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the main test process must keep 1 device) and asserts the sharded serving
+contract: N-device shard_map execution is **row-for-row and metric
+(DBHit/Rows) identical** to single-device execution —
+
+  * compiled plans: bounded / unbounded-closure / BOTH-direction hops,
+    node+edge predicates, counting and set semantics, across 2/4/8 shards;
+  * a mixed serve workload (windows, fences, structural sharing, gathers,
+    memo) under exact / deferred / bounded-stale view freshness policies,
+    with maintenance delta sweeps routed to each label's owner shard;
+  * node-arena growth mid-workload: the reset_generation fence must
+    invalidate every shard's cached dst-partitioned slices (regression for
+    the stale-layout bug class — the partition layout is a function of
+    node_cap, so a grown arena re-partitions everywhere).
+
+The in-process tests cover :func:`make_host_mesh` validation (descriptive
+error naming the XLA_FLAGS fix, ``devices=`` override) without forcing
+devices on the main process.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+
+from repro.core import (ExecConfig, GraphBuilder, GraphSchema, GraphSession,
+                        WriteBatch)
+
+QUERIES = [
+    "MATCH (s:A)-[e:x]->(m:B)-[f:x]->(d) WHERE e.w >= 2 RETURN s, d",
+    "MATCH (s:A)-[e:x*1..2]->(d:B) WHERE s.age >= 4 RETURN s, d",
+    "MATCH (s:A)-[e:x*1..]->(d:B) WHERE e.w >= 1 RETURN s, d",
+    "MATCH (s:A)-[:x]->(m:B)<-[:y]-(d:A) RETURN s, d",
+    "MATCH (s:A)-[:x*0..]->(d) RETURN s, d",
+]
+
+
+def build(shards, seed=0, n=18, p=0.15, edge_cap=2048):
+    rng = np.random.default_rng(seed)
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    for i in range(n):
+        b.add_node(("A", "B")[int(rng.integers(2))],
+                   props={"age": int(rng.integers(0, 8))})
+    for u in range(n):
+        for v in range(n):
+            if u != v and rng.random() < p:
+                b.add_edge(u, v, ("x", "y")[int(rng.integers(2))],
+                           props={"w": int(rng.integers(0, 5))})
+    cfg = ExecConfig(data_shards=shards) if shards > 1 else ExecConfig()
+    return GraphSession(b.finalize(edge_cap=edge_cap), schema, cfg=cfg)
+
+
+def snap(r):
+    s, d, c = r.pairs()
+    return (sorted(zip(s.tolist(), d.tolist(), c.tolist())),
+            r.metrics.db_hits, r.metrics.rows)
+
+
+# ---------------- compiled-plan parity ------------------------------------
+def run_plans(shards):
+    sess = build(shards)
+    return [snap(sess.query(q)) for q in QUERIES]
+
+base = run_plans(1)
+for shards in (2, 4, 8):
+    got = run_plans(shards)
+    assert got == base, (shards, [i for i, (b, g) in
+                                  enumerate(zip(base, got)) if b != g])
+print("PLAN_PARITY_OK")
+
+# ---------------- serve workload + freshness-mode interleavings -----------
+VIEWS = [
+    "CREATE VIEW V0 AS (CONSTRUCT (s)-[r:V0]->(d) "
+    "MATCH (s:A)-[e:x]->(m:B)-[f:y]->(d))",                     # exact
+    "CREATE VIEW V1 AS (CONSTRUCT (s)-[r:V1]->(d) "
+    "MATCH (s:A)-[e:x*1..]->(d:B)) REFRESH DEFERRED",
+    "CREATE VIEW V2 AS (CONSTRUCT (s)-[r:V2]->(d) "
+    "MATCH (s:B)-[e:y]->(d) WHERE e.w >= 2) REFRESH STALENESS 2",
+]
+SERVE_QS = [
+    "MATCH (a:A)-[e:x]->(m:B)-[f:y]->(c) RETURN a, c",
+    "MATCH (a:A)-[e:x*1..2]->(d:B) WHERE a.age >= 3 RETURN a, d",
+    "MATCH (a:A)-[e:x*1..]->(d:B) RETURN a, d",
+    "MATCH (s:B)-[e:y]->(d) WHERE e.w >= 2 RETURN s, d",
+]
+
+
+def serve_script(seed, n):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(3):
+        for q in SERVE_QS:
+            ops.append(("read", q, None))
+            src = np.asarray([int(rng.integers(n))], np.int32)
+            ops.append(("read", q, src))
+        u = int(rng.integers(n))
+        fence = WriteBatch().create_edge(u, (u + 1) % n, "x",
+                                         props={"w": int(rng.integers(5))})
+        fence.set_node_prop(int(rng.integers(n)), "age",
+                            int(rng.integers(8)))
+        ops.append(("write", fence, None))
+    ops.append(("read", SERVE_QS[0], None))
+    return ops
+
+
+def run_serve(shards):
+    sess = build(shards, seed=3, n=14, p=0.22, edge_cap=512)
+    for v in VIEWS:
+        sess.create_view(v)
+    eng = sess.serve()
+    ops = serve_script(11, 14)
+    tickets = [eng.submit(payload, sources=src) if kind == "read"
+               else eng.submit_writes(payload)
+               for kind, payload, src in ops]
+    stats = eng.run()
+    out = [(t.result.src_ids.tolist(), np.asarray(t.result.reach).tolist(),
+            t.result.metrics.db_hits, t.result.metrics.rows)
+           for t, (kind, _, _) in zip(tickets, ops) if kind == "read"]
+    sess.drain_all()
+    assert all(sess.check_consistency(v) for v in list(sess.views))
+    return out, stats, dict(sess.engine.shard_sweeps)
+
+
+base_s, stats1, _ = run_serve(1)
+got_s, stats4, sweeps = run_serve(4)
+assert got_s == base_s, "sharded serve results diverge from single-device"
+assert stats4.shared_groups > 0 and stats4.shared_groups == stats1.shared_groups
+assert stats4.warm_pool_hits == stats1.warm_pool_hits
+print("SERVE_PARITY_OK")
+
+# maintenance delta sweeps routed to label-owner shards: every noted sweep
+# landed on owner = label_id % n_shards, and >1 owner participates
+assert sweeps and sum(sweeps.values()) > 0
+assert all(0 <= o < 4 for o in sweeps)
+assert len(sweeps) > 1, f"expected sweeps spread over owners, got {sweeps}"
+print("SWEEP_ROUTING_OK")
+
+# ---------------- node-arena growth invalidates every shard ---------------
+def run_growth(shards):
+    sess = build(shards, seed=5, n=10, p=0.3, edge_cap=4096)
+    sess.create_view("CREATE VIEW VG AS (CONSTRUCT (s)-[r:VG]->(d) "
+                     "MATCH (s:A)-[e:x]->(m:B)-[f:x]->(d))")
+    out = [snap(sess.query(q)) for q in QUERIES[:3]]
+    cap0 = sess.g.node_cap
+    batch = WriteBatch()
+    for i in range(cap0):            # forces grow_node_arena
+        batch.create_node("A" if i % 2 else "B", props={"age": 3})
+    res = sess.apply_writes(batch)
+    assert sess.g.node_cap > cap0
+    b2 = WriteBatch()
+    for nid in res.node_slots[:6]:
+        b2.create_edge(int(nid), int(res.node_slots[0]) if nid % 2 else 1,
+                       "x", props={"w": 2})
+    sess.apply_writes(b2)
+    out += [snap(sess.query(q)) for q in QUERIES[:3]]
+    return out, sess.g.node_cap
+
+
+base_g, cap_b = run_growth(1)
+got_g, cap_g = run_growth(4)
+assert cap_b == cap_g and got_g == base_g, \
+    "stale per-shard slices after node-arena growth"
+print("GROWTH_FENCE_OK")
+
+# ---------------- make_host_mesh devices= override ------------------------
+import jax
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(n_data=2, devices=jax.devices()[:2])
+assert mesh.shape["data"] == 2
+print("MESH_OVERRIDE_OK")
+"""
+
+_MARKERS = ["PLAN_PARITY_OK", "SERVE_PARITY_OK", "SWEEP_ROUTING_OK",
+            "GROWTH_FENCE_OK", "MESH_OVERRIDE_OK"]
+
+
+@pytest.mark.parametrize("marker", _MARKERS)
+def test_sharded_parity(marker, _cache={}):
+    if "out" not in _cache:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                              capture_output=True, text=True, timeout=600)
+        _cache["out"] = proc.stdout + proc.stderr
+        _cache["rc"] = proc.returncode
+    assert _cache["rc"] == 0, _cache["out"][-3000:]
+    assert marker in _cache["out"], _cache["out"][-3000:]
+
+
+def test_make_host_mesh_descriptive_error():
+    """Asking for more devices than exist raises the descriptive error (not
+    a numpy reshape crash) and names the XLA_FLAGS fix."""
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    n = len(jax.devices())
+    with pytest.raises(ValueError) as ei:
+        make_host_mesh(n_data=n + 1)
+    msg = str(ei.value)
+    assert "xla_force_host_platform_device_count" in msg
+    assert f"{n + 1} devices" in msg
+
+
+def test_make_host_mesh_rejects_short_device_list():
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    with pytest.raises(ValueError, match="were passed"):
+        make_host_mesh(n_data=2, n_model=2, devices=jax.devices()[:1])
