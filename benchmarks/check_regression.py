@@ -64,6 +64,16 @@ HEADLINES: List[Tuple] = [
     # doesn't blow up further.  Both qps values are subprocess wall clocks
     # on a loaded runner, hence the wide 0.5 tolerance.
     ("serve", "serve_sharded_scaling", "sharded_scaling_ratio", 0.5),
+    # online selection: both sides are multi-second same-machine wall
+    # clocks; bench_online additionally asserts the absolute bars
+    # (build_fused_speedup >= 3x, auto table5 ratio > 1.0) on every run
+    ("online", "online_build_fused", "build_fused_speedup", 0.5),
+    ("online", "online_table5_auto_snb", "W_ori/(MV+W_opt)", 0.5),
+    # deep-lane only (workloads is not a smoke bench): gated when the
+    # fresh run includes it, skipped when BENCH_workloads.json is absent
+    ("workloads", "table5_snb_workload", "W_ori/(MV+W_opt)", 0.5),
+    ("workloads", "table3_fused_view_creation_snb_ROOT_POST", "speedup",
+     0.5),
 ]
 
 
@@ -94,9 +104,14 @@ def load_metrics(json_dir: str) -> Dict[Tuple[str, str, str], float]:
     return out
 
 
-def compare(fresh: Dict, baseline: Dict, tolerance: float
+def compare(fresh: Dict, baseline: Dict, tolerance: float,
+            fresh_benches: Optional[set] = None
             ) -> Tuple[List[str], List[str]]:
-    """Returns (failures, report_lines)."""
+    """Returns (failures, report_lines).  ``fresh_benches`` is the set of
+    bench names present in the fresh run; headlines for a bench that was
+    not run at all (e.g. deep-lane ``workloads`` during a smoke run) are
+    skipped rather than failed — a missing *row* within a bench that did
+    run still fails."""
     failures: List[str] = []
     lines: List[str] = []
     for entry in HEADLINES:
@@ -109,6 +124,10 @@ def compare(fresh: Dict, baseline: Dict, tolerance: float
         if base is None:
             lines.append(f"  SKIP {label}: no committed baseline "
                          f"(new benchmark? re-baseline to start gating)")
+            continue
+        if fresh_benches is not None and bench not in fresh_benches:
+            lines.append(f"  SKIP {label}: bench '{bench}' not part of "
+                         f"this run")
             continue
         if new is None:
             failures.append(f"{label}: metric missing from fresh run "
@@ -174,7 +193,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         return self_test(baseline, args.tolerance)
 
     fresh = load_metrics(args.fresh)
-    failures, lines = compare(fresh, baseline, args.tolerance)
+    fresh_benches = {h[0] for h in HEADLINES
+                     if os.path.exists(os.path.join(
+                         args.fresh, f"BENCH_{h[0]}.json"))}
+    failures, lines = compare(fresh, baseline, args.tolerance,
+                              fresh_benches=fresh_benches)
     print(f"benchmark regression gate: {args.fresh} vs {args.baseline} "
           f"(tolerance {args.tolerance:.0%})")
     for line in lines:

@@ -25,6 +25,12 @@ Prints ``name,us_per_call,derived`` CSV rows.
                the multi-device scaling curve (replay qps at 1/2/4 forced
                host devices, DESIGN.md §12)
 
+  online_*   — online self-funding view selection (DESIGN.md §13):
+               measure-once fused builds vs the unfused Table III loop
+               (asserted >= 3x), and a serve replay where auto-selected
+               views must pay for their own scoring + creation +
+               maintenance (table5-style W_ori/(MV+W_opt) asserted > 1.0)
+
 Each benchmark additionally writes its rows as machine-readable
 ``BENCH_<name>.json`` under ``--json-dir`` (default ``results/``), so CI runs
 accumulate a perf trajectory, and ``benchmarks/check_regression.py`` gates CI
@@ -69,12 +75,27 @@ def bench_workloads(mode: str, seed: int) -> None:
                                   n_company=int(500 * scale),
                                   n_loan=int(800 * scale)),
     }
+    from repro.core.views import GraphSession
+
     for name, (g, schema, _) in datasets.items():
         rep = run_workload(g, schema, WORKLOADS[name],
                            repeats=2 if mode == "small" else 3, seed=seed)
         for vname, secs in rep.view_creation_s.items():
             _row(f"table3_view_creation_{name}_{vname}", secs * 1e6,
                  f"seconds={secs:.3f}")
+        # fused twin rows: same views built through one compiled program
+        # each (CompiledPlan.execute) instead of the paper's per-source
+        # host-synced loop; the measure-once install path is timed and
+        # gated separately in bench_online
+        fsess = GraphSession(g, schema)
+        for vtext in WORKLOADS[name].views:
+            v = fsess.create_view(vtext)
+            unfused = rep.view_creation_s[v.name]
+            _row(f"table3_fused_view_creation_{name}_{v.name}",
+                 v.creation_seconds * 1e6,
+                 f"seconds={v.creation_seconds:.3f};"
+                 f"unfused_seconds={unfused:.3f};"
+                 f"speedup={unfused / v.creation_seconds:.2f}")
         tbl = "table4" if name == "snb" else "table6"
         for q in rep.queries:
             _row(f"{tbl}_{name}_{q.name}", q.opt_s * 1e6,
@@ -683,6 +704,139 @@ def bench_roofline(mode: str, seed: int) -> None:
              f"collective_s={r['collective_s']:.3e}")
 
 
+def bench_online(mode: str, seed: int) -> None:
+    """Online self-funding selection + fused fast builds (DESIGN.md §13).
+
+    Two gated headlines, both asserted machine-independently here and
+    tracked by check_regression:
+
+    * ``online_build_fused`` — the three SNB views built through the
+      measure-once path (one fused scoring execution whose ReachResult is
+      installed via ``create_view(precomputed=...)``) vs the unfused
+      Table III loop; the install must be >= 3x faster.
+    * ``online_table5_auto_snb`` — a serve-style replay of the hot SNB read
+      shapes with per-round hot-label writes, leg A with the OnlineSelector
+      enabled (its cost includes candidate scoring, view creation and
+      maintenance — the MV term) vs leg B with views off (W_ori); the
+      auto-selected views must make W_ori/(MV+W_opt) > 1.0.
+    """
+    import time as _time
+
+    from repro.configs.mv4pg import WORKLOADS
+    from repro.core import graph as G
+    from repro.core.online_selection import OnlineSelectionConfig
+    from repro.core.parser import parse_view
+    from repro.core.views import GraphSession
+    from repro.data.synthetic import snb_like
+    from repro.serve.engine import ServeConfig
+
+    scale = {"small": 0.25, "default": 0.25, "large": 0.5}[mode]
+    g, schema, _ = snb_like(seed=seed, n_person=int(2000 * scale),
+                            n_post=int(1500 * scale),
+                            n_comment=int(12000 * scale),
+                            n_place=60, n_tag=300)
+
+    # ---- fused fast builds: unfused Table III loop vs measure-once install
+    tot_unfused = tot_install = tot_measure = 0.0
+    for vtext in WORKLOADS["snb"].views:
+        vdef = parse_view(vtext)
+        su = GraphSession(g, schema)
+        vu = su.create_view(vtext, fused=False)
+        sf = GraphSession(g, schema)
+        t0 = _time.perf_counter()
+        m = sf.selection_stats().measure(vdef.match)
+        t_measure = _time.perf_counter() - t0
+        vf = sf.create_view(vdef, precomputed=m)
+        assert sf.check_consistency(vdef.name), vdef.name
+        assert len(vf.pair_slot) == len(vu.pair_slot), vdef.name
+        _row(f"online_build_{vdef.name}", vf.creation_seconds * 1e6,
+             f"install_s={vf.creation_seconds:.3f};"
+             f"unfused_s={vu.creation_seconds:.3f};"
+             f"measure_s={t_measure:.3f};"
+             f"speedup={vu.creation_seconds / vf.creation_seconds:.2f}")
+        tot_unfused += vu.creation_seconds
+        tot_install += vf.creation_seconds
+        tot_measure += t_measure
+    build_speedup = tot_unfused / tot_install
+    _row("online_build_fused", tot_install * 1e6,
+         f"build_fused_speedup={build_speedup:.2f};"
+         f"unfused_total_s={tot_unfused:.3f};"
+         f"install_total_s={tot_install:.3f};"
+         f"measure_total_s={tot_measure:.3f};"
+         f"incl_measure={tot_unfused / (tot_install + tot_measure):.2f}")
+    assert build_speedup >= 3.0, (
+        f"measure-once fused builds must be >= 3x the unfused path, got "
+        f"{build_speedup:.2f}x")
+
+    # ---- auto-selected table5: serve replay, selector-on vs views-off
+    reads = WORKLOADS["snb"].reads
+    hot = [reads[0], reads[4], reads[2]]     # the three view shapes
+    rounds = 16 if mode == "large" else 12
+
+    sess_a = GraphSession(g, schema)
+    eng_a = sess_a.serve(ServeConfig(online_selection=OnlineSelectionConfig(
+        min_observations=12, evaluate_every=18, min_uses=2.0, max_views=3)))
+    sess_b = GraphSession(g, schema, auto_optimize=False)
+    eng_b = sess_b.serve(ServeConfig())
+
+    import numpy as _np
+    persons = _np.flatnonzero(_np.asarray(
+        g.node_mask(schema.node_label_id("Person"))))
+    comments = _np.flatnonzero(_np.asarray(
+        g.node_mask(schema.node_label_id("Comment"))))
+    posts = _np.flatnonzero(_np.asarray(
+        g.node_mask(schema.node_label_id("Post"))))
+    rng = np.random.default_rng(seed)
+
+    t_auto = t_ori = 0.0
+    for r in range(rounds):
+        # hot-label writes each round: the serve memo genuinely invalidates
+        # in both legs, so every round re-answers against a moving graph
+        batch_a, batch_b = G.WriteBatch(), G.WriteBatch()
+        c = int(comments[rng.integers(len(comments))])
+        p = int(posts[rng.integers(len(posts))])
+        a = int(persons[rng.integers(len(persons))])
+        b = int(persons[rng.integers(len(persons))])
+        for wb in (batch_a, batch_b):
+            wb.create_edge(c, p, "replyOf")
+            wb.create_edge(a, b, "knows")
+        tick_a, tick_b = [], []
+        t0 = _time.perf_counter()
+        for q in hot:
+            tick_a.append(eng_a.submit(q))
+            eng_a.submit(q)      # same-fingerprint repeat: shared execution
+        eng_a.submit_writes(batch_a)
+        eng_a.run()
+        t_auto += _time.perf_counter() - t0
+        t0 = _time.perf_counter()
+        for q in hot:
+            tick_b.append(eng_b.submit(q))
+            eng_b.submit(q)
+        eng_b.submit_writes(batch_b)
+        eng_b.run()
+        t_ori += _time.perf_counter() - t0
+        for qa, qb in zip(tick_a, tick_b):
+            assert qa.result.num_pairs() == qb.result.num_pairs(), (
+                f"leg parity broke at round {r}")
+
+    owned = eng_a.selector.owned_views()
+    sel = eng_a.selector.stats
+    ratio = t_ori / t_auto
+    _row("online_table5_auto_snb", t_auto * 1e6,
+         f"W_ori/(MV+W_opt)={ratio:.2f};W_ori_s={t_ori:.3f};"
+         f"MV_plus_W_opt_s={t_auto:.3f};auto_views={len(owned)};"
+         f"creates={sel.creates};drops={sel.drops};"
+         f"reused_builds={sel.reused_builds};"
+         f"select_s={sel.select_seconds:.3f};"
+         f"create_s={sel.create_seconds:.3f}")
+    assert owned, "hot traffic must fund at least one auto-selected view"
+    assert sel.reused_builds == sel.creates, \
+        "quiescent creations must install the scoring measurement"
+    assert ratio > 1.0, (
+        f"online selection must be self-funding on the smoke workload: "
+        f"W_ori/(MV+W_opt)={ratio:.2f}")
+
+
 BENCHES = {
     "workloads": bench_workloads,
     "maintenance": bench_maintenance_scaling,
@@ -691,12 +845,13 @@ BENCHES = {
     "plan_cache": bench_plan_cache,
     "predicate": bench_predicate,
     "serve": bench_serve,
+    "online": bench_online,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }
 
 SMOKE_BENCHES = ("maintenance", "wildcard", "plan_cache", "predicate",
-                 "serve")
+                 "serve", "online")
 
 
 def main() -> None:

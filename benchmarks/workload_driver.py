@@ -119,9 +119,13 @@ def _write_targets(sess: GraphSession, rng):
 
 def run_workload(g, schema, wl: WorkloadConfig, repeats: int = 3,
                  seed: int = 0, cfg: ExecConfig | None = None,
-                 refresh: str = "") -> WorkloadReport:
+                 refresh: str = "", build: str = "unfused") -> WorkloadReport:
     """``refresh`` is an optional ``REFRESH ...`` clause suffix appended to
-    every view definition (DESIGN.md §11), e.g. ``" REFRESH DEFERRED"``."""
+    every view definition (DESIGN.md §11), e.g. ``" REFRESH DEFERRED"``.
+    ``build`` selects the view materialization path timed into Table III:
+    ``"unfused"`` (the paper's per-source host-synced loop — the committed
+    baseline) or ``"fused"`` (one compiled program per build,
+    DESIGN.md §13)."""
     rng = np.random.default_rng(seed)
     sess = GraphSession(g, schema, cfg or ExecConfig())
     report = WorkloadReport(dataset=wl.name, view_creation_s={}, queries=[])
@@ -136,7 +140,7 @@ def run_workload(g, schema, wl: WorkloadConfig, repeats: int = 3,
 
     # ---- create views (Table III) --------------------------------------
     for vtext in wl.views:
-        view = sess.create_view(vtext + refresh)
+        view = sess.create_view(vtext + refresh, fused=(build == "fused"))
         report.view_creation_s[view.name] = view.creation_seconds
     report.mv_total = sum(report.view_creation_s.values())
 

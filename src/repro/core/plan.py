@@ -358,11 +358,11 @@ class CompiledPlan:
         rows = jnp.zeros(blk, jnp.int32)
         ok = jnp.bool_(True)
 
-        def hop(Fc, step_ops, backend, reverses, db, rows):
+        def hop(Fc, step_ops, backend, reverses, db, rows, skip_db=False):
             """One expansion hop: mirrors PathExecutor._hop exactly."""
             out = None
             for rev, arrs in zip(reverses, step_ops):
-                if collect:
+                if collect and not skip_db:
                     # deg is the last operand of every backend's tuple
                     db = db + _hop_cost_per_source(Fc, arrs[-1])
                 if backend == "segment":
@@ -431,12 +431,23 @@ class CompiledPlan:
             def body(c):
                 i, reach, frontier, db, rows = c
                 nxt, db, rows = hop(frontier, step_ops, step.backend,
-                                    step.reverses, db, rows)
+                                    step.reverses, db, rows, skip_db=True)
                 return (i + 1, reach | nxt, nxt & ~reach, db, rows)
 
             _, reach, frontier, db, rows = jax.lax.while_loop(
                 cond, body, (jnp.int32(0), cur, cur, db, rows))
             ok = ok & ~jnp.any(frontier)   # nonempty at exit: not converged
+            if collect:
+                # Successive closure frontiers are pairwise disjoint
+                # (frontier_{k+1} = nxt_k & ~reach_k) with union equal to the
+                # converged reach set, so the per-iteration DBHit sum
+                # telescopes to one matvec over ``reach`` — the same int32
+                # products summed in a different order, hoisted out of the
+                # while_loop where the [blk, N] cast dominated closure cost.
+                # A non-converged exit over-counts the residual frontier,
+                # but execute_rows raises before those metrics surface.
+                for arrs in step_ops:
+                    db = db + _hop_cost_per_source(reach, arrs[-1])
             F = reach
         return F, db, rows, ok
 
@@ -493,12 +504,12 @@ class CompiledPlan:
         rows = jnp.zeros(blk, jnp.int32)
         ok = jnp.bool_(True)
 
-        def hop(Fc, step_ops, db, rows):
+        def hop(Fc, step_ops, db, rows, skip_db=False):
             F_full = jax.lax.all_gather(Fc, "data", axis=1, tiled=True)
             out = None
             for arrs in step_ops:
                 a, b_local, ew, emask, deg = (x[0] for x in arrs)
-                if collect:
+                if collect and not skip_db:
                     db = db + _hop_cost_per_source(F_full, deg)
                 nxt = _hop_segment_local(F_full, a, b_local, emask, ew,
                                          counting=counting, n_loc=n_loc)
@@ -547,7 +558,8 @@ class CompiledPlan:
 
             def body(c):
                 i, reach, frontier, db, rows, _act = c
-                nxt, db, rows = hop(frontier, step_ops, db, rows)
+                nxt, db, rows = hop(frontier, step_ops, db, rows,
+                                    skip_db=True)
                 new = nxt & ~reach
                 act = jax.lax.psum(jnp.sum(new.astype(jnp.int32)), "data")
                 return (i + 1, reach | nxt, new, db, rows, act)
@@ -555,6 +567,15 @@ class CompiledPlan:
             _, reach, frontier, db, rows, act = jax.lax.while_loop(
                 cond, body, (jnp.int32(0), cur, cur, db, rows, act))
             ok = ok & (act == 0)
+            if collect:
+                # disjoint-frontier telescoping (see _program): one matvec
+                # over the converged reach replaces the in-loop accumulation;
+                # per-device deg covers only the shard's edge partition, so
+                # the end-of-program psum still sums exact partials
+                reach_full = jax.lax.all_gather(reach, "data", axis=1,
+                                                tiled=True)
+                for arrs in step_ops:
+                    db = db + _hop_cost_per_source(reach_full, arrs[4][0])
             F = reach
         met = jax.lax.psum(jnp.stack([db, rows]), "data")  # the single psum
         return F, met[0], met[1], ok
@@ -869,10 +890,10 @@ class SharedProgram:
                 for d in range(ndirs))
             oi += 1
 
-            def hop(Fc, db, rows, step_rows=step_rows):
+            def hop(Fc, db, rows, step_rows=step_rows, skip_db=False):
                 out = None
                 for (a, b, ew, emask, deg) in step_rows:
-                    if collect:
+                    if collect and not skip_db:
                         db = db + _hop_cost_rows(Fc, deg)
                     nxt = _hop_segment_rows(Fc, a, b, emask, ew,
                                             counting=counting)
@@ -903,12 +924,16 @@ class SharedProgram:
 
             def body(c):
                 i, reach, frontier, db, rows = c
-                nxt, db, rows = hop(frontier, db, rows)
+                nxt, db, rows = hop(frontier, db, rows, skip_db=True)
                 return (i + 1, reach | nxt, nxt & ~reach, db, rows)
 
             _, reach, frontier, db, rows = jax.lax.while_loop(
                 cond, body, (jnp.int32(0), cur, cur, db, rows))
             ok = ok & ~jnp.any(frontier)
+            if collect:
+                # disjoint-frontier telescoping (see CompiledPlan._program)
+                for (a, b, ew, emask, deg) in step_rows:
+                    db = db + _hop_cost_rows(reach, deg)
             F = reach
         return F, db, rows, ok
 
@@ -953,11 +978,11 @@ class SharedProgram:
                 for d in range(ndirs))
             oi += 1
 
-            def hop(Fc, db, rows, step_rows=step_rows):
+            def hop(Fc, db, rows, step_rows=step_rows, skip_db=False):
                 F_full = jax.lax.all_gather(Fc, "data", axis=1, tiled=True)
                 out = None
                 for (a, b_local, ew, emask, deg) in step_rows:
-                    if collect:
+                    if collect and not skip_db:
                         db = db + _hop_cost_rows(F_full, deg)
                     nxt = _hop_segment_rows_local(F_full, a, b_local, emask,
                                                   ew, counting=counting,
@@ -989,7 +1014,7 @@ class SharedProgram:
 
             def body(c):
                 i, reach, frontier, db, rows, _act = c
-                nxt, db, rows = hop(frontier, db, rows)
+                nxt, db, rows = hop(frontier, db, rows, skip_db=True)
                 new = nxt & ~reach
                 act = jax.lax.psum(jnp.sum(new.astype(jnp.int32)), "data")
                 return (i + 1, reach | nxt, new, db, rows, act)
@@ -997,6 +1022,12 @@ class SharedProgram:
             _, reach, frontier, db, rows, act = jax.lax.while_loop(
                 cond, body, (jnp.int32(0), cur, cur, db, rows, act))
             ok = ok & (act == 0)
+            if collect:
+                # disjoint-frontier telescoping (see CompiledPlan._program)
+                reach_full = jax.lax.all_gather(reach, "data", axis=1,
+                                                tiled=True)
+                for (a, b_local, ew, emask, deg) in step_rows:
+                    db = db + _hop_cost_rows(reach_full, deg)
             F = reach
         met = jax.lax.psum(jnp.stack([db, rows]), "data")
         return F, met[0], met[1], ok

@@ -134,6 +134,8 @@ class GraphSession:
         # small-block maintenance config; the old/mid wrappers are rebound to
         # engine snapshots per write (never rebuilt from scratch)
         self._exec = PathExecutor(engine=self.engine, cfg=self.cfg)
+        # lazy persistent selection stats (core/selection.SelectionStats)
+        self._selection_stats = None
         self._delta = PathExecutor(engine=self.engine, cfg=self._delta_cfg)
         self._old_exec = PathExecutor(engine=self.engine, cfg=self._delta_cfg)
         self._mid_exec = PathExecutor(engine=self.engine, cfg=self._delta_cfg)
@@ -181,7 +183,50 @@ class GraphSession:
 
     # ----------------------------------------------------------- view create
 
-    def create_view(self, stmt: Union[str, ViewDef]) -> MaterializedView:
+    def _materialize_match(self, vdef: ViewDef, counting: bool,
+                           fused: bool = True):
+        """Evaluate the view's MATCH pattern over the current graph.
+
+        ``fused=True`` (the default) routes materialization through the
+        planner's :class:`~repro.core.plan.CompiledPlan` — one jitted
+        program over blocked sources with a single metric sync, exactly the
+        serve read path, so repeated builds of the same shape reuse the
+        compiled program.  ``fused=False`` keeps the per-hop host-synced
+        :meth:`PathExecutor.run_path` loop (the paper's table 3 build path,
+        retained as the benchmark twin and as ``check_consistency``'s
+        independent oracle).  Both return a :class:`ReachResult` with
+        identical pairs and metrics: the fused trace reuses the row-local
+        hop kernels and folds per-row DBHit/Rows back to the ``S + Σvec``
+        accounting ``run_path`` starts from.
+        """
+        if not fused:
+            return self._exec.run_path(vdef.match, counting=counting)
+        # views=[] -> use_views=False -> view_gen=None: the build plan is
+        # catalog-independent (a view must never be defined through other
+        # views' edges), and the planner's counting rule reduces to the
+        # create_view rule (no force_bool, counting iff no unbounded rel)
+        plan, _ = self.planner.plan(Query(path=vdef.match), [],
+                                    self.view_set_generation)
+        assert plan.counting == counting
+        return plan.execute()
+
+    def create_view(self, stmt: Union[str, ViewDef], *,
+                    fused: bool = True,
+                    precomputed=None) -> MaterializedView:
+        """Materialize a view.
+
+        ``precomputed`` accepts a selection
+        :class:`~repro.core.selection.Measurement` (anything with ``result``
+        — a :class:`~repro.core.executor.ReachResult` of the view's MATCH —
+        and a ``plan`` whose validity scopes it).  When the carried plan is
+        still valid against the current graph, creation installs the
+        already-computed pairs instead of re-executing the match — the
+        selection pipeline's measure-once path (old pipeline: one unfused
+        execution to score + one to build; new: a single fused execution
+        shared by both).  A stale or missing measurement silently falls back
+        to a fresh ``fused``-path execution, so the result is identical
+        either way.
+        """
         vdef = parse_view(stmt) if isinstance(stmt, str) else stmt
         if vdef.name in self.views:
             raise ValueError(f"view {vdef.name!r} already exists")
@@ -192,7 +237,16 @@ class GraphSession:
                 f"edge label; view labels live in a separate partition")
         t0 = time.perf_counter()
         counting = not any(r.unbounded for r in vdef.match.rels)
-        res = self._exec.run_path(vdef.match, counting=counting)
+        res = None
+        if precomputed is not None:
+            plan = getattr(precomputed, "plan", None)
+            # a build plan is catalog-independent (view_gen None), so
+            # is_valid reduces to label epochs + arena shape: stale exactly
+            # when a base write touched one of the match's labels
+            if plan is not None and plan.is_valid(self.view_set_generation):
+                res = precomputed.result
+        if res is None:
+            res = self._materialize_match(vdef, counting, fused=fused)
         s_ids, d_ids, cnt = res.pairs()
 
         label_id = self.schema.register_view_label(vdef.name)
@@ -976,18 +1030,30 @@ class GraphSession:
 
     # ------------------------------------------------------- view selection
 
+    def selection_stats(self):
+        """The session's persistent :class:`~repro.core.selection.
+        SelectionStats` (lazily built over the session planner): candidate
+        measurements run the fused compiled path and stay memoized across
+        selection rounds, re-validated through their plan's label epochs."""
+        from repro.core.selection import SelectionStats
+        if self._selection_stats is None:
+            self._selection_stats = SelectionStats(self.schema,
+                                                   planner=self.planner)
+        return self._selection_stats
+
     def select_views(self, read_queries, k: int = 3, refresh=None,
                      write_fraction: float = 0.0):
         """Workload-driven view selection scored on the session's warm
-        engine.  ``refresh``/``write_fraction`` make the Eq. 1 score
-        maintenance-aware (core/selection.py); selected definitions carry
-        the policy."""
+        engine via the persistent fused stats store.  ``refresh``/
+        ``write_fraction`` make the Eq. 1 score maintenance-aware
+        (core/selection.py); selected definitions carry the policy."""
         from repro.core.pattern import FreshnessPolicy
         from repro.core.selection import select_views as _select
         return _select(self.g, self.schema, read_queries, k=k, cfg=self.cfg,
                        engine=self.engine,
                        refresh=refresh or FreshnessPolicy(),
-                       write_fraction=write_fraction)
+                       write_fraction=write_fraction,
+                       stats=self.selection_stats())
 
     # -------------------------------------------------------------- queries
 

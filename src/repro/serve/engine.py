@@ -71,6 +71,7 @@ import numpy as np
 
 from repro.core import graph as G
 from repro.core.executor import ReachResult
+from repro.core.online_selection import OnlineSelectionConfig, OnlineSelector
 from repro.core.parser import parse_query, query_fingerprint
 from repro.core.pattern import Query
 from repro.core.plan import CompiledPlan, ExpandStep, RowResult, block_sizes
@@ -94,6 +95,10 @@ class ServeConfig:
     structural_sharing: bool = True  # cross-fingerprint SharedProgram buckets
     adaptive_blocks: bool = True     # pow2 sub-block sizing (serve path only)
     reuse_results: bool = True       # cross-window execution memo
+    # enable online view selection (core/online_selection.py): the engine
+    # feeds answered reads/applied fences to an OnlineSelector and lets it
+    # create/drop budget-bound views at quiescent points between windows
+    online_selection: Optional["OnlineSelectionConfig"] = None
 
 
 @dataclass
@@ -198,6 +203,8 @@ class ServeStats:
     shared_groups: int = 0     # groups run through a shared structural program
     warm_pool_hits: int = 0    # singleton groups riding a pooled shared shape
     drains: int = 0            # read-triggered targeted view drains
+    auto_creates: int = 0      # views created by the online selector
+    auto_drops: int = 0        # views dropped by the online selector
 
     @property
     def mean_group_size(self) -> float:
@@ -291,8 +298,20 @@ class ServeEngine:
         # the first window of a recurring shape reuses the warm executable
         # instead of compiling a per-fingerprint program
         self._bucket_pool: set = set()
+        # the pool keys by (structure_key, share_scales) only — no
+        # view_set_generation — so across create_view/drop_view churn stale
+        # shape keys would otherwise accumulate forever (correctness is
+        # unaffected: SharedProgram re-gathers operands per execution and
+        # the memo is plan-identity-checked, but the pool would keep routing
+        # dead shapes of dropped-view plans through shared compilation).
+        # Track the generation it was filled under and reset on churn.
+        self._bucket_pool_gen = session.view_set_generation
         self._pending_dead: set = set()    # edge slots pending deletion
         self._pending_dead_nodes: set = set()  # node slots pending deletion
+        # online view selection: observe_* feeds are pure bookkeeping; the
+        # selector only mutates the catalog inside step() between windows
+        self.selector = (OnlineSelector(session, self.cfg.online_selection)
+                         if self.cfg.online_selection is not None else None)
         # the session notifies us at drain/drop points (targeted memo
         # eviction for content that changes outside any fence application)
         session._serve_engines.add(self)
@@ -586,6 +605,13 @@ class ServeEngine:
             self._apply_fence(self._queue.popleft())
         self._queue = collections.deque(
             t for t in self._queue if not t.done)
+        if self.selector is not None:
+            # quiescent point: the window ran (or the fence applied) and no
+            # in-flight plan references exist — catalog churn here honors
+            # the single-writer contract, and the next _collect re-plans
+            if self.selector.maybe_evaluate():
+                self.stats.auto_creates = self.selector.stats.creates
+                self.stats.auto_drops = self.selector.stats.drops
         return True
 
     def run(self) -> ServeStats:
@@ -621,6 +647,8 @@ class ServeEngine:
         t.window = self.epoch
         t.window_seq = self._window_seq
         t.via = via
+        if self.selector is not None and t.query is not None:
+            self.selector.observe_read(t.query, t.result.metrics.db_hits)
         st = self.stats
         st.queries += 1
         if via == "memo":
@@ -677,6 +705,12 @@ class ServeEngine:
         buckets: Dict[tuple, List[int]] = {}
         singles: List[int] = []
         if cfg.structural_sharing:
+            if sess.view_set_generation != self._bucket_pool_gen:
+                # view-churn invalidation: drop warm shape keys learned
+                # under an older catalog so dropped-view shapes stop riding
+                # the pool and the pool can't grow without bound under churn
+                self._bucket_pool.clear()
+                self._bucket_pool_gen = sess.view_set_generation
             for gid, grp in groups.items():
                 skey = grp.plan.structure_key()
                 if skey is None:
@@ -746,6 +780,9 @@ class ServeEngine:
                 t.result = reach[i]
                 t.window = self.epoch
                 t.window_seq = self._window_seq
+                if self.selector is not None and t.query is not None:
+                    self.selector.observe_read(t.query,
+                                               t.result.metrics.db_hits)
                 if i in plan_gather[gid]:
                     t.via = "gather"
                     st.gathers += 1
@@ -791,6 +828,8 @@ class ServeEngine:
         t.write_result = self.sess.apply_writes(t.batch)
         t.window = self.epoch
         self.epoch += 1
+        if self.selector is not None and t.scope is not None:
+            self.selector.observe_write(max(t.scope.write_ops, 1))
         self.stats.write_batches += 1
         self._pending_dead.difference_update(
             int(e) for e in t.batch.edge_deletes)

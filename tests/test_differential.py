@@ -246,3 +246,99 @@ def test_differential_freshness_modes(seed, mode):
     for q in QUERIES:
         assert _pairs(sess.query(q, use_views=True)) == \
             _pairs(sess.query(q, use_views=False))
+
+
+# ---------------------------------------------------------------------------
+# view-churn differential: create_view/drop_view interleaved mid-workload
+# ---------------------------------------------------------------------------
+
+CHURN_MODES = ["", " REFRESH DEFERRED", " REFRESH STALENESS 3"]
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+@pytest.mark.parametrize("mode", CHURN_MODES)
+def test_differential_view_churn(seed, mode):
+    """The catalog itself becomes a workload variable: under the same random
+    write interleaving, views are created and dropped *mid-workload* (the
+    online-selection lifecycle), for all three freshness policies.
+
+    Invariants at every comparison point: views-on == views-off row parity
+    (counts included), every live view passes ``check_consistency`` after a
+    drain, dropped views leave nothing behind (their labels never resurface
+    in answers), and recreating a previously dropped view name is safe
+    (label ids are never recycled; epochs invalidate stale plans)."""
+    bound = 3 if "STALENESS" in mode else None
+    rng = np.random.default_rng(seed + 500)
+    g, schema, base_eids = _build(rng)
+    sess = GraphSession(g, schema)
+    live = {}
+
+    def churn():
+        if live and (len(live) == len(VIEWS) or rng.random() < 0.5):
+            i = int(rng.choice(sorted(live)))
+            sess.drop_view(live.pop(i).name)
+        else:
+            absent = [i for i in range(len(VIEWS)) if i not in live]
+            i = int(rng.choice(absent))
+            live[i] = sess.create_view(VIEWS[i] + mode)
+            assert sess.check_consistency(live[i].name)
+
+    churn()
+    churn()
+
+    alive_nodes = set(range(N_NODES))
+    alive_edges = set(base_eids)
+
+    def live_base_edges(ids):
+        alive = np.asarray(sess.g.edge_alive)
+        lab = np.asarray(sess.g.edge_label)
+        return {e for e in ids if bool(alive[e])
+                and not schema.is_view_edge_label_id(int(lab[e]))}
+
+    steps = max(STEPS // 2, 20)
+    for step in range(steps):
+        batch = _random_batch(rng, alive_nodes, alive_edges)
+        res = sess.apply_writes(batch)
+        for eid in batch.edge_deletes:
+            alive_edges.discard(int(eid))
+        alive_edges.update(int(s) for s in res.edge_slots)
+        alive_nodes.update(int(s) for s in res.node_slots)
+        for nid in batch.node_deletes:
+            alive_nodes.discard(int(nid))
+        alive_edges = live_base_edges(alive_edges)
+
+        if step % 4 == 1:
+            churn()
+
+        if bound is not None:
+            for v in live.values():
+                lag = v.pending.staleness(sess.write_epoch)
+                assert lag <= bound, (
+                    f"seed={seed} step={step}: {v.name} lag {lag} exceeds "
+                    f"declared bound {bound}")
+
+        if step % 5 == 2:
+            if bound is not None:
+                sess.drain_all()
+            for q in QUERIES:
+                with_v = _pairs(sess.query(q, use_views=True))
+                without = _pairs(sess.query(q, use_views=False))
+                assert with_v == without, (
+                    f"seed={seed} step={step} mode={mode.strip() or 'EXACT'} "
+                    f"views={sorted(v.name for v in live.values())}: rows "
+                    f"diverge for {q!r}:\n  with views: {with_v}\n"
+                    f"  without:    {without}")
+
+        if step % 11 == 7:
+            sess.drain_all()
+            for v in live.values():
+                assert sess.check_consistency(v.name), (
+                    f"seed={seed} step={step} mode={mode.strip() or 'EXACT'}"
+                    f": {v.name} inconsistent after drain_all")
+
+    sess.drain_all()
+    for v in live.values():
+        assert sess.check_consistency(v.name)
+    for q in QUERIES:
+        assert _pairs(sess.query(q, use_views=True)) == \
+            _pairs(sess.query(q, use_views=False))

@@ -1,0 +1,160 @@
+"""Online view selection (core/online_selection.py): the live Eq. 1 loop.
+
+Covers the full lifecycle on a small SNB-like graph: hot repeated traffic
+funds auto-created views (with the scoring measurement reused as the build),
+results stay bit-identical to a views-off twin, traffic drift decays
+frequencies until owned views are dropped, user views are never touched or
+duplicated, stale measurements fall back to a fresh fused build, and the
+storage budget / frequency weights bound what greedy selection may pick.
+"""
+import numpy as np
+import pytest
+
+from repro.core.online_selection import OnlineSelectionConfig, OnlineSelector
+from repro.core.parser import parse_query
+from repro.core.selection import (
+    _signature, candidate_subpaths, greedy_select, score_candidate,
+)
+from repro.core.views import GraphSession
+from repro.data.synthetic import snb_like
+from repro.serve.engine import ServeConfig
+
+HOT = "MATCH (c:Comment)-[:replyOf*..]->(p:Post) RETURN c, p"
+HOT2 = "MATCH (a:Person)-[:knows]->(m:Person)-[:knows]->(b:Person) RETURN a, b"
+COLD = "MATCH (p:Person)-[:livesIn]->(pl:Place) RETURN p, pl"
+
+
+def _graph():
+    g, schema, _ = snb_like(seed=0, n_person=300, n_post=200,
+                            n_comment=400, n_tag=40)
+    return g, schema
+
+
+@pytest.fixture(scope="module")
+def base():
+    return _graph()
+
+
+def _fast_cfg(**kw):
+    return ServeConfig(online_selection=OnlineSelectionConfig(
+        min_observations=8, evaluate_every=8, min_uses=2.0, max_views=2,
+        **kw))
+
+
+def _pairs(res):
+    s, d, _ = res.pairs()
+    return set(zip(s.tolist(), d.tolist()))
+
+
+def test_hot_traffic_funds_views_with_build_reuse(base):
+    g, schema = base
+    sess = GraphSession(g, schema)
+    eng = sess.serve(_fast_cfg())
+    for _ in range(12):
+        eng.submit(HOT)
+        eng.submit(HOT2)
+    eng.run()
+    owned = eng.selector.owned_views()
+    assert owned, "hot repeated traffic must fund at least one view"
+    assert eng.stats.auto_creates == len(owned)
+    # quiescent creations install the scoring measurement's ReachResult
+    assert eng.selector.stats.reused_builds == eng.selector.stats.creates
+    ref = GraphSession(g, schema, auto_optimize=False)
+    for q in (HOT, HOT2):
+        assert _pairs(sess.query(q)) == _pairs(ref.query(q)), q
+    for name in owned:
+        assert sess.check_consistency(name)
+
+
+def test_traffic_drift_decays_and_drops(base):
+    g, schema = base
+    sess = GraphSession(g, schema)
+    eng = sess.serve(_fast_cfg())
+    for _ in range(12):
+        eng.submit(HOT)
+    eng.run()
+    assert eng.selector.owned_views()
+    for _ in range(5):                    # decay rounds with new traffic
+        for _ in range(10):
+            eng.submit(COLD)
+        eng.run()
+    assert not eng.selector.owned_views(), \
+        "faded traffic must stop funding its views"
+    assert eng.stats.auto_drops >= 1
+    # dropped views leave no trace in the result path
+    ref = GraphSession(g, schema, auto_optimize=False)
+    assert _pairs(sess.query(HOT)) == _pairs(ref.query(HOT))
+
+
+def test_user_views_never_touched_or_duplicated(base):
+    g, schema = base
+    sess = GraphSession(g, schema)
+    user = sess.create_view(
+        "CREATE VIEW MINE AS (CONSTRUCT (c)-[r:MINE]->(p) "
+        "MATCH (c:Comment)-[:replyOf*..]->(p:Post))")
+    eng = sess.serve(_fast_cfg())
+    for _ in range(12):
+        eng.submit(HOT)
+    eng.run()
+    assert "MINE" in sess.views, "selector must not drop user views"
+    user_sig = _signature(user.vdef.match)
+    for name, v in eng.selector.owned_views().items():
+        assert _signature(v.vdef.match) != user_sig, \
+            f"selector duplicated the user view as {name}"
+    # drift must still leave the user view alone
+    for _ in range(5):
+        for _ in range(10):
+            eng.submit(COLD)
+        eng.run()
+    assert "MINE" in sess.views
+
+
+def test_stale_measurement_falls_back_to_fresh_build():
+    g, schema = _graph()
+    sess = GraphSession(g, schema)
+    q = parse_query(HOT2)
+    sub = candidate_subpaths([q])[0]
+    c = score_candidate(None, sub, [q], name="CAND",
+                        stats=sess.selection_stats())
+    assert c is not None and c.measurement is not None
+    assert c.measurement.is_current()
+    # a base write touching the candidate's labels invalidates its plan
+    persons = np.flatnonzero(np.asarray(
+        sess.g.node_mask(schema.node_label_id("Person"))))
+    sess.create_edge(int(persons[0]), int(persons[1]), "knows")
+    assert not c.measurement.is_current()
+    mv = sess.create_view(c.vdef, precomputed=c.measurement)
+    # the stale result was NOT installed: the view reflects the new edge
+    assert sess.check_consistency("CAND")
+    assert len(mv.pair_slot) >= c.e_vl
+
+
+def test_storage_budget_bounds_selection(base):
+    g, schema = base
+    sess = GraphSession(g, schema)
+    stats = sess.selection_stats()
+    qs = [parse_query(HOT), parse_query(HOT2)]
+    free = greedy_select(stats, qs, schema=schema, k=4)
+    assert len(free) >= 2
+    smallest = min(c.e_vl for c in free)
+    assert smallest > 0
+    tight = greedy_select(stats, qs, schema=schema, k=4,
+                          storage_budget=smallest)
+    assert tight and sum(c.e_vl for c in tight) <= smallest
+    assert len(tight) < len(free)
+    assert greedy_select(stats, qs, schema=schema, k=0) == []
+    # the second call re-ranked entirely from memoized measurements
+    assert stats.measure_hits > 0
+
+
+def test_zero_weight_traffic_cannot_fund_views(base):
+    g, schema = base
+    sess = GraphSession(g, schema)
+    stats = sess.selection_stats()
+    qs = [parse_query(HOT), parse_query(HOT2)]
+    chosen = greedy_select(stats, qs, schema=schema, k=4,
+                           weights=[4.0, 0.0])
+    sigs = {_signature(c.vdef.match) for c in chosen}
+    knows2 = _signature(candidate_subpaths([qs[1]])[0])
+    assert knows2 not in sigs, "a zero-frequency shape funded a view"
+    assert sigs, "the weighted shape should still be selected"

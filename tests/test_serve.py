@@ -490,3 +490,58 @@ def test_bounded_stale_read_hoists_within_bound():
     # a later session-level drain restores exactness
     sess.drain_all()
     assert sess.check_consistency("V0")
+
+
+def test_view_churn_under_traffic_stays_consistent():
+    """create_view/drop_view between serve windows (the view-churn sweep).
+
+    The warm shared-shape pool keys by (structure_key, share_scales) with
+    no view generation, and the cross-window memo keys bindings by
+    (fingerprint, use_views): across catalog churn the pool must reset to
+    the new generation (stale shape keys of dropped-view plans would
+    otherwise accumulate unboundedly) and every ticket — including
+    memo-eligible repeats — must keep matching the sequential twin."""
+    serve_sess = _build(seed=5)
+    seq_sess = _build(seed=5)
+    eng = serve_sess.serve()
+
+    def phase(ctx):
+        tickets = []
+        for _ in range(2):                 # repeats exercise memo reuse
+            for q in QUERIES:
+                tickets.append((q, None, eng.submit(q)))
+                src = np.asarray([2], np.int32)
+                tickets.append((q, src, eng.submit(q, sources=src)))
+        eng.run()
+        for q, src, t in tickets:
+            want = seq_sess.query(q, sources=src)
+            _assert_same(t.result, want, ctx=f"{ctx} q={q[:38]!r}")
+
+    phase("pre-churn")
+    gen_before = eng._bucket_pool_gen
+    serve_sess.create_view(VIEW)
+    seq_sess.create_view(VIEW)
+    phase("view-live")
+    assert eng._bucket_pool_gen == serve_sess.view_set_generation, \
+        "bucket pool generation must track the catalog"
+    assert eng._bucket_pool_gen != gen_before
+    serve_sess.drop_view("V0")
+    seq_sess.drop_view("V0")
+    # post-drop the catalog is back to no-views: base-only plans (keyed
+    # catalog-independent) are still current, so this whole round may be
+    # answered from the memo without running a window — the pool reset is
+    # lazy and must happen at the *next executed window*, not eagerly
+    phase("post-drop")
+    # churn in the middle of a submitted batch: reads before the churn ran
+    # under the old catalog, reads after see the new one — both correct
+    a = eng.submit(QUERIES[0])
+    eng.run()
+    serve_sess.create_view(VIEW)
+    seq_sess.create_view(VIEW)
+    b = eng.submit(QUERIES[0])
+    eng.run()          # view-live plan is fresh -> a real window runs
+    _assert_same(a.result, seq_sess.query(QUERIES[0], use_views=False),
+                 "pre-churn rows (no view existed)")
+    _assert_same(b.result, seq_sess.query(QUERIES[0]), "post-churn rows")
+    assert eng._bucket_pool_gen == serve_sess.view_set_generation, \
+        "first window after churn must reset the warm pool generation"
