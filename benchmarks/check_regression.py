@@ -69,6 +69,10 @@ HEADLINES: List[Tuple] = [
     # (build_fused_speedup >= 3x, auto table5 ratio > 1.0) on every run
     ("online", "online_build_fused", "build_fused_speedup", 0.5),
     ("online", "online_table5_auto_snb", "W_ori/(MV+W_opt)", 0.5),
+    # view-fed GNN epoch loop: maintained-view sampling vs per-epoch
+    # re-extraction.  bench_gnn asserts the absolute bars on every run
+    # (view_vs_reextract >= 3x, vec_vs_loop >= 2x); the gate tracks margin
+    ("gnn", "gnn_sampled_epoch", "view_vs_reextract", 0.5),
     # deep-lane only (workloads is not a smoke bench): gated when the
     # fresh run includes it, skipped when BENCH_workloads.json is absent
     ("workloads", "table5_snb_workload", "W_ori/(MV+W_opt)", 0.5),

@@ -1,7 +1,7 @@
 """End-to-end MV4PG demo on a synthetic SNB-scale graph: the paper's full
-loop (create views -> optimized reads -> maintained writes), plus the
-recsys integration (the MIND co-occurrence retrieval view maintained under
-streaming interactions).
+loop (create views -> optimized reads -> maintained writes), the recsys
+integration (the MIND co-occurrence retrieval view maintained under
+streaming interactions), and the §14 view-fed GNN pipeline.
 
     PYTHONPATH=src python examples/graph_views_demo.py
 """
@@ -9,18 +9,18 @@ import time
 
 import numpy as np
 
+from repro import mv4pg as pg
 from repro.configs.mv4pg import WORKLOADS
-from repro.core import GraphBuilder, GraphSchema, GraphSession
 from repro.data.synthetic import snb_like
 
 # ---------------------------------------------------------------- paper loop
 print("== MV4PG on an SNB-like graph ==")
 g, schema, ids = snb_like(seed=0, n_person=800, n_post=600, n_comment=5000)
-sess = GraphSession(g, schema)
+sess = pg.GraphSession(g, schema)
 for v in WORKLOADS["snb"].views:
-    mv = sess.create_view(v)
-    print(f"  view {mv.name}: {mv.stats.e_vl} edges, "
-          f"optEff={mv.stats.opt_eff():.0f}, {mv.creation_seconds:.2f}s")
+    st = sess.create_view(v).stats()
+    print(f"  view {st.name}: {st.e_vl} edges, "
+          f"optEff={st.opt_eff():.0f}, {st.creation_seconds:.2f}s")
 
 for q in WORKLOADS["snb"].reads[:3]:
     t0 = time.perf_counter()
@@ -33,33 +33,44 @@ for q in WORKLOADS["snb"].reads[:3]:
           f"(DBHits {r_ori.metrics.db_hits} -> {r_opt.metrics.db_hits})")
 
 # writes with incremental maintenance
-rng = np.random.default_rng(0)
 comments = ids["comments"]
 sess.create_edge(comments[10], comments[20], "replyOf")
-assert all(sess.check_consistency(v) for v in sess.views)
+assert all(sess.check_consistency(h.name) for h in sess.catalog())
 print("  write + maintenance: consistent ✓")
 
 # ------------------------------------------------------- recsys integration
 print("== MIND retrieval view (item <- user -> item co-occurrence) ==")
-schema2 = GraphSchema()
-b = GraphBuilder(schema2)
+schema2 = pg.GraphSchema()
+b = pg.GraphBuilder(schema2)
 users = [b.add_node("User") for _ in range(50)]
 items = [b.add_node("Item") for _ in range(200)]
 rng = np.random.default_rng(1)
 for u in users:
     for it in rng.choice(items, size=5, replace=False):
         b.add_edge(u, int(it), "clicked")
-sess2 = GraphSession(b.finalize(slack=6.0), schema2)
+sess2 = pg.GraphSession(b.finalize(slack=6.0), schema2)
 co = sess2.create_view("""
     CREATE VIEW ITEM_COOCCUR AS (
         CONSTRUCT (a)-[r:ITEM_COOCCUR]->(b)
         MATCH (a:Item)<-[:clicked]-(u:User)-[:clicked]->(b:Item))""")
-print(f"  co-occurrence view: {co.stats.e_vl} pairs")
+print(f"  co-occurrence view: {co.stats().e_vl} pairs")
 # streaming interaction -> incremental maintenance
 sess2.create_edge(users[0], items[100], "clicked")
 assert sess2.check_consistency("ITEM_COOCCUR")
-print(f"  after streaming click: {co.stats.e_vl} pairs, consistent ✓")
+print(f"  after streaming click: {co.stats().e_vl} pairs, consistent ✓")
 # retrieval candidates for a user = view edges from their clicked items
 r = sess2.query(
     "MATCH (u:User)-[:clicked]->(i:Item)-[:ITEM_COOCCUR]->(c:Item) RETURN u, c")
-print(f"  candidate pairs via view: {r.num_pairs()}")
+print(f"  candidate pairs via view: {r.pairs().n_pairs}")
+
+# ------------------------------------------------- view-fed GNN (DESIGN §14)
+print("== co-occurrence view as the training substrate ==")
+cfg = pg.TrainConfig(epochs=2, batch_nodes=32, fanout=(5, 5), seed=0)
+params, report = pg.train_on_view(sess2, co, cfg)
+print(f"  SAGE on ITEM_COOCCUR: {report.steps} steps, "
+      f"loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f}")
+# a streaming click flows into the next epoch's sampling CSR through the
+# view's maintenance deltas — no re-extraction
+sess2.create_edge(users[1], items[101], "clicked")
+emb = pg.embed_on_view(sess2, co, params, cfg)
+print(f"  embeddings over maintained view: {emb.shape}")

@@ -1,40 +1,48 @@
 """Quickstart: MV4PG in 40 lines — create a view, query it, mutate, stay
-consistent.
+consistent.  Everything goes through the blessed ``repro.mv4pg`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import GraphBuilder, GraphSchema, GraphSession
+from repro import mv4pg as pg
 
 # 1. build a small property graph (a reply tree, like the paper's Figure 1)
-schema = GraphSchema()
-b = GraphBuilder(schema)
+schema = pg.GraphSchema()
+b = pg.GraphBuilder(schema)
 post = b.add_node("Post")
 c1, c2, c3 = (b.add_node("Comment") for _ in range(3))
 b.add_edge(c1, post, "replyOf")       # c1 -> post
 b.add_edge(c2, c1, "replyOf")         # c2 -> c1 -> post
 b.add_edge(c3, c2, "replyOf")         # c3 -> c2 -> c1 -> post
-sess = GraphSession(b.finalize(), schema)
+sess = pg.GraphSession(b.finalize(), schema)
 
-# 2. create the paper's ROOT_POST view (variable-length edge, unbounded)
+# 2. create the paper's ROOT_POST view (variable-length edge, unbounded);
+#    create_view returns a ViewHandle — the public face of the view
 view = sess.create_view("""
     CREATE VIEW ROOT_POST AS (
         CONSTRUCT (c)-[r:ROOT_POST]->(p)
         MATCH (c:Comment)-[:replyOf*..]->(p:Post))""")
-print(f"materialized {len(view.pair_slot)} view edges "
-      f"in {view.creation_seconds*1e3:.1f}ms")
+st = view.stats()
+print(f"materialized {st.e_vl} view edges in {st.creation_seconds*1e3:.1f}ms "
+      f"({view.policy.pretty()})")
 
-# 3. query — the optimizer rewrites the var-length traversal onto the view
+# 3. query — the optimizer rewrites the var-length traversal onto the view;
+#    .pairs() rows come back as a typed PairRows (src, dst, count)
 q = "MATCH (c:Comment)-[:replyOf*..]->(p:Post) RETURN c, p"
 opt = sess.query(q)                       # uses the view
 ori = sess.query(q, use_views=False)      # full traversal
 print(f"DBHits: {ori.metrics.db_hits} (original) -> "
       f"{opt.metrics.db_hits} (view-optimized)")
-assert sorted(zip(*opt.pairs()[:2])) == sorted(zip(*ori.pairs()[:2]))
+assert sorted(zip(opt.pairs().src, opt.pairs().dst)) == \
+    sorted(zip(ori.pairs().src, ori.pairs().dst))
 
 # 4. mutate — templated incremental maintenance keeps the view consistent
-from repro.core import graph as G
-slot = G.free_node_slots(sess.g, 1)[0]
-sess.g = G.create_node(sess.g, slot, schema.node_labels.intern("Comment"), 99)
-sess.create_edge(int(slot), c3, "replyOf")   # new comment replies to c3
+new_c = sess.create_node("Comment", key=99)
+sess.create_edge(new_c, c3, "replyOf")    # new comment replies to c3
 assert sess.check_consistency("ROOT_POST")
-print(f"after insert: {len(view.pair_slot)} view edges; consistency verified")
+print(f"after insert: {view.stats().e_vl} view edges; consistency verified")
+
+# 5. the view doubles as a training substrate: its maintained edges feed
+#    neighbor sampling / GraphBatch construction with no re-extraction
+batch = view.to_graphbatch()
+print(f"view as GraphBatch: {batch.node_feat.shape[0]} padded nodes, "
+      f"{int(batch.edge_mask.sum())} live edges")

@@ -1,12 +1,49 @@
-"""Continuous-batching serving example.
+"""Graph serving demo: continuous-batching reads, write fences, and the §14
+embedding-read workload sharing one scheduler.
 
     PYTHONPATH=src python examples/serve_demo.py
+
+(The LLM continuous-batching demo this file used to wrap lives at
+``python -m repro.launch.serve --arch gemma-2b``.)
 """
-import sys
+import numpy as np
 
-from repro.launch.serve import main
+from repro import mv4pg as pg
+from repro.data.synthetic import snb_like
 
-if __name__ == "__main__":
-    sys.argv = [sys.argv[0], "--arch", "gemma-2b", "--requests", "6",
-                "--slots", "3", "--max-new", "8"]
-    main()
+g, schema, ids = snb_like(seed=0, n_person=400, n_post=300, n_comment=2000)
+sess = pg.GraphSession(g, schema)
+friends = sess.create_view("""
+    CREATE VIEW FRIEND2 AS (
+        CONSTRUCT (a)-[r:FRIEND2]->(c)
+        MATCH (a:Person)-[:knows]->(b:Person)-[:knows]->(c:Person))
+    REFRESH DEFERRED""")
+print(f"view FRIEND2: {friends.stats().e_vl} edges "
+      f"({friends.policy.pretty()})")
+
+# train once, register the embedder as a serve operator
+cfg = pg.TrainConfig(epochs=1, batch_nodes=32, fanout=(4, 4), seed=0)
+params, report = pg.train_on_view(sess, friends, cfg)
+eng = sess.serve()
+eng.register_embedder(pg.ViewEmbedder(sess, friends, params, cfg))
+
+# a mixed workload: pattern reads + embedding reads + a write fence
+people = ids["persons"]
+q = "MATCH (a:Person)-[:FRIEND2]->(c:Person) RETURN a, c"
+reads = [eng.submit(q, sources=np.array([p])) for p in people[:8]]
+emb_before = eng.submit_embed("FRIEND2", people[:4])
+n1, n2 = sess.create_node("Person"), sess.create_node("Person")
+eng.submit_writes(pg.WriteBatch(
+    edge_creates=[(n1, int(people[0]), "knows"),
+                  (int(people[0]), n2, "knows")]))
+emb_after = eng.submit_embed("FRIEND2", [n1, n2])
+eng.run()
+
+print(f"pattern reads: {sum(t.result.num_pairs() for t in reads)} pairs "
+      f"across {len(reads)} tickets")
+b, a = emb_before.embed_result, emb_after.embed_result
+print(f"embedding reads: dim={b.embeddings.shape[1]}, "
+      f"version {b.version} -> {a.version} across the write fence")
+print(eng.stats.summary())
+print(f"embed_reads={eng.stats.embed_reads} "
+      f"embed_refreshes={eng.stats.embed_refreshes}")

@@ -6,19 +6,20 @@ from repro.core.graph import (
     node_pred_mask, set_edge_props, set_node_props,
 )
 from repro.core.pattern import (
-    Direction, NodePat, PathPattern, PropPred, Query, QueryFingerprint,
-    RelPat, ViewDef, normalize_preds, preds_imply,
+    Direction, FreshnessPolicy, NodePat, PathPattern, PropPred, Query,
+    QueryFingerprint, RelPat, ViewDef, normalize_preds, preds_imply,
 )
 from repro.core.parser import (
     canonicalize_query, parse_query, parse_view, query_fingerprint,
 )
 from repro.core.executor import (
-    ExecConfig, ExecEngine, Metrics, PathExecutor, ReachResult,
+    ExecConfig, ExecEngine, Metrics, PairRows, PathExecutor, ReachResult,
 )
 from repro.core.plan import CompiledPlan, QueryPlanner
 from repro.core.maintenance import ViewTemplates, MaintTemplate
 from repro.core.views import (
-    BatchResult, GraphSession, MaterializedView, ViewStats,
+    BatchResult, GraphSession, MaterializedView, ViewHandle, ViewStats,
+    ViewStatus,
 )
 from repro.core.optimizer import optimize_query
 
@@ -27,12 +28,15 @@ __all__ = [
     "PropertyGraph", "GraphBuilder", "LabelEpochs", "WriteBatch",
     "create_edge", "create_node", "delete_edge", "delete_node", "find_node",
     "edge_pred_mask", "node_pred_mask", "set_edge_props", "set_node_props",
-    "Direction", "NodePat", "PathPattern", "PropPred", "Query",
-    "QueryFingerprint", "RelPat", "ViewDef", "normalize_preds", "preds_imply",
+    "Direction", "FreshnessPolicy", "NodePat", "PathPattern", "PropPred",
+    "Query", "QueryFingerprint", "RelPat", "ViewDef", "normalize_preds",
+    "preds_imply",
     "canonicalize_query", "parse_query", "parse_view", "query_fingerprint",
-    "ExecConfig", "ExecEngine", "Metrics", "PathExecutor", "ReachResult",
+    "ExecConfig", "ExecEngine", "Metrics", "PairRows", "PathExecutor",
+    "ReachResult",
     "CompiledPlan", "QueryPlanner",
     "ViewTemplates", "MaintTemplate",
-    "BatchResult", "GraphSession", "MaterializedView", "ViewStats",
+    "BatchResult", "GraphSession", "MaterializedView", "ViewHandle",
+    "ViewStats", "ViewStatus",
     "optimize_query",
 ]

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, Iterable, Optional, Tuple
+from typing import Dict, Iterable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,22 @@ class Metrics:
         return Metrics(self.db_hits + other.db_hits, self.rows + other.rows)
 
 
+class PairRows(NamedTuple):
+    """Typed (src, dst, count) rows of a reachability result.
+
+    A ``NamedTuple`` so the historical 3-tuple unpacking of
+    :meth:`ReachResult.pairs` keeps working unchanged.
+    """
+
+    src: np.ndarray     # [P] source node ids
+    dst: np.ndarray     # [P] int32 destination node ids
+    count: np.ndarray   # [P] path counts (1s under set semantics)
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.src.shape[0])
+
+
 @dataclass
 class ReachResult:
     """Reachability of one query: per-source rows over all node columns."""
@@ -84,10 +100,11 @@ class ReachResult:
     counting: bool
     metrics: Metrics = field(default_factory=Metrics)
 
-    def pairs(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def pairs(self) -> PairRows:
         """(src, dst, count) for every reachable pair."""
         rows, cols = np.nonzero(self.reach)
-        return self.src_ids[rows], cols.astype(np.int32), self.reach[rows, cols]
+        return PairRows(self.src_ids[rows], cols.astype(np.int32),
+                        self.reach[rows, cols])
 
     def num_results(self) -> int:
         """Bag cardinality (sum of path counts) — what RETURN n,m yields."""

@@ -40,9 +40,10 @@ from repro.core.maintenance import (
     pending_affected_sources,
 )
 from repro.core.parser import parse_query, parse_view
-from repro.core.pattern import Query, ViewDef
+from repro.core.pattern import FreshnessPolicy, Query, ViewDef
 from repro.core.plan import QueryPlanner
 from repro.core.schema import GraphSchema
+from repro.utils.deprecation import warn_once
 
 
 @dataclass
@@ -97,6 +98,130 @@ class BatchResult:
     node_slots: np.ndarray   # arena slots of batch.node_creates
 
 
+@dataclass
+class ViewStatus:
+    """Read-only status snapshot returned by :meth:`ViewHandle.stats`.
+
+    Carries the Eq. 1-2 bookkeeping of :class:`ViewStats` plus the
+    freshness-subsystem state.  Callable returning itself, so both the
+    blessed ``handle.stats()`` and the historical attribute-style
+    ``handle.stats.e_vl`` read the same snapshot.
+    """
+
+    name: str
+    policy: "FreshnessPolicy"
+    stale: bool
+    pending_writes: int      # queued, undrained delta entries
+    drain_epoch: int
+    creation_seconds: float
+    n_sl: int
+    e_vl: int
+    init_db_hit: int
+    opt_rate: float
+
+    def db_hit_estimate(self) -> float:
+        return (self.n_sl + 2 * self.e_vl) * self.opt_rate          # Eq. 2
+
+    def opt_eff(self) -> float:
+        return self.db_hit_estimate() - (self.n_sl + 2 * self.e_vl)  # Eq. 1
+
+    def __call__(self) -> "ViewStatus":
+        return self
+
+
+class ViewHandle:
+    """The public face of a materialized view (DESIGN.md §14).
+
+    Returned by :meth:`GraphSession.create_view` / :meth:`GraphSession.view`.
+    Holds no state beyond (session, name): every access resolves through the
+    live catalog, so a handle observes drains/drops immediately and two
+    handles to one view never diverge.  Unknown attributes delegate to the
+    underlying :class:`MaterializedView`, which keeps pre-§14 call shapes
+    (``v.pair_slot``, ``v.label_id``, ``v.vdef`` ...) working.
+    """
+
+    __slots__ = ("_sess", "name")
+
+    def __init__(self, sess: "GraphSession", name: str):
+        object.__setattr__(self, "_sess", sess)
+        object.__setattr__(self, "name", name)
+
+    @property
+    def _view(self) -> MaterializedView:
+        v = self._sess.views.get(self.name)
+        if v is None:
+            raise ValueError(f"view {self.name!r} has been dropped")
+        return v
+
+    def __getattr__(self, attr: str):
+        return getattr(self._view, attr)
+
+    def __repr__(self) -> str:
+        v = self._sess.views.get(self.name)
+        if v is None:
+            return f"ViewHandle({self.name!r}, dropped)"
+        return (f"ViewHandle({self.name!r}, {v.vdef.refresh.pretty()}, "
+                f"e_vl={len(v.pair_slot)}"
+                f"{', stale' if v.is_stale else ''})")
+
+    # ------------------------------------------------------------- status
+
+    @property
+    def policy(self) -> "FreshnessPolicy":
+        """The view's declared refresh policy."""
+        return self._view.vdef.refresh
+
+    @property
+    def is_stale(self) -> bool:
+        return self._view.is_stale
+
+    @property
+    def stats(self) -> ViewStatus:
+        """Status snapshot (callable: ``handle.stats()`` == ``handle.stats``)."""
+        v = self._view
+        return ViewStatus(
+            name=self.name, policy=v.vdef.refresh, stale=v.is_stale,
+            pending_writes=v.pending.writes, drain_epoch=v.drain_epoch,
+            creation_seconds=v.creation_seconds, n_sl=v.stats.n_sl,
+            e_vl=v.stats.e_vl, init_db_hit=v.stats.init_db_hit,
+            opt_rate=v.stats.opt_rate)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def drain(self) -> bool:
+        """Replay queued maintenance deltas now; True if any were queued."""
+        return self._sess.refresh(self.name)
+
+    def drop(self) -> None:
+        """Drop the view and delete its arena edges (handle goes dead)."""
+        self._sess.drop_view(self.name)
+
+    # --------------------------------------------------- training substrate
+
+    def subgraph(self, extra_labels=(), weighted: bool = False):
+        """The view's maintained edges as an incrementally-refreshed
+        :class:`~repro.graphops.view_subgraph.ViewSubgraph` (cached on the
+        session per (view, extra_labels, weighted) shape)."""
+        from repro.graphops.view_subgraph import ViewSubgraph
+        self._view  # raise early if dropped
+        key = (self.name, tuple(extra_labels), weighted)
+        sub = self._sess._subgraphs.get(key)
+        if sub is None:
+            sub = ViewSubgraph(self._sess, self.name,
+                               extra_labels=extra_labels, weighted=weighted)
+            self._sess._subgraphs[key] = sub
+        return sub
+
+    def sampler(self, **kw):
+        """A :class:`~repro.graphops.sampler.NeighborSampler` over the
+        maintained subgraph CSR."""
+        return self.subgraph(**kw).sampler()
+
+    def to_graphbatch(self, **kw):
+        """The maintained subgraph as one padded GraphBatch."""
+        return self.subgraph().to_graphbatch(**kw)
+
+
 class GraphSession:
     """Owns the graph + schema + view catalog; the workload entry point.
 
@@ -126,6 +251,9 @@ class GraphSession:
         # so they can evict memo entries keyed on refreshed view labels
         self.write_epoch = 0
         self._serve_engines: "weakref.WeakSet" = weakref.WeakSet()
+        # view-fed training subgraphs (DESIGN.md §14), keyed on
+        # (view, extra_labels, weighted); evicted when the view drops
+        self._subgraphs: Dict[tuple, object] = {}
         self._delta_cfg = ExecConfig(
             backend="segment", src_block=8,
             max_closure_iters=self.cfg.max_closure_iters,
@@ -212,8 +340,8 @@ class GraphSession:
 
     def create_view(self, stmt: Union[str, ViewDef], *,
                     fused: bool = True,
-                    precomputed=None) -> MaterializedView:
-        """Materialize a view.
+                    precomputed=None) -> ViewHandle:
+        """Materialize a view; returns its :class:`ViewHandle`.
 
         ``precomputed`` accepts a selection
         :class:`~repro.core.selection.Measurement` (anything with ``result``
@@ -274,7 +402,7 @@ class GraphSession:
         )
         self.views[vdef.name] = view
         self.view_set_generation += 1
-        return view
+        return ViewHandle(self, vdef.name)
 
     def drop_view(self, name: str) -> None:
         """Drop a view and delete its arena edges.  The view's edge label
@@ -293,6 +421,8 @@ class GraphSession:
                             len(view.pair_slot))
         if slots.size:
             self._set_graph(G.delete_edges(self.g, slots), {view.label_id})
+        for key in [k for k in self._subgraphs if k[0] == name]:
+            del self._subgraphs[key]
         for eng in list(self._serve_engines):
             eng._on_view_dropped(view)
 
@@ -1000,32 +1130,59 @@ class GraphSession:
                                  splice=use_views):
                 self._drain_view(view, Metrics())
 
-    def drain_view(self, name: str) -> bool:
-        """Drain one view's queued deltas now.  Returns True if any were
-        queued.  No-op (False) for an already-fresh view."""
+    def view(self, name: str) -> ViewHandle:
+        """The :class:`ViewHandle` for an existing view."""
         if name not in self.views:
-            raise ValueError(f"view {name!r} does not exist")
+            raise ValueError(
+                f"view {name!r} does not exist; existing views: "
+                f"{sorted(self.views) or '(none)'}")
+        return ViewHandle(self, name)
+
+    def catalog(self) -> Tuple[ViewHandle, ...]:
+        """Handles for every view, in creation order."""
+        return tuple(ViewHandle(self, n) for n in self.views)
+
+    def refresh(self, name: Optional[str] = None) -> bool:
+        """Drain queued maintenance deltas now — one view by ``name``, or
+        every view when ``name`` is None (serve fences and tests use the
+        latter as the global synchronization point).  Returns True if any
+        deltas were replayed.  Sharded sessions visit views grouped by their
+        label's owner shard, so a full pass routes maintenance work
+        owner-by-owner across the mesh (see maintenance.owner_order)."""
         metrics = Metrics()
-        out = self._drain_view(self.views[name], metrics)
+        if name is not None:
+            if name not in self.views:
+                raise ValueError(f"view {name!r} does not exist")
+            views = [self.views[name]]
+        else:
+            views = list(self.views.values())
+            if self.cfg.data_shards > 1:
+                from repro.core.maintenance import owner_order
+                views = owner_order(views, self.engine.n_shards)
+        out = False
+        for view in views:
+            out = self._drain_view(view, metrics) or out
         self.last_maintenance_metrics = metrics
         return out
 
+    # -------------------------------------------- pre-§14 drain API (shims)
+
+    def drain_view(self, name: str) -> bool:
+        """Deprecated: use :meth:`refresh` (or ``ViewHandle.drain``)."""
+        warn_once("GraphSession.drain_view(name) is deprecated; use "
+                  "session.refresh(name) or session.view(name).drain()")
+        return self.refresh(name)
+
     def drain_all(self) -> None:
-        """Drain every stale view (serve fences and tests use this as the
-        global synchronization point).  Sharded sessions visit views grouped
-        by their label's owner shard, so the pass routes maintenance work
-        owner-by-owner across the mesh (see maintenance.owner_order)."""
-        metrics = Metrics()
-        views = list(self.views.values())
-        if self.cfg.data_shards > 1:
-            from repro.core.maintenance import owner_order
-            views = owner_order(views, self.engine.n_shards)
-        for view in views:
-            self._drain_view(view, metrics)
-        self.last_maintenance_metrics = metrics
+        """Deprecated: use :meth:`refresh` with no arguments."""
+        warn_once("GraphSession.drain_all() is deprecated; use "
+                  "session.refresh()")
+        self.refresh()
 
     def stale_views(self) -> List[str]:
-        """Names of views whose materialized edges lag the base graph."""
+        """Deprecated: filter :meth:`catalog` on ``handle.is_stale``."""
+        warn_once("GraphSession.stale_views() is deprecated; use "
+                  "[h.name for h in session.catalog() if h.is_stale]")
         return [v.name for v in self.views.values() if v.is_stale]
 
     # ------------------------------------------------------- view selection

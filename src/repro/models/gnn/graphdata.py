@@ -32,6 +32,7 @@ class GraphBatch:
     graph_id: jax.Array           # [N] int32 (0 for single-graph batches)
     positions: Optional[jax.Array] = None   # [N, 3] for geometric models
     labels: Optional[jax.Array] = None      # [N] or [G]
+    edge_weight: Optional[jax.Array] = None  # [E] float32 (view path counts)
 
     @property
     def n_nodes(self) -> int:
@@ -47,7 +48,8 @@ class GraphBatch:
 
 
 def pad_graph(node_feat, edge_src, edge_dst, *, positions=None, labels=None,
-              graph_id=None, node_pad=128, edge_pad=128) -> GraphBatch:
+              graph_id=None, edge_weight=None, node_pad=128,
+              edge_pad=128) -> GraphBatch:
     """Host-side padding to TPU-friendly multiples."""
     n = node_feat.shape[0]
     e = edge_src.shape[0]
@@ -71,6 +73,8 @@ def pad_graph(node_feat, edge_src, edge_dst, *, positions=None, labels=None,
         positions=None if positions is None else pad(
             np.asarray(positions, np.float32), N),
         labels=None if labels is None else pad(np.asarray(labels), N),
+        edge_weight=None if edge_weight is None else pad(
+            np.asarray(edge_weight, np.float32), E),
     )
 
 

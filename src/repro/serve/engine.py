@@ -102,6 +102,16 @@ class ServeConfig:
 
 
 @dataclass
+class EmbedResult:
+    """Typed answer of an embedding read (DESIGN.md §14)."""
+
+    node_ids: np.ndarray       # [n] the requested ids, as submitted
+    embeddings: np.ndarray     # [n, dim] f32; zero rows for off-view ids
+    view: str                  # the backing view's name
+    version: int               # subgraph structure version answered from
+
+
+@dataclass
 class ServeTicket:
     """One submitted request; filled in when the scheduler answers it.
 
@@ -110,13 +120,16 @@ class ServeTicket:
     :meth:`ServeEngine.drain`)."""
 
     uid: int
-    kind: str                                  # "read" | "write"
+    kind: str                                  # "read" | "write" | "embed"
     query: Optional[Query] = None
     use_views: Optional[bool] = None           # None: session auto_optimize
     sources: Optional[np.ndarray] = None       # explicit source binding
     batch: Optional[G.WriteBatch] = None       # write fences only
     result: Optional[ReachResult] = None
     write_result: Optional["BatchResult"] = None
+    embed: Optional[str] = None                # embedder name (embed reads)
+    node_ids: Optional[np.ndarray] = None      # embed reads only
+    embed_result: Optional[EmbedResult] = None
     window: int = -1                           # epoch the ticket ran in
     window_seq: int = -1                       # executed-window index
     admit_by: int = 0                          # admission deadline (window_seq)
@@ -126,12 +139,17 @@ class ServeTicket:
 
     @property
     def done(self) -> bool:
-        return self.result is not None or self.write_result is not None
+        return (self.result is not None or self.write_result is not None
+                or self.embed_result is not None)
 
     def __await__(self):
         while not self.done:
             yield
-        return self.result if self.kind == "read" else self.write_result
+        if self.kind == "read":
+            return self.result
+        if self.kind == "embed":
+            return self.embed_result
+        return self.write_result
 
 
 @dataclass(frozen=True)
@@ -205,6 +223,8 @@ class ServeStats:
     drains: int = 0            # read-triggered targeted view drains
     auto_creates: int = 0      # views created by the online selector
     auto_drops: int = 0        # views dropped by the online selector
+    embed_reads: int = 0       # embedding lookups answered
+    embed_refreshes: int = 0   # embedder table recomputes (view changed)
 
     @property
     def mean_group_size(self) -> float:
@@ -312,6 +332,9 @@ class ServeEngine:
         # selector only mutates the catalog inside step() between windows
         self.selector = (OnlineSelector(session, self.cfg.online_selection)
                          if self.cfg.online_selection is not None else None)
+        # embedding-read operators (DESIGN.md §14): name -> duck-typed
+        # embedder (.view_name, .refresh() -> bool, .lookup(ids), .version)
+        self._embedders: Dict[str, object] = {}
         # the session notifies us at drain/drop points (targeted memo
         # eviction for content that changes outside any fence application)
         session._serve_engines.add(self)
@@ -350,6 +373,43 @@ class ServeEngine:
                         scope=self._fence_scope(batch))
         self._pending_dead.update(int(e) for e in batch.edge_deletes)
         self._pending_dead_nodes.update(int(n) for n in batch.node_deletes)
+        self._queue.append(t)
+        return t
+
+    def register_embedder(self, embedder, name: Optional[str] = None) -> str:
+        """Register an embedding-read operator (e.g. a
+        :class:`~repro.launch.gnn.ViewEmbedder`).  Duck-typed: anything with
+        ``view_name``, ``refresh() -> bool``, ``lookup(ids) -> [n, d]`` and
+        ``version`` works; the engine never imports the model stack.
+        Returns the name :meth:`submit_embed` addresses it by (defaults to
+        the backing view's name)."""
+        name = name or embedder.view_name
+        if embedder.view_name not in self.sess.views:
+            raise ValueError(
+                f"embedder {name!r} backs view {embedder.view_name!r}, "
+                f"which does not exist in this session")
+        self._embedders[name] = embedder
+        return name
+
+    def submit_embed(self, name: str, node_ids,
+                     deadline: Optional[int] = None) -> ServeTicket:
+        """Enqueue an embedding lookup against a registered embedder.
+
+        Scheduled like any read: the ticket orders behind every queued
+        write fence whose scope can touch the backing view (its label, a
+        global fence, or a deferred-maintenance impact), and hoists ahead
+        of provably disjoint fences.  The embedder refreshes against the
+        view's maintained subgraph before answering, so a lookup after a
+        conflicting fence observes the post-write embeddings."""
+        if name not in self._embedders:
+            raise ValueError(
+                f"no embedder {name!r} registered; have "
+                f"{sorted(self._embedders) or '(none)'}")
+        t = ServeTicket(
+            uid=self._next_uid(), kind="embed", embed=name,
+            node_ids=np.asarray(node_ids, np.int64),
+            admit_by=self._window_seq + (self.cfg.patience
+                                         if deadline is None else deadline))
         self._queue.append(t)
         return t
 
@@ -516,12 +576,18 @@ class ServeEngine:
         blocked_global = False
         window: List[Tuple[ServeTicket, CompiledPlan, tuple]] = []
         resolved: List[Tuple[ServeTicket, RowResult, str]] = []
+        embeds: List[ServeTicket] = []
         for t in self._queue:
             if t.kind == "write":
                 scopes.append(t.scope)
                 blocked_global = blocked_global or t.scope.global_
                 continue
             if blocked_global:
+                continue
+            if t.kind == "embed":
+                if not self._embed_blocked(t, scopes):
+                    t.hoisted = bool(scopes)
+                    embeds.append(t)
                 continue
             plan, base = self._plan_for(t)
             if any(self._conflicts(plan, t.sources is None, sc)
@@ -535,7 +601,7 @@ class ServeEngine:
                 # views this plan reads, then replan (the drain bumps their
                 # label epochs, invalidating the plan just computed)
                 for view in need_drain:
-                    self.sess.drain_view(view.name)
+                    self.sess.refresh(view.name)
                     self.stats.drains += 1
                 plan, base = self._plan_for(t)
             t.hoisted = bool(scopes)
@@ -544,7 +610,44 @@ class ServeEngine:
                 resolved.append((t, ans[0], ans[1]))
                 continue
             window.append((t, plan, base))
-        return window, resolved
+        return window, resolved, embeds
+
+    def _embed_blocked(self, t: ServeTicket,
+                       scopes: List[FenceScope]) -> bool:
+        """May a queued fence ahead change what this embedding read returns?
+        Conservative per-view scoping: the fence names the backing view's
+        materialized label (exact maintenance rewrites it), or names the
+        view in ``deferred_views`` (applying it queues deltas the embedder's
+        refresh would then observe)."""
+        emb = self._embedders.get(t.embed)
+        view = self.sess.views.get(emb.view_name) if emb else None
+        if view is None:
+            return False               # dropped view: fail fast at execution
+        return any(sc.global_ or view.label_id in sc.edge_labels
+                   or view.name in sc.deferred_views for sc in scopes)
+
+    def _run_embeds(self, embeds: List[ServeTicket]) -> None:
+        """Answer eligible embedding reads, one table refresh per embedder.
+
+        Runs *instead of* a query window within this step: a refresh may
+        drain the backing view (bumping its label epoch), so read plans are
+        recomputed by the next ``_collect`` rather than executed stale."""
+        refreshed: Dict[str, bool] = {}
+        for t in embeds:
+            emb = self._embedders[t.embed]
+            if t.embed not in refreshed:
+                refreshed[t.embed] = emb.refresh()
+                if refreshed[t.embed]:
+                    self.stats.embed_refreshes += 1
+            t.embed_result = EmbedResult(
+                node_ids=t.node_ids, embeddings=emb.lookup(t.node_ids),
+                view=emb.view_name, version=emb.version)
+            t.window = self.epoch
+            t.window_seq = self._window_seq
+            t.via = "embed"
+            self.stats.embed_reads += 1
+            if t.hoisted:
+                self.stats.hoisted += 1
 
     def _freshness_gate(self, plan: CompiledPlan, scopes: List[FenceScope]):
         """Classify a read against the stale views its plan touches.
@@ -588,10 +691,12 @@ class ServeEngine:
         Returns False when the queue is drained."""
         if not self._queue:
             return False
-        window, resolved = self._collect()
+        window, resolved, embeds = self._collect()
         for t, rr, via in resolved:
             self._finish_read(t, rr, via)
-        if window:
+        if embeds:
+            self._run_embeds(embeds)
+        elif window:
             window.sort(key=lambda e: (e[0].admit_by, e[0].uid))
             selected = window[:self.window_limit]
             self._run_window(selected)
@@ -638,7 +743,11 @@ class ServeEngine:
             if not self.step():
                 raise RuntimeError(
                     f"ticket {t.uid} cannot complete: queue drained")
-        return t.result if t.kind == "read" else t.write_result
+        if t.kind == "read":
+            return t.result
+        if t.kind == "embed":
+            return t.embed_result
+        return t.write_result
 
     # -------------------------------------------------------------- window
 

@@ -1,0 +1,375 @@
+"""Views as the training substrate (DESIGN.md §14).
+
+Differential guarantee: a view-fed ``GraphBatch`` must byte-equal one built
+by re-extracting the subgraph from scratch (a no-views twin session running
+the view's MATCH), across all three freshness policies and mid-training
+``apply_writes`` mutations — with bounded-stale views matching the
+*pre-write* twin while within bound.  Plus: incremental label-epoch-keyed
+refresh, vectorized sampler determinism/validity, SAGE block_spmm parity,
+the serve engine's embedding-read op under write fences, and the redesigned
+ViewHandle/facade/deprecation surface.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GraphBuilder, GraphSchema, GraphSession, ViewHandle, WriteBatch,
+)
+from repro.graphops.sampler import NeighborSampler
+from repro.graphops.view_subgraph import build_graphbatch
+
+V_DDL = ("CREATE VIEW V AS (CONSTRUCT (s)-[r:V]->(d) "
+         "MATCH (s:A)-[:x]->(m:B)-[:y]->(d:C))")
+Q_MATCH = "MATCH (s:A)-[:x]->(m:B)-[:y]->(d:C)"
+
+
+def _graph(seed=0, n=24, extra=True):
+    rng = np.random.default_rng(seed)
+    schema = GraphSchema()
+    b = GraphBuilder(schema)
+    A = [b.add_node("A") for _ in range(n)]
+    B = [b.add_node("B") for _ in range(n)]
+    C = [b.add_node("C") for _ in range(n)]
+    for i in range(n):
+        for j in rng.choice(n, 2, replace=False):
+            b.add_edge(A[i], B[int(j)], "x")
+        b.add_edge(B[i], C[(i * 5 + 1) % n], "y")
+        if extra:
+            b.add_edge(C[i], A[(i + 3) % n], "z")   # label no view reads
+    return b, schema, A, B, C
+
+
+def _sessions(refresh="", seed=0):
+    """(view session with V under ``refresh``, twin session with no views)."""
+    b, schema, A, B, C = _graph(seed)
+    g = b.finalize(edge_cap=4096)
+    sess = GraphSession(g, schema)
+    sess.create_view(V_DDL + refresh)
+    b2, schema2, *_ = _graph(seed)
+    twin = GraphSession(b2.finalize(edge_cap=4096), schema2)
+    return sess, twin, (A, B, C)
+
+
+def _twin_batch(twin):
+    """Re-extract the subgraph from scratch: run the view's MATCH on the
+    no-views twin and build the batch through the same canonical builder."""
+    rows = twin.query(Q_MATCH, use_views=False).pairs()
+    return build_graphbatch(
+        rows.src.astype(np.int64), rows.dst.astype(np.int64),
+        node_label=np.asarray(twin.g.node_label),
+        num_nodes=int(twin.g.node_cap), weight=rows.count.astype(np.int64))
+
+
+def _batches_equal(a, b):
+    for f in ("node_feat", "edge_src", "edge_dst", "edge_mask", "node_mask",
+              "graph_id", "labels", "edge_weight"):
+        va, vb = getattr(a, f), getattr(b, f)
+        if va is None or vb is None:
+            assert va is vb, f
+            continue
+        assert np.array_equal(np.asarray(va), np.asarray(vb)), f
+    return True
+
+
+def _writes(A, B, k=0):
+    return WriteBatch(edge_creates=[(A[k], B[(k + 7) % len(B)], "x"),
+                                    (A[(k + 1) % len(A)], B[k], "x")])
+
+
+# ---------------------------------------------------------------------------
+# differential: view-fed batch == from-scratch twin, all three policies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("refresh", ["", " REFRESH DEFERRED",
+                                     " REFRESH STALENESS 100"])
+def test_view_batch_matches_scratch_initial(refresh):
+    sess, twin, _ = _sessions(refresh)
+    vb = sess.view("V").subgraph(weighted=True).to_graphbatch()
+    _batches_equal(vb, _twin_batch(twin))
+
+
+@pytest.mark.parametrize("refresh", ["", " REFRESH DEFERRED"])
+def test_view_batch_tracks_writes(refresh):
+    """Mid-training mutations: after every write batch the refreshed
+    view-fed batch equals the twin's re-extraction (exact maintains
+    synchronously; deferred drains at the refresh read)."""
+    sess, twin, (A, B, C) = _sessions(refresh)
+    sub = sess.view("V").subgraph(weighted=True)
+    for k in range(3):
+        wb = _writes(A, B, k)
+        sess.apply_writes(wb)
+        twin.apply_writes(_writes(A, B, k))
+        sub.refresh()
+        _batches_equal(sub.to_graphbatch(), _twin_batch(twin))
+    # deletes too (delete one x edge present in both sessions)
+    del_slot = 3 * 0 + 0   # builder edge order is identical across twins
+    for s in (sess, twin):
+        s.apply_writes(WriteBatch(edge_deletes=[del_slot]))
+    sub.refresh()
+    _batches_equal(sub.to_graphbatch(), _twin_batch(twin))
+    assert sess.check_consistency("V")
+
+
+def test_bounded_stale_batch_is_prewrite_until_drain():
+    sess, twin, (A, B, C) = _sessions(" REFRESH STALENESS 100")
+    sub = sess.view("V").subgraph(weighted=True)
+    before = sub.to_graphbatch()
+    sess.apply_writes(_writes(A, B))
+    twin.apply_writes(_writes(A, B))
+    # within bound: the policy-respecting refresh answers the stale snapshot
+    assert not sub.refresh()
+    assert sess.view("V").is_stale
+    _batches_equal(sub.to_graphbatch(), before)
+    # forced drain: now equals the post-write twin
+    assert sub.refresh(drain=True)
+    assert not sess.view("V").is_stale
+    _batches_equal(sub.to_graphbatch(), _twin_batch(twin))
+
+
+def test_incremental_refresh_skips_untouched_labels():
+    sess, _, (A, B, C) = _sessions(" REFRESH DEFERRED")
+    sub = sess.view("V").subgraph()
+    v0, r0 = sub.version, sub.slice_rebuilds["V"]
+    # a write to label z (no view reads it) must not re-extract or rebuild
+    sess.apply_writes(WriteBatch(edge_creates=[(C[0], A[0], "z")]))
+    assert not sub.refresh()
+    assert sub.version == v0 and sub.slice_rebuilds["V"] == r0
+    # a write the view does read re-extracts exactly once
+    sess.apply_writes(_writes(A, B))
+    assert sub.refresh()
+    assert sub.version == v0 + 1 and sub.slice_rebuilds["V"] == r0 + 1
+
+
+def test_subgraph_cache_and_drop_eviction():
+    sess, _, _ = _sessions()
+    h = sess.view("V")
+    assert h.subgraph() is h.subgraph()
+    h.drop()
+    with pytest.raises(ValueError):
+        h.subgraph()
+
+
+# ---------------------------------------------------------------------------
+# vectorized sampler
+# ---------------------------------------------------------------------------
+
+def _random_csr(seed=0, n=500, e=4000):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    return src, dst, n
+
+
+def test_sampler_deterministic_and_valid():
+    src, dst, n = _random_csr()
+    smp = NeighborSampler(src, dst, n)
+    seeds = np.unique(np.random.default_rng(1).integers(0, n, 40))
+    a = smp.sample(seeds, [4, 4], seed=7)
+    b = smp.sample(seeds, [4, 4], seed=7)
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+    c = smp.sample(seeds, [4, 4], seed=8)
+    assert not all(np.array_equal(x, y) for x, y in zip(a, c))
+    # structural validity: every sampled edge is a real incoming edge
+    real = set(zip(dst.tolist(), src.tolist()))   # (node, in-neighbor)
+    ids = a.node_ids
+    for u, v in zip(a.edge_src, a.edge_dst):
+        assert (int(ids[v]), int(ids[u])) in real
+    # seeds first, no duplicates, legacy 4-tuple unpacking intact
+    assert np.array_equal(ids[: seeds.size], seeds)
+    assert np.unique(ids).size == ids.size
+    node_ids, es, ed, pos = a
+    assert node_ids is a.node_ids and pos.size == seeds.size
+
+
+def test_sampler_layer_counts_match_reference():
+    """Per-seed first-layer draw count == min(fanout, in-degree), and the
+    reference loop twin visits the same per-seed neighborhood sizes."""
+    src, dst, n = _random_csr(seed=3)
+    smp = NeighborSampler(src, dst, n)
+    seeds = np.unique(np.random.default_rng(2).integers(0, n, 30))
+    f = 3
+    sg = smp.sample(seeds, [f], seed=5)
+    deg = smp.indptr[seeds + 1] - smp.indptr[seeds]
+    counts = np.bincount(sg.edge_dst, minlength=seeds.size)[: seeds.size]
+    assert np.array_equal(counts, np.minimum(deg, f))
+    ref = smp._sample_loop(seeds, [f], seed=5)
+    ref_counts = np.bincount(ref[2], minlength=seeds.size)[: seeds.size]
+    assert np.array_equal(counts, ref_counts)
+
+
+def test_sampler_from_csr_matches_constructor():
+    src, dst, n = _random_csr(seed=4)
+    a = NeighborSampler(src, dst, n)
+    b = NeighborSampler.from_csr(a.indptr, a.nbrs, n)
+    seeds = np.arange(0, n, 37)
+    for x, y in zip(a.sample(seeds, [3, 2], seed=1),
+                    b.sample(seeds, [3, 2], seed=1)):
+        assert np.array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# SAGE aggregation: block_spmm path == segment_sum path
+# ---------------------------------------------------------------------------
+
+def test_sage_block_spmm_parity():
+    import jax
+
+    from repro.models.gnn import sage
+    from repro.models.gnn.graphdata import pad_graph
+
+    rng = np.random.default_rng(0)
+    n, e = 100, 300
+    batch = pad_graph(
+        rng.normal(size=(n, 11)).astype(np.float32),
+        rng.integers(0, n, e).astype(np.int32),
+        rng.integers(0, n, e).astype(np.int32),
+        labels=rng.integers(0, 8, n).astype(np.int32),
+        edge_weight=rng.integers(1, 4, e).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    seg = sage.SAGEConfig(use_block_spmm=False)
+    pal = sage.SAGEConfig(use_block_spmm=True, interpret=True)
+    params = sage.init_params(key, seg)
+    out_seg = np.asarray(sage.forward(params, seg, batch))
+    out_pal = np.asarray(sage.forward(params, pal, batch))
+    np.testing.assert_allclose(out_seg, out_pal, rtol=2e-4, atol=2e-4)
+
+
+def test_train_on_view_smoke_and_maintained_refresh():
+    from repro.launch.gnn import TrainConfig, embed_on_view, train_on_view
+
+    sess, _, (A, B, C) = _sessions(" REFRESH DEFERRED")
+    cfg = TrainConfig(epochs=2, batch_nodes=8, fanout=(3, 3), seed=0)
+    params, rpt = train_on_view(sess, "V", cfg)
+    assert rpt.epochs == 2 and rpt.steps > 0
+    assert all(np.isfinite(x) for x in rpt.losses)
+    # mid-training-style mutation: the next epoch's refresh drains it
+    sess.apply_writes(_writes(A, B))
+    _, rpt2 = train_on_view(sess, "V", cfg)
+    assert rpt2.refreshes >= 1          # the write reached the sampling CSR
+    emb = embed_on_view(sess, "V", params, cfg)
+    assert emb.shape[1] == cfg.d_hidden and np.isfinite(emb).all()
+
+
+# ---------------------------------------------------------------------------
+# serve engine: embedding reads under write fences
+# ---------------------------------------------------------------------------
+
+def _served(refresh=" REFRESH DEFERRED"):
+    from repro.launch.gnn import TrainConfig, train_on_view
+
+    sess, _, (A, B, C) = _sessions(refresh)
+    cfg = TrainConfig(epochs=1, batch_nodes=8, fanout=(3, 3), seed=0)
+    params, _ = train_on_view(sess, "V", cfg)
+    return sess, params, cfg, (A, B, C)
+
+
+def test_serve_embed_fenced_by_view_writes():
+    from repro.launch.gnn import ViewEmbedder, embed_on_view
+
+    sess, params, cfg, (A, B, C) = _served()
+    ids = sess.view("V").subgraph().nodes()[:6]
+    pre_direct = embed_on_view(sess, "V", params, cfg, node_ids=ids)
+
+    eng = sess.serve()
+    eng.register_embedder(ViewEmbedder(sess, "V", params, cfg))
+    t_pre = eng.submit_embed("V", ids)
+    eng.submit_writes(_writes(A, B))       # touches the view's x label
+    t_post = eng.submit_embed("V", ids)
+    eng.run()
+    # pre-fence ticket answered from the pre-write subgraph
+    np.testing.assert_allclose(t_pre.embed_result.embeddings, pre_direct,
+                               rtol=1e-5, atol=1e-6)
+    # post-fence ticket ordered behind the fence and saw the drained view
+    assert t_post.embed_result.version > t_pre.embed_result.version
+    post_direct = embed_on_view(sess, "V", params, cfg, node_ids=ids)
+    np.testing.assert_allclose(t_post.embed_result.embeddings, post_direct,
+                               rtol=1e-5, atol=1e-6)
+    assert eng.stats.embed_reads == 2 and eng.stats.embed_refreshes == 2
+    assert t_pre.kind == "embed" and eng.result(t_pre) is t_pre.embed_result
+
+
+def test_serve_embed_hoists_past_disjoint_fence():
+    from repro.launch.gnn import ViewEmbedder
+
+    sess, params, cfg, (A, B, C) = _served()
+    eng = sess.serve()
+    eng.register_embedder(ViewEmbedder(sess, "V", params, cfg))
+    ids = sess.view("V").subgraph().nodes()[:4]
+    # fence on label z: no view reads it, so the embed behind it hoists
+    eng.submit_writes(WriteBatch(edge_creates=[(C[0], A[1], "z")]))
+    t = eng.submit_embed("V", ids)
+    eng.step()                             # one step: embeds run first
+    assert t.done and t.hoisted
+    assert eng.stats.hoisted >= 1
+
+
+def test_serve_embed_validation():
+    from repro.launch.gnn import ViewEmbedder
+
+    sess, params, cfg, _ = _served()
+    eng = sess.serve()
+    with pytest.raises(ValueError):
+        eng.submit_embed("nope", [1, 2])
+    emb = ViewEmbedder(sess, "V", params, cfg)
+    assert eng.register_embedder(emb) == "V"
+    sess.drop_view("V")
+    with pytest.raises(ValueError):
+        eng.register_embedder(ViewEmbedder(sess, "V", params, cfg))
+
+
+# ---------------------------------------------------------------------------
+# redesigned public surface
+# ---------------------------------------------------------------------------
+
+def test_view_handle_surface_and_delegation():
+    sess, _, _ = _sessions(" REFRESH DEFERRED")
+    h = sess.create_view(
+        "CREATE VIEW W AS (CONSTRUCT (s)-[r:W]->(d) "
+        "MATCH (s:B)-[:y]->(d:C))")
+    assert isinstance(h, ViewHandle) and h.name == "W"
+    st = h.stats()
+    assert st is h.stats() or st.e_vl == h.stats.e_vl   # callable + attr
+    assert st.e_vl == len(h.pair_slot)                  # legacy delegation
+    assert h.policy.is_exact and not h.is_stale
+    assert {x.name for x in sess.catalog()} == {"V", "W"}
+    assert sess.view("W").drain() is False              # fresh: no-op
+    h.drop()
+    with pytest.raises(ValueError):
+        _ = h.stats
+    with pytest.raises(ValueError):
+        sess.view("W")
+
+
+def test_deprecated_shims_warn_once_per_call_site():
+    sess, _, _ = _sessions()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for _ in range(4):
+            sess.stale_views()                          # one call site
+        sess.drain_all()
+        sess.drain_view("V")
+    msgs = [str(x.message) for x in w
+            if issubclass(x.category, DeprecationWarning)]
+    assert len(msgs) == 3
+    assert any("session.refresh(name)" in m for m in msgs)
+    # shims stay functionally intact
+    assert sess.stale_views() == []
+
+
+def test_facade_exports():
+    from repro import mv4pg
+
+    for name in mv4pg.__all__:
+        assert getattr(mv4pg, name) is not None
+    assert mv4pg.GraphSession.__module__ == "repro.core.views"
+
+
+def test_pairs_rows_typed():
+    sess, _, _ = _sessions()
+    rows = sess.query(Q_MATCH).pairs()
+    assert type(rows).__name__ == "PairRows"
+    s, d, c = rows                                      # legacy unpacking
+    assert rows.n_pairs == s.shape[0] == d.shape[0] == c.shape[0]
